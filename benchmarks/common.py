@@ -1,0 +1,23 @@
+"""Benchmark utilities: robust timing of jitted callables."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call (post-compilation)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

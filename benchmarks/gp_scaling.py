@@ -1,0 +1,44 @@
+"""Paper Fig 1a: average time per inference iteration vs dataset size N.
+
+One iteration = value+grad of the Bayesian GP-LVM bound (the paper's
+optimizer step cost is dominated by it). Setup mirrors §4: synthetic data,
+Q=1, D=3, M=100 inducing points. We report jnp-backend times on this CPU
+(the Pallas TPU kernels run in interpret mode here — their perf story is the
+roofline, not CPU wall-time) and verify the paper's linearity-in-N claim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.core import gplvm
+from repro.data.synthetic import gplvm_synthetic
+
+SIZES = (1024, 2048, 4096, 8192, 16384)
+M = 100
+
+
+def run(sizes=SIZES) -> list[str]:
+    out = []
+    key = jax.random.PRNGKey(0)
+    times = {}
+    for N in sizes:
+        _, Y = gplvm_synthetic(key, N=N, D=3, Q=1)
+        Y = Y.astype(jnp.float32)
+        params = gplvm.init_params(key, np.asarray(Y), Q=1, M=M)
+        vg = jax.jit(jax.value_and_grad(lambda p: gplvm.loss(p, Y)))
+        t = time_call(vg, params, warmup=1, iters=3)
+        times[N] = t
+        out.append(row(f"gp_scaling_N{N}", t, f"per_point_us={t/N*1e6:.3f}"))
+    # linearity check (paper: cost scales linearly with N)
+    r = times[sizes[-1]] / times[sizes[0]]
+    ideal = sizes[-1] / sizes[0]
+    out.append(row("gp_scaling_linearity", 0.0,
+                   f"t(N_max)/t(N_min)={r:.2f}_vs_ideal={ideal:.1f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,45 @@
+"""Paper Fig 1b: fraction of iteration time spent in the INDISTRIBUTABLE
+computation — the O(M^3) bound epilogue that runs replicated after the psum —
+versus the distributable per-datapoint statistics.
+
+The paper's claim: this fraction is small and shrinks with N, so more
+machines keep helping. We time the two phases separately (both jitted).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.core import gplvm, psi_stats
+from repro.data.synthetic import gplvm_synthetic
+
+SIZES = (1024, 4096, 16384)
+M = 100
+
+
+def run(sizes=SIZES) -> list[str]:
+    out = []
+    key = jax.random.PRNGKey(0)
+    for N in sizes:
+        _, Y = gplvm_synthetic(key, N=N, D=3, Q=1)
+        Y = Y.astype(jnp.float32)
+        params = gplvm.init_params(key, np.asarray(Y), Q=1, M=M)
+
+        stats_fn = jax.jit(lambda p: gplvm.local_stats(p, Y))
+        stats = stats_fn(params)
+        epilogue = jax.jit(
+            lambda p, s: gplvm.bound_from_stats(
+                p, s, gplvm.kl_qp(p["q_mu"], p["q_logS"]), Y.shape[1]))
+
+        t_stats = time_call(stats_fn, params, warmup=1, iters=3)
+        t_epi = time_call(epilogue, params, stats, warmup=1, iters=3)
+        frac = t_epi / (t_epi + t_stats)
+        out.append(row(f"indistributable_N{N}", t_epi,
+                       f"stats_us={t_stats*1e6:.0f},fraction={frac*100:.1f}%"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

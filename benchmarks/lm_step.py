@@ -1,0 +1,49 @@
+"""CPU wall-time sanity bench: one train step per reduced-config architecture
+(catches order-of-magnitude regressions in the model stack; the full-scale
+perf story lives in the roofline table)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row
+from repro.configs.base import ARCH_IDS, ShapeCell, get_smoke_config
+from repro.data.synthetic import TokenStream
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import default_adam, make_train_step
+from repro.models.model_zoo import build
+from repro.optim import adam_init
+
+CELL = ShapeCell("bench", 128, 4, "train")
+
+
+def run(archs=ARCH_IDS) -> list[str]:
+    out = []
+    mesh = make_host_mesh()
+    with mesh:
+        for arch in archs:
+            cfg = get_smoke_config(arch)
+            bundle = make_train_step(cfg, CELL, mesh, batch=CELL.global_batch)
+            step = bundle.jitted()
+            params = build(cfg).init(jax.random.PRNGKey(0))
+            opt = adam_init(params, default_adam(cfg))
+            batch = TokenStream(cfg, CELL).next()
+
+            # donated buffers: thread state through timed steps
+            import time as _time
+
+            params, opt, m = step(params, opt, batch)  # compile + warmup
+            jax.block_until_ready(m["loss"])
+            times = []
+            for _ in range(3):
+                t0 = _time.perf_counter()
+                params, opt, m = step(params, opt, batch)
+                jax.block_until_ready(m["loss"])
+                times.append(_time.perf_counter() - t0)
+            t = sorted(times)[1]
+            tok_s = CELL.global_batch * CELL.seq_len / t
+            out.append(row(f"lm_step_{arch}", t, f"tok_per_s={tok_s:.0f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

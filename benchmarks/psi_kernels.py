@@ -1,0 +1,53 @@
+"""Paper §3 (Tables 1-2): the Psi/Phi statistic kernels.
+
+On this CPU box the Pallas kernels execute in interpret mode (Python-level —
+meaningless wall time), so the benchmark reports (a) the jnp reference times
+that the CPU actually runs, and (b) the ANALYTIC kernel-level roofline for
+the TPU target: flops/bytes of each kernel at the paper's shapes, vs v5e
+peaks — this is the number the §Perf iterations move.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.core.psi_stats import _psi2_rbf_chunked
+from repro.kernels import ref
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def run() -> list[str]:
+    out = []
+    key = jax.random.PRNGKey(0)
+    for (N, M, Q) in [(16384, 100, 1), (65536, 100, 1), (16384, 512, 8)]:
+        ks = jax.random.split(key, 3)
+        mu = jax.random.normal(ks[0], (N, Q), jnp.float32)
+        S = 0.1 + jax.random.uniform(ks[1], (N, Q), jnp.float32)
+        Z = jax.random.normal(ks[2], (M, Q), jnp.float32)
+        var = jnp.asarray(1.0, jnp.float32)
+        ls = jnp.ones((Q,), jnp.float32)
+
+        f1 = jax.jit(lambda m, s, z: ref.psi1_rbf(m, s, z, var, ls))
+        t1 = time_call(f1, mu, S, Z, warmup=1, iters=3)
+        f2 = jax.jit(lambda m, s, z: _psi2_rbf_chunked(m, s, z, var, ls))
+        t2 = time_call(f2, mu, S, Z, warmup=1, iters=3)
+
+        # analytic TPU roofline for the fused psi2 kernel (dominant cost):
+        # flops ~ N*M^2*(Q*3+8); bytes ~ N*Q*3*4 (stream mu,S,w) + M^2*4
+        flops = N * M * M * (3 * Q + 8)
+        bytes_ = N * Q * 3 * 4 + M * M * 4
+        t_c = flops / PEAK_FLOPS
+        t_m = bytes_ / HBM_BW
+        bound = "compute" if t_c > t_m else "memory"
+        out.append(row(f"psi1_jnp_N{N}_M{M}_Q{Q}", t1, ""))
+        out.append(row(
+            f"psi2_jnp_N{N}_M{M}_Q{Q}", t2,
+            f"tpu_pred_us={max(t_c,t_m)*1e6:.1f},bound={bound}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,71 @@
+"""§Roofline: render the per-(arch x shape x mesh) roofline table from the
+dry-run JSONs (launch/dryrun.py must have populated experiments/dryrun)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs.base import ARCH_IDS, SHAPES
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(mesh: str = "pod") -> list[dict]:
+    cells = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            p = DRYRUN_DIR / f"{arch}_{shape}_{mesh}.json"
+            if p.exists():
+                cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def useful_fraction(rec: dict) -> float:
+    """MODEL_FLOPS / (HLO_FLOPs x chips), with the fwd-only 2ND convention
+    for prefill/decode (recomputed here so older records are consistent)."""
+    mf = rec.get("model_flops", {})
+    n_active = mf.get("n_params_active", 0.0)
+    n_tokens = rec["global_batch"] * (rec["seq_len"] if rec["kind"] != "decode" else 1)
+    model = (6.0 if rec["kind"] == "train" else 2.0) * n_active * n_tokens
+    denom = rec["flops_per_chip"] * rec["n_chips"]
+    return model / denom if denom else 0.0
+
+
+def table(mesh: str = "pod") -> str:
+    lines = [
+        "| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant | "
+        "bound (s) | HBM GiB | useful |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_cells(mesh):
+        if rec["status"] == "skipped":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                         f"skipped: {rec['reason'][:40]}… | — | — | — |")
+            continue
+        if rec["status"] != "ok":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | ERROR | — | — | — |")
+            continue
+        r = rec["roofline"]
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | {r['dominant']} | "
+            f"{r['step_lower_bound_s']:.3f} | "
+            f"{rec['memory']['peak_hbm_bytes_est']/2**30:.1f} | "
+            f"{useful_fraction(rec):.2f} |")
+    return "\n".join(lines)
+
+
+def run() -> list[str]:
+    out = []
+    for rec in load_cells("pod"):
+        if rec["status"] != "ok":
+            continue
+        r = rec["roofline"]
+        out.append(
+            f"roofline_{rec['arch']}_{rec['shape']},{r['step_lower_bound_s']*1e6:.0f},"
+            f"dom={r['dominant']},useful={useful_fraction(rec):.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    print(table("pod"))

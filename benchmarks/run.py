@@ -1,0 +1,36 @@
+"""Benchmark driver: one section per paper table/figure + the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sweeps")
+    args = ap.parse_args()
+
+    from benchmarks import gp_scaling, indistributable, lm_step, psi_kernels, roofline_table
+    from repro.configs.base import ARCH_IDS
+
+    rows = ["name,us_per_call,derived"]
+    print("# paper Fig 1a - GP-LVM iteration time vs N", file=sys.stderr)
+    rows += gp_scaling.run(sizes=(1024, 4096) if args.fast else gp_scaling.SIZES)
+    print("# paper Fig 1b - indistributable fraction", file=sys.stderr)
+    rows += indistributable.run(sizes=(1024, 4096) if args.fast else indistributable.SIZES)
+    print("# paper S3 - psi-statistic kernels", file=sys.stderr)
+    rows += psi_kernels.run()
+    print("# LM smoke step bench", file=sys.stderr)
+    rows += lm_step.run(archs=["smollm-360m", "rwkv6-7b"] if args.fast else ARCH_IDS)
+    print("# roofline table (from dry-run artifacts)", file=sys.stderr)
+    rows += roofline_table.run()
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

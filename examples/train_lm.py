@@ -1,0 +1,73 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps with
+the full production stack — sharded step, fault-tolerant loop, checkpointing,
+WSD schedule, synthetic data pipeline.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+The model is a 12-layer / d=768 smollm-family config (~110M params). On this
+CPU box a step takes ~1s at batch 8 x seq 256; the identical script drives a
+pod by passing --mesh pod on TPU hosts.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import dataclasses
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.data.synthetic import TokenStream
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.models.model_zoo import build
+from repro.optim import AdamConfig, adam_init, wsd_schedule
+from repro.runtime.train_loop import LoopConfig, TrainLoop
+
+CFG_100M = ModelConfig(
+    name="lm-100m", family="dense",
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=4, head_dim=64,
+    d_ff=2048, vocab_size=32000, tie_embeddings=True,
+    param_dtype="float32", compute_dtype="float32", remat=False, logits_chunk=128,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--mesh", default="host", choices=["host", "pod", "multipod"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = CFG_100M
+    shape = ShapeCell("e2e", args.seq, args.batch, "train")
+    mesh = (make_host_mesh() if args.mesh == "host"
+            else make_production_mesh(multi_pod=args.mesh == "multipod"))
+
+    adam = AdamConfig(lr=wsd_schedule(3e-4, warmup_steps=20,
+                                      stable_steps=args.steps // 2,
+                                      decay_steps=args.steps // 3),
+                      weight_decay=0.1, clip_norm=1.0)
+    with mesh:
+        bundle = make_train_step(cfg, shape, mesh, adam=adam, batch=args.batch)
+        params = jax.device_put(build(cfg).init(jax.random.PRNGKey(0)),
+                                bundle.in_shardings[0])
+        n = sum(int(x.size) for x in jax.tree.leaves(params))
+        print(f"model: {n/1e6:.1f}M params; mesh {dict(mesh.shape)}")
+        opt = jax.device_put(adam_init(params, adam), bundle.in_shardings[1])
+
+        loop = TrainLoop(bundle.jitted(), params, opt,
+                         TokenStream(cfg, shape, batch=args.batch),
+                         LoopConfig(ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                                    log_every=20),
+                         shardings=(bundle.in_shardings[0], bundle.in_shardings[1]))
+        final = loop.run(args.steps)
+    print(f"done: final loss {final['loss']:.4f} (random-chance ~ {jax.numpy.log(cfg.vocab_size):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Regenerate the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dry-run JSONs. §Perf and the narrative sections are maintained by hand in
+EXPERIMENTS.md — this script only rewrites between the AUTOGEN markers.
+
+    PYTHONPATH=src python experiments/make_experiments_md.py
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.roofline_table import load_cells, table, useful_fraction  # noqa: E402
+
+ROOT = Path(__file__).resolve().parents[1]
+MD = ROOT / "EXPERIMENTS.md"
+BEGIN = "<!-- AUTOGEN:DRYRUN BEGIN -->"
+END = "<!-- AUTOGEN:DRYRUN END -->"
+
+
+def dryrun_section() -> str:
+    out = ["### Cell status (all 40 arch x shape cells, both meshes)", ""]
+    out.append("| arch | shape | kind | pod (256 chips) | multipod (512 chips) |")
+    out.append("|---|---|---|---|---|")
+    pods = {(r["arch"], r["shape"]): r for r in load_cells("pod")}
+    multis = {(r["arch"], r["shape"]): r for r in load_cells("multipod")}
+    n_ok = n_skip = 0
+    for key in pods:
+        p, m = pods[key], multis.get(key)
+
+        def cell(r):
+            if r is None:
+                return "—"
+            if r["status"] == "skipped":
+                return "skip (sub-quadratic gate)"
+            if r["status"] != "ok":
+                return "ERROR"
+            hbm = r["memory"]["peak_hbm_bytes_est"] / 2**30
+            return (f"ok: compile {r['compile_s']:.0f}s, {hbm:.1f} GiB/chip, "
+                    f"{sum(r['collectives']['counts'].values())} colls")
+
+        if p["status"] == "ok":
+            n_ok += 1
+        elif p["status"] == "skipped":
+            n_skip += 1
+        out.append(f"| {key[0]} | {key[1]} | {p['kind']} | {cell(p)} | {cell(m)} |")
+    out.append("")
+    out.append(f"`lower().compile()` succeeds for **{n_ok} runnable + {n_skip} "
+               "gated** of 40 cells on the single-pod mesh AND the 2-pod mesh "
+               "(the multipod column proves the `pod` axis shards).")
+    return "\n".join(out)
+
+
+def roofline_section() -> str:
+    out = [
+        "### Roofline terms — single-pod (16 data x 16 model = 256 chips)",
+        "",
+        "Hardware model: 197 TFLOP/s bf16, 819 GB/s HBM, 2x50 GB/s ICI ring "
+        "per chip. FLOPs/bytes/collective-traffic are per-chip, from the "
+        "trip-count-aware HLO walk (launch/hlo_cost.py) over the compiled "
+        "SPMD module; `useful` = MODEL_FLOPS (6·N_active·D train, 2·N·D "
+        "inference) / (HLO FLOPs x chips).",
+        "",
+        table("pod"),
+        "",
+        "**Dominant-term notes (one line per arch, train_4k):**",
+    ]
+    for rec in load_cells("pod"):
+        if rec["shape"] != "train_4k" or rec["status"] != "ok":
+            continue
+        r = rec["roofline"]
+        dom = r["dominant"]
+        hints = {
+            "compute": "MXU-bound: raise per-chip batch or cut padded-head waste",
+            "memory": "HBM-bound: the fp32 attention-probability blocks and remat "
+                      "stacks dominate traffic; a Pallas flash-attention kernel "
+                      "keeps p in VMEM",
+            "collective": "ICI-bound: FSDP weight re-gathers per microbatch; "
+                          "2-D expert sharding or gather-once scheduling cuts it",
+        }
+        out.append(f"- **{rec['arch']}**: {dom}-bound "
+                   f"(bound {r['step_lower_bound_s']:.2f}s, useful "
+                   f"{useful_fraction(rec):.2f}) — {hints[dom]}.")
+    return "\n".join(out)
+
+
+def main() -> None:
+    body = (f"{BEGIN}\n\n## §Dry-run\n\n{dryrun_section()}\n\n"
+            f"## §Roofline\n\n{roofline_section()}\n\n{END}")
+    text = MD.read_text() if MD.exists() else ""
+    if BEGIN in text and END in text:
+        pre = text.split(BEGIN)[0]
+        post = text.split(END)[1]
+        MD.write_text(pre + body + post)
+    else:
+        MD.write_text(text + "\n" + body + "\n")
+    print(f"wrote {MD}")
+
+
+if __name__ == "__main__":
+    main()

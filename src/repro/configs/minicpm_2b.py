@@ -1,0 +1,33 @@
+"""MiniCPM-2B: llama-like dense LM trained with the WSD schedule
+(the optim substrate implements wsd_schedule for it). [arXiv:2404.06395]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    family="dense",
+    num_layers=40,
+    d_model=2304,
+    num_heads=36,
+    num_kv_heads=36,
+    head_dim=64,
+    d_ff=5760,
+    vocab_size=122753,
+    tie_embeddings=True,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="minicpm-2b-smoke",
+    family="dense",
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=160,
+    vocab_size=512,
+    tie_embeddings=True,
+    param_dtype="float32",
+    compute_dtype="float32",
+    logits_chunk=64,
+    remat=False,
+)

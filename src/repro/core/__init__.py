@@ -1,0 +1,7 @@
+"""The paper's primary contribution: distributed variational inference for
+sparse GP models (Titsias bound + Bayesian GP-LVM), decomposed into
+shard-local sufficient statistics + one psum + a replicated O(M^3) epilogue,
+with the hot statistics implemented as Pallas TPU kernels (repro.kernels)."""
+from repro.core import distributed, gp_head, gp_kernels, gplvm, inference, psi_stats, svgp
+
+__all__ = ["distributed", "gp_head", "gp_kernels", "gplvm", "inference", "psi_stats", "svgp"]

@@ -1,0 +1,215 @@
+"""Sufficient statistics of the collapsed sparse-GP bound (paper §2).
+
+Everything the bound needs from the N datapoints is reduced to:
+
+    stats.psi0   scalar   sum_n <k(x_n, x_n)>
+    stats.psi2   (M, M)   sum_n <k_fu(x_n)^T k_fu(x_n)>     ("Phi" in the paper)
+    stats.psiY   (M, D)   sum_n <k_fu(x_n)>^T y_n           ("Psi" in the paper)
+    stats.yy     scalar   sum_n y_n y_n^T
+    stats.n      scalar   number of datapoints accumulated
+
+All five are plain sums over n, which is precisely what makes the paper's
+MPI/GPU decomposition work: `SuffStats` forms a commutative monoid under
+`combine` (used by `core.distributed` with jax.lax.psum and by the data
+chunking here).
+
+Two computation modes:
+  * exact      — deterministic inputs X (supervised sparse GP): K_fu matmuls.
+  * expected   — Gaussian q(X) = prod_n N(mu_n, diag(S_n)) (Bayesian GP-LVM):
+                 closed-form RBF/Linear expectations.
+
+`backend="pallas"` routes the hot statistics through the Pallas TPU kernels
+(repro.kernels.ops); `backend="jnp"` uses fused memory-lean jnp (scan over N
+chunks for Psi2 — never materializes (N, M, M)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gp_kernels import RBF, Linear
+from repro.kernels import ref
+
+
+class SuffStats(NamedTuple):
+    psi0: jax.Array  # scalar
+    psi2: jax.Array  # (M, M)
+    psiY: jax.Array  # (M, D)
+    yy: jax.Array  # scalar
+    n: jax.Array  # scalar (float for psum-ability)
+
+    @staticmethod
+    def combine(a: "SuffStats", b: "SuffStats") -> "SuffStats":
+        return SuffStats(*(x + y for x, y in zip(a, b)))
+
+
+# ---------------------------------------------------------------------------
+# exact statistics (deterministic X)
+# ---------------------------------------------------------------------------
+
+def exact_stats_rbf(
+    kern_params, X: jax.Array, Y: jax.Array, Z: jax.Array, *, backend: str = "jnp"
+) -> SuffStats:
+    variance = RBF.variance(kern_params)
+    lengthscale = RBF.lengthscale(kern_params)
+    if backend == "pallas":
+        from repro.kernels import ops
+
+        Kfu = ops.kfu(X, Z, variance, lengthscale)
+    else:
+        Kfu = ref.kfu_rbf(X, Z, variance, lengthscale)
+    return SuffStats(
+        psi0=X.shape[0] * variance,
+        psi2=Kfu.T @ Kfu,
+        psiY=Kfu.T @ Y,
+        yy=jnp.sum(Y * Y),
+        n=jnp.asarray(X.shape[0], Kfu.dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# expected statistics under q(X) (Bayesian GP-LVM)
+# ---------------------------------------------------------------------------
+
+def _psi2_rbf_chunked(mu, S, Z, variance, lengthscale, *, chunk: int = 256) -> jax.Array:
+    """Psi2 accumulated over N in chunks: O(chunk * M^2) live memory.
+
+    Mirrors the paper's GPU kernel structure (Table 1): the (M, M) accumulator
+    stays resident while datapoints stream through.
+    """
+    N, Q = mu.shape
+    M = Z.shape[0]
+    l2 = lengthscale**2
+    zdiff = Z[:, None, :] - Z[None, :, :]  # (M, M, Q)
+    zterm = -jnp.sum(zdiff**2 / (4.0 * l2), axis=-1)  # (M, M)
+    zbar = 0.5 * (Z[:, None, :] + Z[None, :, :])  # (M, M, Q)
+
+    pad = (-N) % chunk
+    mu_p = jnp.pad(mu, ((0, pad), (0, 0)))
+    # pad S with ones (any positive value) and mask via weight w
+    S_p = jnp.pad(S, ((0, pad), (0, 0)), constant_values=1.0)
+    w = jnp.pad(jnp.ones((N,), mu.dtype), ((0, pad),))
+    mu_c = mu_p.reshape(-1, chunk, Q)
+    S_c = S_p.reshape(-1, chunk, Q)
+    w_c = w.reshape(-1, chunk)
+
+    def body(acc, xs):
+        mu_i, S_i, w_i = xs  # (chunk, Q), (chunk, Q), (chunk,)
+        denom = l2[None, :] + 2.0 * S_i  # (chunk, Q)
+        lognorm = -0.5 * jnp.sum(jnp.log1p(2.0 * S_i / l2[None, :]), axis=-1)  # (chunk,)
+        # accumulate exponent over q without a (chunk, M, M, Q) intermediate
+        expo = jnp.zeros((mu_i.shape[0], M, M), mu.dtype)
+        for q in range(Q):  # Q is small (latent dim); unrolled
+            d = mu_i[:, None, None, q] - zbar[None, :, :, q]
+            expo = expo - d * d / denom[:, None, None, q]
+        contrib = w_i[:, None, None] * jnp.exp(lognorm[:, None, None] + expo)
+        return acc + jnp.sum(contrib, axis=0), None
+
+    # `+ 0 * mu[0, 0]` inherits mu's varying-manual-axes type so the scan
+    # carry is well-typed when this runs inside shard_map (see shard_map-vma).
+    acc0 = jnp.zeros((M, M), mu.dtype) + 0.0 * mu[0, 0]
+    acc, _ = jax.lax.scan(body, acc0, (mu_c, S_c, w_c))
+    return variance**2 * jnp.exp(zterm) * acc
+
+
+def _fused_stats_rbf(mu, S, Y, Z, variance, lengthscale, *, chunk: int = 1024) -> SuffStats:
+    """Single streaming pass over N producing (psiY, psi2) together — the
+    beyond-paper fusion (§Perf C2): one read of (mu, S, Y) per datapoint
+    instead of two (psi1 pass + psi2 pass), with both accumulators resident.
+    Mirrors the fused Pallas kernel's structure (kernels/suffstats.py)."""
+    N, Q = mu.shape
+    M = Z.shape[0]
+    D = Y.shape[1]
+    l2 = lengthscale**2
+    zdiff = Z[:, None, :] - Z[None, :, :]
+    zterm = -jnp.sum(zdiff**2 / (4.0 * l2), axis=-1)  # (M, M)
+    zbar = 0.5 * (Z[:, None, :] + Z[None, :, :])
+
+    pad = (-N) % chunk
+    mu_p = jnp.pad(mu, ((0, pad), (0, 0)))
+    S_p = jnp.pad(S, ((0, pad), (0, 0)), constant_values=1.0)
+    Y_p = jnp.pad(Y, ((0, pad), (0, 0)))
+    w = jnp.pad(jnp.ones((N,), mu.dtype), ((0, pad),))
+    n_chunks = (N + pad) // chunk
+    xs = (mu_p.reshape(n_chunks, chunk, Q), S_p.reshape(n_chunks, chunk, Q),
+          Y_p.reshape(n_chunks, chunk, D), w.reshape(n_chunks, chunk))
+
+    @jax.checkpoint
+    def body(acc, x):
+        mu_i, S_i, Y_i, w_i = x
+        acc2, accY = acc
+        # psi1 block via the MXU factorization (see kernels/psi1.py)
+        b = 1.0 / (l2[None, :] + S_i)
+        lognorm1 = -0.5 * jnp.sum(jnp.log1p(S_i / l2[None, :]), axis=-1)
+        c1 = jnp.sum(mu_i * mu_i * b, axis=-1)
+        expo1 = -0.5 * (c1[:, None] - 2.0 * (mu_i * b) @ Z.T + b @ (Z * Z).T)
+        psi1_blk = jnp.exp(lognorm1[:, None] + expo1) * w_i[:, None]  # (chunk, M)
+        accY = accY + variance * psi1_blk.T @ Y_i
+        # psi2 block
+        denom = l2[None, :] + 2.0 * S_i
+        lognorm2 = -0.5 * jnp.sum(jnp.log1p(2.0 * S_i / l2[None, :]), axis=-1)
+        expo = jnp.zeros((mu_i.shape[0], M, M), mu.dtype)
+        for q in range(Q):
+            dq = mu_i[:, None, None, q] - zbar[None, :, :, q]
+            expo = expo - dq * dq / denom[:, None, None, q]
+        contrib = w_i[:, None, None] * jnp.exp(lognorm2[:, None, None] + expo)
+        acc2 = acc2 + jnp.sum(contrib, axis=0)
+        return (acc2, accY), None
+
+    vma = 0.0 * mu[0, 0]  # inherit shard_map varying axes (see _psi2_rbf_chunked)
+    acc0 = (jnp.zeros((M, M), mu.dtype) + vma, jnp.zeros((M, D), mu.dtype) + vma)
+    (acc2, accY), _ = jax.lax.scan(body, acc0, xs)
+    return SuffStats(
+        psi0=N * variance,
+        psi2=variance**2 * jnp.exp(zterm) * acc2,
+        psiY=accY,
+        yy=jnp.sum(Y * Y),
+        n=jnp.asarray(N, mu.dtype),
+    )
+
+
+def expected_stats_rbf(
+    kern_params,
+    mu: jax.Array,
+    S: jax.Array,
+    Y: jax.Array,
+    Z: jax.Array,
+    *,
+    backend: str = "jnp",
+    psi2_chunk: int = 256,
+) -> SuffStats:
+    variance = RBF.variance(kern_params)
+    lengthscale = RBF.lengthscale(kern_params)
+    if backend == "pallas":
+        from repro.kernels import ops
+
+        psi1 = ops.psi1(mu, S, Z, variance, lengthscale)
+        psi2 = ops.psi2(mu, S, Z, variance, lengthscale)
+    elif backend == "fused":
+        return _fused_stats_rbf(mu, S, Y, Z, variance, lengthscale)
+    else:
+        psi1 = ref.psi1_rbf(mu, S, Z, variance, lengthscale)
+        psi2 = _psi2_rbf_chunked(mu, S, Z, variance, lengthscale, chunk=psi2_chunk)
+    return SuffStats(
+        psi0=mu.shape[0] * variance,
+        psi2=psi2,
+        psiY=psi1.T @ Y,
+        yy=jnp.sum(Y * Y),
+        n=jnp.asarray(mu.shape[0], mu.dtype),
+    )
+
+
+def expected_stats_linear(
+    kern_params, mu: jax.Array, S: jax.Array, Y: jax.Array, Z: jax.Array
+) -> SuffStats:
+    ard = Linear.ard(kern_params)
+    psi1 = ref.psi1_linear(mu, S, Z, ard)
+    return SuffStats(
+        psi0=ref.psi0_linear(mu, S, ard),
+        psi2=ref.psi2_linear(mu, S, Z, ard),
+        psiY=psi1.T @ Y,
+        yy=jnp.sum(Y * Y),
+        n=jnp.asarray(mu.shape[0], mu.dtype),
+    )

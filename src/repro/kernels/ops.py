@@ -1,0 +1,93 @@
+"""Differentiable jit'd wrappers around the Pallas psi-statistic kernels.
+
+Forward = Pallas kernel (interpret-mode on CPU, compiled on TPU).
+Backward = memory-lean jnp (chunked where needed) via jax.vjp of the ref
+formulas — the paper's Table-2 gradient loops expressed as closed-form
+reverse rules. A Pallas backward for psi2 is a recorded perf-iteration item
+(EXPERIMENTS.md §Perf).
+
+`INTERPRET` flips automatically: True off-TPU so the whole test/bench suite
+exercises the real kernel bodies on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.kfu import kfu_pallas
+from repro.kernels.psi1 import psi1_pallas
+from repro.kernels.psi2 import psi2_pallas
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# kfu
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def kfu(X, Z, variance, lengthscale):
+    return kfu_pallas(X, Z, variance, lengthscale, interpret=INTERPRET)
+
+
+def _kfu_fwd(X, Z, variance, lengthscale):
+    return kfu(X, Z, variance, lengthscale), (X, Z, variance, lengthscale)
+
+
+def _kfu_bwd(res, g):
+    _, vjp = jax.vjp(ref.kfu_rbf, *res)
+    return vjp(g)
+
+
+kfu.defvjp(_kfu_fwd, _kfu_bwd)
+
+
+# ---------------------------------------------------------------------------
+# psi1
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def psi1(mu, S, Z, variance, lengthscale):
+    return psi1_pallas(mu, S, Z, variance, lengthscale, interpret=INTERPRET)
+
+
+def _psi1_fwd(mu, S, Z, variance, lengthscale):
+    return psi1(mu, S, Z, variance, lengthscale), (mu, S, Z, variance, lengthscale)
+
+
+def _psi1_bwd(res, g):
+    _, vjp = jax.vjp(ref.psi1_rbf, *res)
+    return vjp(g)
+
+
+psi1.defvjp(_psi1_fwd, _psi1_bwd)
+
+
+# ---------------------------------------------------------------------------
+# psi2
+# ---------------------------------------------------------------------------
+
+def _psi2_ref_chunked(mu, S, Z, variance, lengthscale):
+    # import here to avoid a core<->kernels import cycle at module load
+    from repro.core.psi_stats import _psi2_rbf_chunked
+
+    return _psi2_rbf_chunked(mu, S, Z, variance, lengthscale)
+
+
+@jax.custom_vjp
+def psi2(mu, S, Z, variance, lengthscale):
+    return psi2_pallas(mu, S, Z, variance, lengthscale, interpret=INTERPRET)
+
+
+def _psi2_fwd(mu, S, Z, variance, lengthscale):
+    return psi2(mu, S, Z, variance, lengthscale), (mu, S, Z, variance, lengthscale)
+
+
+def _psi2_bwd(res, g):
+    # chunked reverse pass: O(chunk * M^2) live memory, like the forward
+    _, vjp = jax.vjp(_psi2_ref_chunked, *res)
+    return vjp(g)
+
+
+psi2.defvjp(_psi2_fwd, _psi2_bwd)

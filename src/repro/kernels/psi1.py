@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: Psi1 statistic of the Bayesian GP-LVM (paper §3).
+
+    Psi1[n,m] = sigma^2 prod_q (1 + S_nq/l_q^2)^(-1/2)
+                exp(-0.5 (mu_nq - z_mq)^2 / (l_q^2 + S_nq))
+
+TPU adaptation — the CUDA version (paper Table 1) loops a thread over
+(n, m, q). Here the n-dependent denominator d_nq = l_q^2 + S_nq is factored
+so the whole exponent becomes MXU matmuls over the Q contraction:
+
+    (mu-z)^2 / d  =  mu^2/d  -  2 (mu/d) z  +  (1/d) z^2
+    expo[n,m]     =  c_n  -  2 (mu*b)[n,:] @ Z^T[:,m]  +  b[n,:] @ (Z^2)^T[:,m]
+
+with b = 1/d, c_n = sum_q mu^2 b. No (TILE_N, TILE_M, Q) broadcast tensor
+ever exists — the kernel is two (TILE_N, Q) x (Q, TILE_M) MXU contractions
+plus VPU row terms, which is also what makes large-Q GP heads viable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 256
+TILE_M = 128
+
+
+def _psi1_kernel(mu_ref, s_ref, z_ref, l2_ref, o_ref):
+    mu = mu_ref[...].astype(jnp.float32)  # (TILE_N, Q)
+    S = s_ref[...].astype(jnp.float32)  # (TILE_N, Q)
+    Z = z_ref[...].astype(jnp.float32)  # (TILE_M, Q)
+    l2 = l2_ref[...].astype(jnp.float32)  # (1, Q)
+
+    b = 1.0 / (l2 + S)  # (TILE_N, Q)
+    lognorm = -0.5 * jnp.sum(jnp.log1p(S / l2), axis=-1, keepdims=True)  # (TILE_N, 1)
+    c = jnp.sum(mu * mu * b, axis=-1, keepdims=True)  # (TILE_N, 1)
+    mub_zt = jax.lax.dot_general(
+        mu * b, Z, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (TILE_N, TILE_M)  MXU
+    b_z2t = jax.lax.dot_general(
+        b, Z * Z, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (TILE_N, TILE_M)  MXU
+    expo = -0.5 * (c - 2.0 * mub_zt + b_z2t)
+    o_ref[...] = jnp.exp(lognorm + expo).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def psi1_pallas(
+    mu: jax.Array,
+    S: jax.Array,
+    Z: jax.Array,
+    variance: jax.Array,
+    lengthscale: jax.Array,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    N, Q = mu.shape
+    M = Z.shape[0]
+    dtype = mu.dtype
+    pad_n = (-N) % TILE_N
+    pad_m = (-M) % TILE_M
+    mu_p = jnp.pad(mu.astype(jnp.float32), ((0, pad_n), (0, 0)))
+    # pad S with 1.0: any positive value keeps log1p/division well-defined
+    S_p = jnp.pad(S.astype(jnp.float32), ((0, pad_n), (0, 0)), constant_values=1.0)
+    Z_p = jnp.pad(Z.astype(jnp.float32), ((0, pad_m), (0, 0)))
+    l2 = (lengthscale.astype(jnp.float32) ** 2)[None, :]  # (1, Q)
+
+    grid = (mu_p.shape[0] // TILE_N, Z_p.shape[0] // TILE_M)
+    out = pl.pallas_call(
+        _psi1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, Q), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_N, Q), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_M, Q), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, Q), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, TILE_M), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mu_p.shape[0], Z_p.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(mu_p, S_p, Z_p, l2)
+    return (variance * out[:N, :M]).astype(dtype)

@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: Psi2 statistic (paper §3 Table 1, "Phi" accumulation).
+
+    Psi2[m,m'] = sum_n sigma^4 prod_q (1+2 S_nq/l_q^2)^(-1/2)
+        exp(-(z_mq - z_m'q)^2/(4 l_q^2) - (mu_nq - zbar_q)^2/(l_q^2 + 2 S_nq))
+
+TPU adaptation of the CUDA design (block per (m1,m2) pair, threads over n,
+shared-memory reduction):
+
+  * grid = (M/TM, M/TM, N/TN); the N axis is the *innermost* grid dimension,
+    so for a fixed (m1, m2) tile the kernel revisits the same VMEM output
+    block sequentially and accumulates in place — a race-free replacement for
+    CUDA's shared-memory tree reduction (TPU grid steps are sequential per
+    core, so no synchronization exists or is needed).
+  * the (mu - zbar)^2 / d_nq exponent is expanded so the n<->m coupling
+    becomes two MXU matmuls (A1, A2) plus a rank-Q cross term accumulated
+    per-q on the VPU; the final weighted reduction over the datapoint tile is
+    itself an MXU contraction  w(1,TN) @ E(TN, TM*TM).
+  * padded datapoints carry weight 0 (exact masking — they contribute nothing
+    to the sum, matching the paper's "sum over exactly N points").
+
+The n-independent factor sigma^4 exp(-(z-z')^2/(4 l^2)) is applied outside
+the kernel (O(M^2), negligible) — keeping the kernel a pure streaming
+reduction over datapoints.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 32
+TILE_M = 128
+
+
+def _psi2_kernel(mu_ref, s_ref, w_ref, z1_ref, z2_ref, l2_ref, o_ref):
+    k = pl.program_id(2)
+
+    mu = mu_ref[...].astype(jnp.float32)  # (TN, Q)
+    S = s_ref[...].astype(jnp.float32)  # (TN, Q)
+    w = w_ref[...].astype(jnp.float32)  # (TN, 1)
+    z1 = z1_ref[...].astype(jnp.float32)  # (TM, Q)
+    z2 = z2_ref[...].astype(jnp.float32)  # (TM, Q)
+    l2 = l2_ref[...].astype(jnp.float32)  # (1, Q)
+
+    tn, q_dim = mu.shape
+    tm = z1.shape[0]
+
+    r = 1.0 / (l2 + 2.0 * S)  # (TN, Q)
+    lognorm = -0.5 * jnp.sum(jnp.log1p(2.0 * S / l2), axis=-1, keepdims=True)  # (TN,1)
+    c2 = jnp.sum(mu * mu * r, axis=-1, keepdims=True)  # (TN,1)
+    mur = mu * r
+
+    def halfterm(z):  # (TN, TM): (mu r) @ z^T - 0.25 r @ (z^2)^T
+        a = jax.lax.dot_general(mur, z, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        b = jax.lax.dot_general(r, z * z, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        return a - 0.25 * b
+
+    A1 = halfterm(z1)  # (TN, TM)
+    A2 = halfterm(z2)  # (TN, TM)
+
+    # cross[n, m1, m2] = 0.5 sum_q r_nq z1_m1q z2_m2q  — accumulated per q
+    cross = jnp.zeros((tn, tm, tm), jnp.float32)
+    for q in range(q_dim):  # Q is a compile-time constant (latent dim, small)
+        cross = cross + (
+            r[:, q][:, None, None] * z1[:, q][None, :, None] * z2[:, q][None, None, :]
+        )
+
+    expo = (
+        (lognorm - c2)[:, :, None]  # (TN,1,1)
+        + A1[:, :, None]
+        + A2[:, None, :]
+        - 0.5 * cross
+    )
+    E = jnp.exp(expo)  # (TN, TM, TM)
+
+    # weighted datapoint reduction on the MXU: (1,TN) @ (TN, TM*TM)
+    contrib = jax.lax.dot_general(
+        w.T, E.reshape(tn, tm * tm), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(tm, tm)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def psi2_pallas(
+    mu: jax.Array,
+    S: jax.Array,
+    Z: jax.Array,
+    variance: jax.Array,
+    lengthscale: jax.Array,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    N, Q = mu.shape
+    M = Z.shape[0]
+    dtype = mu.dtype
+    pad_n = (-N) % TILE_N
+    pad_m = (-M) % TILE_M
+    mu_p = jnp.pad(mu.astype(jnp.float32), ((0, pad_n), (0, 0)))
+    S_p = jnp.pad(S.astype(jnp.float32), ((0, pad_n), (0, 0)), constant_values=1.0)
+    w = jnp.pad(jnp.ones((N, 1), jnp.float32), ((0, pad_n), (0, 0)))
+    Z_p = jnp.pad(Z.astype(jnp.float32), ((0, pad_m), (0, 0)))
+    l2 = (lengthscale.astype(jnp.float32) ** 2)[None, :]
+
+    Mp = Z_p.shape[0]
+    grid = (Mp // TILE_M, Mp // TILE_M, mu_p.shape[0] // TILE_N)
+    acc = pl.pallas_call(
+        _psi2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, Q), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((TILE_N, Q), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((TILE_N, 1), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((TILE_M, Q), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((TILE_M, Q), lambda i, j, k: (j, 0)),
+            pl.BlockSpec((1, Q), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_M), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Mp), jnp.float32),
+        interpret=interpret,
+    )(mu_p, S_p, w, Z_p, Z_p, l2)
+
+    # n-independent prefactor: sigma^4 exp(-(z - z')^2 / (4 l^2))
+    zs = Z.astype(jnp.float32) / lengthscale.astype(jnp.float32)
+    zn = jnp.sum(zs * zs, -1)
+    d2 = jnp.maximum(zn[:, None] + zn[None, :] - 2.0 * zs @ zs.T, 0.0)
+    pref = variance.astype(jnp.float32) ** 2 * jnp.exp(-0.25 * d2)
+    return (pref * acc[:M, :M]).astype(dtype)

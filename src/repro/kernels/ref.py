@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for the psi-statistic kernels (paper §3, Tables 1-2).
+
+These are the reference implementations of the quantities the paper computes
+on GPU:
+
+  - ``kfu``  : cross covariance K_fu (N x M)        [sparse GP, deterministic X]
+  - ``phi_exact`` : Phi = K_fu^T K_fu (M x M)
+  - ``psi0`` : sum_n <k(x_n, x_n)>_{q(x_n)}          (scalar)
+  - ``psi1`` : Psi1[n,m] = <k(x_n, z_m)>_{q(x_n)}    (N x M)
+  - ``psi2`` : Psi2 = sum_n <k_fu(x_n)^T k_fu(x_n)>  (M x M)
+
+Closed forms for the RBF-ARD kernel under diagonal Gaussian
+q(x_n) = N(mu_n, diag(S_n)) follow Titsias & Lawrence (2010).
+
+Every Pallas kernel in this package is validated against these with
+``assert_allclose`` over shape/dtype sweeps (tests/test_kernels_psi.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Deterministic-input statistics (supervised sparse GP, paper eq. (2)-(3))
+# ---------------------------------------------------------------------------
+
+def kfu_rbf(X: jax.Array, Z: jax.Array, variance: jax.Array, lengthscale: jax.Array) -> jax.Array:
+    """K_fu[n, m] = sigma^2 exp(-0.5 sum_q (x_nq - z_mq)^2 / l_q^2)."""
+    Xs = X / lengthscale
+    Zs = Z / lengthscale
+    d2 = (
+        jnp.sum(Xs**2, -1)[:, None]
+        + jnp.sum(Zs**2, -1)[None, :]
+        - 2.0 * Xs @ Zs.T
+    )
+    return variance * jnp.exp(-0.5 * jnp.maximum(d2, 0.0))
+
+
+def phi_exact_rbf(X: jax.Array, Z: jax.Array, variance: jax.Array, lengthscale: jax.Array) -> jax.Array:
+    """Phi = K_fu^T K_fu, the paper's per-datapoint outer-product sum."""
+    Kfu = kfu_rbf(X, Z, variance, lengthscale)
+    return Kfu.T @ Kfu
+
+
+# ---------------------------------------------------------------------------
+# Expected statistics under q(X) (Bayesian GP-LVM, paper eq. (4))
+# ---------------------------------------------------------------------------
+
+def psi0_rbf(mu: jax.Array, S: jax.Array, variance: jax.Array, lengthscale: jax.Array) -> jax.Array:
+    """psi0 = sum_n <k(x_n,x_n)> = N * sigma^2 for the RBF kernel."""
+    del S, lengthscale
+    return mu.shape[0] * variance
+
+
+def psi1_rbf(
+    mu: jax.Array, S: jax.Array, Z: jax.Array, variance: jax.Array, lengthscale: jax.Array
+) -> jax.Array:
+    """Psi1[n,m] = sigma^2 prod_q (1+S_nq/l_q^2)^(-1/2)
+    exp(-0.5 (mu_nq - z_mq)^2 / (l_q^2 + S_nq))."""
+    l2 = lengthscale**2  # (Q,)
+    denom = l2[None, :] + S  # (N, Q)
+    # log-normalizer: -0.5 sum_q log(1 + S/l^2)
+    lognorm = -0.5 * jnp.sum(jnp.log1p(S / l2[None, :]), axis=-1)  # (N,)
+    # exponent: -0.5 sum_q (mu - z)^2 / denom
+    diff = mu[:, None, :] - Z[None, :, :]  # (N, M, Q)
+    expo = -0.5 * jnp.sum(diff**2 / denom[:, None, :], axis=-1)  # (N, M)
+    return variance * jnp.exp(lognorm[:, None] + expo)
+
+
+def psi2_n_rbf(
+    mu: jax.Array, S: jax.Array, Z: jax.Array, variance: jax.Array, lengthscale: jax.Array
+) -> jax.Array:
+    """Per-datapoint psi2: (N, M, M) tensor before the sum over n.
+
+    psi2[n,m,m'] = sigma^4 prod_q (1 + 2 S_nq/l_q^2)^(-1/2)
+        * exp(-(z_mq - z_m'q)^2 / (4 l_q^2) - (mu_nq - zbar_q)^2 / (l_q^2 + 2 S_nq))
+    with zbar = (z_m + z_m') / 2.
+    """
+    l2 = lengthscale**2
+    denom = l2[None, :] + 2.0 * S  # (N, Q)
+    lognorm = -0.5 * jnp.sum(jnp.log1p(2.0 * S / l2[None, :]), axis=-1)  # (N,)
+    zdiff = Z[:, None, :] - Z[None, :, :]  # (M, M, Q)
+    zterm = -jnp.sum(zdiff**2 / (4.0 * l2[None, None, :]), axis=-1)  # (M, M)
+    zbar = 0.5 * (Z[:, None, :] + Z[None, :, :])  # (M, M, Q)
+    mudiff = mu[:, None, None, :] - zbar[None, :, :, :]  # (N, M, M, Q)
+    muterm = -jnp.sum(mudiff**2 / denom[:, None, None, :], axis=-1)  # (N, M, M)
+    return variance**2 * jnp.exp(lognorm[:, None, None] + zterm[None, :, :] + muterm)
+
+
+def psi2_rbf(
+    mu: jax.Array, S: jax.Array, Z: jax.Array, variance: jax.Array, lengthscale: jax.Array
+) -> jax.Array:
+    """Psi2 = sum_n psi2^{(n)}  (M x M). O(N M^2 Q) memory-naive oracle.
+
+    The memory-lean factorized form used in production is in psi_stats.py /
+    the Pallas kernel; this oracle keeps the textbook (N,M,M,Q) broadcast so
+    there is an independent implementation to validate against.
+    """
+    return jnp.sum(psi2_n_rbf(mu, S, Z, variance, lengthscale), axis=0)
+
+
+# -- Linear kernel (used to keep the statistics layer kernel-generic) -------
+
+def psi0_linear(mu: jax.Array, S: jax.Array, ard: jax.Array) -> jax.Array:
+    return jnp.sum(ard[None, :] * (mu**2 + S))
+
+
+def psi1_linear(mu: jax.Array, S: jax.Array, Z: jax.Array, ard: jax.Array) -> jax.Array:
+    del S
+    return (mu * ard) @ Z.T
+
+
+def psi2_linear(mu: jax.Array, S: jax.Array, Z: jax.Array, ard: jax.Array) -> jax.Array:
+    Za = Z * ard  # (M, Q)
+    # sum_n (mu_n mu_n^T + diag(S_n)) contracted with Za on both sides
+    moment = (mu.T @ mu) + jnp.diag(jnp.sum(S, axis=0))  # (Q, Q)
+    return Za @ moment @ Za.T

@@ -1,0 +1,146 @@
+"""Fused Pallas TPU kernel: ALL sufficient statistics in one pass over N
+(beyond-paper optimization C3, EXPERIMENTS.md §Perf).
+
+The paper computes Psi1 and Psi2 in separate GPU kernels (Table 1); the
+bound only ever consumes psiY = Psi1^T Y and Psi2, so this kernel streams
+each datapoint once and accumulates BOTH:
+
+    psiY[m, :]   += psi1[n, m] * y[n, :]
+    acc2[m, m']  += exp(lognorm2_n + muterm_n,m,m')
+
+Removing the second pass halves HBM reads of (mu, S) and never materializes
+the (N, M) Psi1 matrix. Grid = (M/TM, M/TM, N/TN) with the N axis innermost
+(sequential accumulation); psiY accumulates only on the j == 0 column of the
+grid so it is added exactly once per (m-tile, n-tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 32
+TILE_M = 128
+
+
+def _suffstats_kernel(mu_ref, s_ref, y_ref, w_ref, z1_ref, z2_ref, l2_ref,
+                      psi2_ref, psiy_ref):
+    j = pl.program_id(1)
+    kn = pl.program_id(2)
+
+    mu = mu_ref[...].astype(jnp.float32)  # (TN, Q)
+    S = s_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)  # (TN, D)
+    w = w_ref[...].astype(jnp.float32)  # (TN, 1)
+    z1 = z1_ref[...].astype(jnp.float32)  # (TM, Q)
+    z2 = z2_ref[...].astype(jnp.float32)
+    l2 = l2_ref[...].astype(jnp.float32)  # (1, Q)
+
+    tn, q_dim = mu.shape
+    tm = z1.shape[0]
+
+    # ---------------- psi2 tile (same math as kernels/psi2.py) ----------
+    r = 1.0 / (l2 + 2.0 * S)
+    lognorm2 = -0.5 * jnp.sum(jnp.log1p(2.0 * S / l2), axis=-1, keepdims=True)
+    c2 = jnp.sum(mu * mu * r, axis=-1, keepdims=True)
+    mur = mu * r
+
+    def halfterm(z):
+        a = jax.lax.dot_general(mur, z, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        b = jax.lax.dot_general(r, z * z, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        return a - 0.25 * b
+
+    A1 = halfterm(z1)
+    A2 = halfterm(z2)
+    cross = jnp.zeros((tn, tm, tm), jnp.float32)
+    for q in range(q_dim):
+        cross = cross + (r[:, q][:, None, None] * z1[:, q][None, :, None]
+                         * z2[:, q][None, None, :])
+    E = jnp.exp((lognorm2 - c2)[:, :, None] + A1[:, :, None] + A2[:, None, :]
+                - 0.5 * cross)
+    contrib2 = jax.lax.dot_general(
+        w.T, E.reshape(tn, tm * tm), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(tm, tm)
+
+    @pl.when(kn == 0)
+    def _():
+        psi2_ref[...] = contrib2
+
+    @pl.when(kn > 0)
+    def _():
+        psi2_ref[...] += contrib2
+
+    # ---------------- psiY tile (psi1 MXU factorization) ----------------
+    @pl.when(j == 0)
+    def _():
+        b = 1.0 / (l2 + S)
+        lognorm1 = -0.5 * jnp.sum(jnp.log1p(S / l2), axis=-1, keepdims=True)
+        c1 = jnp.sum(mu * mu * b, axis=-1, keepdims=True)
+        mub_zt = jax.lax.dot_general(mu * b, z1, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        b_z2t = jax.lax.dot_general(b, z1 * z1, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        psi1_blk = jnp.exp(lognorm1 - 0.5 * (c1 - 2.0 * mub_zt + b_z2t)) * w  # (TN, TM)
+        contribY = jax.lax.dot_general(psi1_blk, y, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)  # (TM, D)
+
+        @pl.when(kn == 0)
+        def _():
+            psiy_ref[...] = contribY
+
+        @pl.when(kn > 0)
+        def _():
+            psiy_ref[...] += contribY
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def suffstats_pallas(mu, S, Y, Z, variance, lengthscale, *, interpret: bool = False):
+    """Returns (psi2 (M, M), psiY (M, D)) accumulated over all N."""
+    N, Q = mu.shape
+    M = Z.shape[0]
+    D = Y.shape[1]
+    pad_n = (-N) % TILE_N
+    pad_m = (-M) % TILE_M
+    mu_p = jnp.pad(mu.astype(jnp.float32), ((0, pad_n), (0, 0)))
+    S_p = jnp.pad(S.astype(jnp.float32), ((0, pad_n), (0, 0)), constant_values=1.0)
+    Y_p = jnp.pad(Y.astype(jnp.float32), ((0, pad_n), (0, 0)))
+    w = jnp.pad(jnp.ones((N, 1), jnp.float32), ((0, pad_n), (0, 0)))
+    Z_p = jnp.pad(Z.astype(jnp.float32), ((0, pad_m), (0, 0)))
+    l2 = (lengthscale.astype(jnp.float32) ** 2)[None, :]
+    Mp = Z_p.shape[0]
+
+    grid = (Mp // TILE_M, Mp // TILE_M, mu_p.shape[0] // TILE_N)
+    acc2, accY = pl.pallas_call(
+        _suffstats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, Q), lambda i, j, kn: (kn, 0)),
+            pl.BlockSpec((TILE_N, Q), lambda i, j, kn: (kn, 0)),
+            pl.BlockSpec((TILE_N, D), lambda i, j, kn: (kn, 0)),
+            pl.BlockSpec((TILE_N, 1), lambda i, j, kn: (kn, 0)),
+            pl.BlockSpec((TILE_M, Q), lambda i, j, kn: (i, 0)),
+            pl.BlockSpec((TILE_M, Q), lambda i, j, kn: (j, 0)),
+            pl.BlockSpec((1, Q), lambda i, j, kn: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_M, TILE_M), lambda i, j, kn: (i, j)),
+            pl.BlockSpec((TILE_M, D), lambda i, j, kn: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Mp, Mp), jnp.float32),
+            jax.ShapeDtypeStruct((Mp, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(mu_p, S_p, Y_p, w, Z_p, Z_p, l2)
+
+    zs = Z.astype(jnp.float32) / lengthscale.astype(jnp.float32)
+    zn = jnp.sum(zs * zs, -1)
+    d2 = jnp.maximum(zn[:, None] + zn[None, :] - 2.0 * zs @ zs.T, 0.0)
+    pref2 = variance.astype(jnp.float32) ** 2 * jnp.exp(-0.25 * d2)
+    psi2 = pref2 * acc2[:M, :M]
+    psiY = variance.astype(jnp.float32) * accY[:M]
+    return psi2, psiY

@@ -1,0 +1,188 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh) cell:
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = collective_traffic_bytes_per_chip / collective_bw
+
+``compiled.cost_analysis()`` on an SPMD-partitioned module reports *per-chip*
+flops/bytes (the partitioner has already divided the program), so no further
+/chips is applied — this is algebraically identical to the assignment's
+total/(chips * bw) form.
+
+Collective traffic is parsed from the compiled HLO text: for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute we
+apply the standard ring-transfer model over the parsed replica-group size P:
+
+    all-gather:         out_bytes * (P-1)/P
+    reduce-scatter:     in_bytes  * (P-1)/P      (= out_bytes * (P-1))
+    all-reduce:         2 * bytes * (P-1)/P
+    all-to-all:         bytes * (P-1)/P
+    collective-permute: bytes
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI;
+ring collectives drive both directions of one torus link => 100 GB/s/chip
+effective collective bandwidth (documented assumption).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+ICI_LINK_BW = 50e9  # B/s per link per direction
+COLLECTIVE_BW = 2 * ICI_LINK_BW  # bidirectional ring on one torus axis
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.-]*)\s*=\s*([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+_TUPLE_COLL_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    raw_bytes: Dict[str, int]  # sum of result bytes by op kind
+    traffic_bytes: float  # ring-model per-chip traffic
+
+    def total_raw(self) -> int:
+        return sum(self.raw_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    raw: Dict[str, int] = {}
+    traffic = 0.0
+    for line in hlo_text.splitlines():
+        if "all-reduce" not in line and "all-gather" not in line \
+                and "reduce-scatter" not in line and "all-to-all" not in line \
+                and "collective-permute" not in line:
+            continue
+        if "-done" in line or "async" in line.split("=")[0]:
+            continue
+        m = _COLL_RE.search(line)
+        shapes: List[int] = []
+        kind = None
+        if m:
+            kind = m.group(4).lower()
+            shapes = [_shape_bytes(m.group(2), m.group(3))]
+        else:
+            mt = _TUPLE_COLL_RE.search(line)
+            if not mt:
+                continue
+            kind = mt.group(2).lower()
+            shapes = [
+                _shape_bytes(sm.group(1), sm.group(2))
+                for sm in re.finditer(r"([a-z0-9]+)\[([\d,]*)\]", mt.group(1))
+            ]
+        out_bytes = sum(shapes)
+        # replica group size
+        P = 1
+        mg = _GROUPS_RE.search(line)
+        if mg:
+            P = len([x for x in mg.group(1).split(",") if x.strip() != ""])
+        else:
+            mi = _GROUPS_IOTA_RE.search(line)
+            if mi:
+                P = int(mi.group(2))  # [groups, group_size]
+        if P <= 1:
+            continue
+        frac = (P - 1) / P
+        if kind == "all-gather":
+            t = out_bytes * frac
+        elif kind == "reduce-scatter":
+            t = out_bytes * (P - 1)  # input = out * P
+        elif kind == "all-reduce":
+            t = 2 * out_bytes * frac
+        elif kind == "all-to-all":
+            t = out_bytes * frac
+        else:  # collective-permute
+            t = out_bytes
+        counts[kind] = counts.get(kind, 0) + 1
+        raw[kind] = raw.get(kind, 0) + out_bytes
+        traffic += t
+    return CollectiveStats(counts, raw, traffic)
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   collective_traffic: float) -> Dict[str, float]:
+    t_compute = flops_per_chip / PEAK_FLOPS
+    t_memory = bytes_per_chip / HBM_BW
+    t_coll = collective_traffic / COLLECTIVE_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    bound = max(t_compute, t_memory, t_coll)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "step_lower_bound_s": bound,
+        # fraction of the roofline-optimal step that compute occupies:
+        # 1.0 => perfectly compute-bound
+        "compute_fraction_of_bound": t_compute / bound if bound > 0 else 0.0,
+    }
+
+
+def count_params(tree) -> int:
+    import jax
+    import numpy as np
+
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def active_param_fraction_scaling(path: str) -> float | None:
+    """Weight for 'active' parameter counting; see model_flops."""
+    return None
+
+
+def model_flops(cfg, params_tree, n_tokens: int) -> Dict[str, float]:
+    """MODEL_FLOPS = 6 * N * D with N = non-embedding params (active experts
+    only for MoE), D = tokens processed. Exact, from the param pytree."""
+    import jax
+    import numpy as np
+
+    total = 0.0
+    active = 0.0
+    moe_scale = (cfg.num_experts_per_tok / cfg.num_experts) if cfg.num_experts else 1.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_tree)[0]:
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        n = float(np.prod(leaf.shape))
+        if "embed/table" in p or "unembed" in p:
+            continue  # embedding lookups are not matmul FLOPs
+        total += n
+        if re.search(r"moe/w_(gate|up|down)", p):
+            active += n * moe_scale
+        else:
+            active += n
+    return {
+        "n_params_nonembed": total,
+        "n_params_active": active,
+        "model_flops": 6.0 * active * n_tokens,
+    }

@@ -1,0 +1,184 @@
+"""pjit-able step functions (train / prefill / decode) with full sharding
+trees. Used identically by the real trainer/server (launch/train.py,
+launch/serve.py) and the multi-pod dry-run (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import model_zoo
+from repro.optim import AdamConfig, AdamState, adam_init, adam_update
+from repro.parallel import sharding as shd
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    """A lowered-able step function + abstract args + in/out shardings."""
+
+    fn: Any
+    abstract_args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+    def jitted(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        return self.jitted().lower(*self.abstract_args)
+
+
+def _abstract_params(model) -> PyTree:
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def _logits_spec(B: int, cfg: ModelConfig, mesh: Mesh):
+    """(B, padded_vocab) decode/prefill logits: batch-DP + vocab-TP."""
+    sds = jax.ShapeDtypeStruct((B, cfg.padded_vocab()), jnp.float32)
+    return shd._spec_from_trailing((shd.BATCH, "model"), sds.shape, mesh)
+
+
+def default_adam(cfg: ModelConfig) -> AdamConfig:
+    return AdamConfig(lr=3e-4, weight_decay=0.1, clip_norm=1.0,
+                      state_dtype=cfg.optimizer_state_dtype)
+
+
+def make_train_step(cfg: ModelConfig, shape: ShapeCell, mesh: Mesh,
+                    adam: AdamConfig | None = None, batch: int | None = None) -> StepBundle:
+    model = model_zoo.build(cfg)
+    adam = adam or default_adam(cfg)
+    constrain = shd.make_constrain(mesh)
+
+    n_mb = max(1, cfg.microbatches)
+    acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+    def grads_of(params, data):
+        def loss_fn(p):
+            return model.train_loss(p, data, constrain)
+
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state: AdamState, data: Dict[str, jax.Array]):
+        if n_mb == 1:
+            (loss, metrics), grads = grads_of(params, data)
+        else:
+            # gradient accumulation over sequential microbatches
+            def split(x):
+                B = x.shape[0]
+                return x.reshape(n_mb, B // n_mb, *x.shape[1:])
+
+            mbs = jax.tree.map(split, data)
+
+            def body(acc, mb):
+                (l, m), g = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(a.dtype) / n_mb, acc, g)
+                return acc, (l, m)
+
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            grads, (losses, ms) = jax.lax.scan(body, acc0, mbs)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(lambda x: jnp.mean(x), ms)
+        params, opt_state, gnorm = adam_update(grads, opt_state, params, adam)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    params_a = _abstract_params(model)
+    opt_a = jax.eval_shape(lambda p: adam_init(p, adam), params_a)
+    data_a = model_zoo.input_specs(cfg, shape, batch)
+
+    pspec = shd.param_specs(params_a, mesh)
+    ospec = AdamState(P(), pspec, pspec)
+    dspec = shd.batch_specs(data_a, mesh)
+    mspec = jax.tree.map(lambda _: P(), {"ce": 0, "aux": 0, "loss": 0, "grad_norm": 0})
+
+    tos = lambda t: shd.to_shardings(t, mesh)
+    return StepBundle(
+        fn=train_step,
+        abstract_args=(params_a, opt_a, data_a),
+        in_shardings=(tos(pspec), tos(ospec), tos(dspec)),
+        out_shardings=(tos(pspec), tos(ospec), tos(mspec)),
+        donate_argnums=(0, 1),
+    )
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeCell, mesh: Mesh,
+                      batch: int | None = None) -> StepBundle:
+    model = model_zoo.build(cfg)
+    constrain = shd.make_constrain(mesh)
+
+    def prefill_step(params, data):
+        return model.prefill(params, data, constrain)
+
+    params_a = _abstract_params(model)
+    data_a = model_zoo.input_specs(cfg, shape, batch)
+    _, states_a = jax.eval_shape(prefill_step, params_a, data_a)
+
+    pspec = shd.param_specs(params_a, mesh)
+    dspec = shd.batch_specs(data_a, mesh)
+    sspec = shd.state_specs(states_a, mesh)
+    B = batch or shape.global_batch
+    lspec = _logits_spec(B, cfg, mesh)
+
+    tos = lambda t: shd.to_shardings(t, mesh)
+    return StepBundle(
+        fn=prefill_step,
+        abstract_args=(params_a, data_a),
+        in_shardings=(tos(pspec), tos(dspec)),
+        out_shardings=(tos(lspec), tos(sspec)),
+    )
+
+
+def make_decode_step(cfg: ModelConfig, shape: ShapeCell, mesh: Mesh,
+                     batch: int | None = None) -> StepBundle:
+    """One-token serve step against a KV/recurrent cache of shape.seq_len."""
+    model = model_zoo.build(cfg)
+    constrain = shd.make_constrain(mesh)
+    B = batch or shape.global_batch
+
+    def decode_step(params, states, tokens, pos):
+        logits, states = model.decode_step(params, tokens, pos, states, constrain)
+        return logits, states
+
+    params_a = _abstract_params(model)
+    states_a = jax.eval_shape(lambda: model.init_decode_state(B, shape.seq_len))
+    tokens_a = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_a = jax.ShapeDtypeStruct((), jnp.int32)
+
+    pspec = shd.param_specs(params_a, mesh)
+    sspec = shd.state_specs(states_a, mesh)
+    tspec = shd.batch_specs(tokens_a, mesh)
+    lspec = _logits_spec(B, cfg, mesh)
+
+    tos = lambda t: shd.to_shardings(t, mesh)
+    return StepBundle(
+        fn=decode_step,
+        abstract_args=(params_a, states_a, tokens_a, pos_a),
+        in_shardings=(tos(pspec), tos(sspec), tos(tspec), NamedSharding(mesh, P())),
+        out_shardings=(tos(lspec), tos(sspec)),
+        donate_argnums=(1,),
+    )
+
+
+def make_step(kind: str, cfg: ModelConfig, shape: ShapeCell, mesh: Mesh,
+              batch: int | None = None) -> StepBundle:
+    if kind == "train":
+        return make_train_step(cfg, shape, mesh, batch=batch)
+    if kind == "prefill":
+        return make_prefill_step(cfg, shape, mesh, batch=batch)
+    if kind == "decode":
+        return make_decode_step(cfg, shape, mesh, batch=batch)
+    raise ValueError(kind)

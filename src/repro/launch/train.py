@@ -1,0 +1,65 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --preset smoke \
+        --steps 20 --batch 8 --seq 128
+
+On this box it runs on the host mesh (1 CPU device — same code path as a
+pod: the mesh is the only difference). `--preset full` uses the assigned
+architecture config unchanged (for real hardware); `--preset smoke` uses the
+reduced same-family config. The loop checkpoints/resumes via runtime.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import ShapeCell, get_config, get_smoke_config
+from repro.data.synthetic import TokenStream
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.optim import adam_init
+from repro.runtime.train_loop import LoopConfig, TrainLoop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="host", choices=["host", "pod", "multipod"])
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.preset == "smoke" else get_config(args.arch)
+    shape = ShapeCell("cli", args.seq, args.batch, "train")
+    mesh = (make_host_mesh() if args.mesh == "host"
+            else make_production_mesh(multi_pod=args.mesh == "multipod"))
+
+    with mesh:
+        bundle = make_train_step(cfg, shape, mesh, batch=args.batch)
+        step_fn = bundle.jitted()
+        model_init = bundle.abstract_args[0]
+        key = jax.random.PRNGKey(0)
+        from repro.models.model_zoo import build
+
+        params = jax.device_put(build(cfg).init(key), bundle.in_shardings[0])
+        from repro.launch.steps import default_adam
+
+        opt = jax.device_put(adam_init(params, default_adam(cfg)), bundle.in_shardings[1])
+        data = TokenStream(cfg, shape, batch=args.batch)
+
+        loop = TrainLoop(step_fn, params, opt, data,
+                         LoopConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                                    log_every=1),
+                         shardings=(bundle.in_shardings[0], bundle.in_shardings[1]))
+        final = loop.run(args.steps)
+        print("final metrics:", final)
+
+
+if __name__ == "__main__":
+    main()

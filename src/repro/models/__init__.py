@@ -1,0 +1,3 @@
+from repro.models import attention, encdec, frontends, layers, model_zoo, moe, rglru, rwkv6, transformer
+
+__all__ = ["attention", "encdec", "frontends", "layers", "model_zoo", "moe", "rglru", "rwkv6", "transformer"]

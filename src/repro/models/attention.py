@@ -1,0 +1,352 @@
+"""Grouped-query attention with blockwise (flash-style) softmax, sliding
+windows, and ring-buffer KV caches.
+
+Design notes (TPU-oriented):
+
+  * Train/prefill attention is *blockwise*: an online-softmax scan over
+    (q-block, kv-block) pairs. The pair list is built statically as the lower
+    block-triangle (causal) or a clipped band (sliding window), so compute is
+    ~causal-optimal — the naive "scan all kv for all q, mask half away" costs
+    2x the FLOPs and shows up directly in the roofline's compute term (this
+    was perf iteration #1, see EXPERIMENTS.md §Perf).
+  * GQA never materializes repeated KV heads: scores are grouped einsums
+    (B, kv, group, bq, bk) in fp32.
+  * Decode uses a KV cache with absolute positions stored per slot; windowed
+    layers get a ring buffer of exactly `window` slots, so a 32k-window-1024
+    hybrid decodes against O(window) state, not O(seq).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, dt
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_KV = 512
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, d: int | None = None, *, cross: bool = False):
+    d = d or cfg.d_model
+    hd = cfg.resolved_head_dim()
+    H, Kv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, H * hd, cfg),
+        "wk": dense_init(ks[1], d, Kv * hd, cfg),
+        "wv": dense_init(ks[2], d, Kv * hd, cfg),
+        "wo": dense_init(ks[3], H * hd, d, cfg, scale=(H * hd) ** -0.5),
+    }
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_slots, Kv, hd) — roped keys
+    v: jax.Array  # (B, S_slots, Kv, hd)
+    pos: jax.Array  # (B, S_slots) absolute position per slot; -1 = empty
+
+
+def _qkv(params, x, positions, cfg: ModelConfig, tp: int = 1,
+         constrain=lambda t, s: t):
+    """Projections + RoPE. Query heads are FLAT-padded with zero heads to
+    cfg.padded_heads(tp) so the head axis shards evenly over the model axis;
+    `head_to_kv_map` routes each (possibly padded) query head to its kv head
+    inside blockwise_attention, and the pads are sliced off before w_o.
+    q/k are constrained to the head-sharded layout BEFORE RoPE so the fp32
+    rotation chain runs on 1/tp of the heads (§Perf B3)."""
+    cdt = dt(cfg, "compute")
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    H, Kv = cfg.num_heads, cfg.num_kv_heads
+    Hp = cfg.padded_heads(tp)
+    x = x.astype(cdt)
+    q = (x @ params["wq"].astype(cdt)).reshape(B, S, H, hd)
+    if Hp != H:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Hp - H), (0, 0)))
+    k = (x @ params["wk"].astype(cdt)).reshape(B, S, Kv, hd)
+    v = (x @ params["wv"].astype(cdt)).reshape(B, S, Kv, hd)
+    q = apply_rope(constrain(q, "act_heads"), positions, cfg.rope_theta)
+    k = apply_rope(constrain(k, "act_kv_heads"), positions, cfg.rope_theta)
+    return q, k, v
+
+
+def head_to_kv_map(cfg: ModelConfig, tp: int) -> np.ndarray:
+    """Static (Hp,) map: query head -> kv head (pads point at kv head 0)."""
+    H, Kv = cfg.num_heads, cfg.num_kv_heads
+    G = H // Kv
+    Hp = cfg.padded_heads(tp)
+    return np.asarray([h // G if h < H else 0 for h in range(Hp)], np.int32)
+
+
+def _unpad_heads(out_flat: jax.Array, cfg: ModelConfig, tp: int) -> jax.Array:
+    """(.., Hp*hd) -> (.., H*hd): drop flat-padded query heads before w_o."""
+    H, hd = cfg.num_heads, cfg.resolved_head_dim()
+    Hp = cfg.padded_heads(tp)
+    if Hp == H:
+        return out_flat
+    lead = out_flat.shape[:-1]
+    return out_flat.reshape(*lead, Hp, hd)[..., :H, :].reshape(*lead, H * hd)
+
+
+def _pair_list(n_q: int, n_kv: int, n_kv_per_q: Optional[int], causal: bool) -> np.ndarray:
+    """Static (iq, ikv) block pairs: full grid (bidirectional/cross), lower
+    triangle (causal), or a clipped band ending at the diagonal (windowed)."""
+    pairs = []
+    for iq in range(n_q):
+        if not causal:
+            lo, hi = 0, n_kv - 1
+        else:
+            lo = 0 if n_kv_per_q is None else max(0, iq - n_kv_per_q + 1)
+            hi = iq
+        for ikv in range(lo, hi + 1):
+            pairs.append((iq, ikv))
+    return np.asarray(pairs, np.int32)
+
+
+def blockwise_attention(
+    q: jax.Array,  # (B, S, H, hd) — H already TP-padded by _qkv
+    k: jax.Array,  # (B, S_kv, Kv, hd)
+    v: jax.Array,
+    q_positions: jax.Array,  # (B, S)
+    kv_positions: jax.Array,  # (B, S_kv)
+    *,
+    window: int,  # -1 = full causal
+    causal: bool = True,  # False: bidirectional/cross attention
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    constrain=lambda t, s: t,
+    mode: str = "train",  # "train": remat-friendly backward; "infer": pair-scan
+    kv_map: Optional[np.ndarray] = None,  # (H,) query-head -> kv-head
+) -> jax.Array:
+    """KV heads are gathered up to the (padded) query-head axis before the
+    block loop so every block tensor has a single head axis that shards
+    cleanly over the model axis (grouped (Kv, G) layouts defeat GSPMD's
+    while-loop propagation and the scores replicate — 192 GiB/chip on smollm
+    before this change). The scan carries are explicitly constrained for the
+    same reason."""
+    B, S, H, hd = q.shape
+    S_kv, Kv = k.shape[1], k.shape[2]
+    if kv_map is None:
+        kv_map = np.repeat(np.arange(Kv, dtype=np.int32), H // Kv)
+    assert len(kv_map) == H, (len(kv_map), H)
+    if Kv != H or not np.array_equal(kv_map, np.arange(H)):
+        k = k[:, :, jnp.asarray(kv_map), :]
+        v = v[:, :, jnp.asarray(kv_map), :]
+    bq = min(block_q, S)
+    bk = min(block_kv, S_kv)
+    pad_q = (-S) % bq  # uneven q (whisper's 1500 frames): pad + slice off
+    S_orig = S
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad_q)), constant_values=-1)
+        S += pad_q
+    pad_kv = (-S_kv) % bk  # uneven kv: pad + mask (padded slots carry pos -1)
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad_kv)), constant_values=-1)
+        S_kv += pad_kv
+    assert S % bq == 0 and S_kv % bk == 0, (S, bq, S_kv, bk)
+    n_q, n_kv = S // bq, S_kv // bk
+    # fold the softmax scale into q: saves one full pass over every
+    # (bq, bk) score block (perf iteration A2, EXPERIMENTS.md §Perf)
+    q = q * jnp.asarray(hd**-0.5, q.dtype)
+
+    qb = constrain(q.reshape(B, n_q, bq, H, hd).transpose(1, 0, 3, 2, 4), "attn_blocks")
+    kb = constrain(k.reshape(B, n_kv, bk, H, hd).transpose(1, 0, 3, 2, 4), "attn_blocks")
+    vb = constrain(v.reshape(B, n_kv, bk, H, hd).transpose(1, 0, 3, 2, 4), "attn_blocks")
+    qpb = q_positions.reshape(B, n_q, bq).transpose(1, 0, 2)  # (n_q, B, bq)
+    kpb = kv_positions.reshape(B, n_kv, bk).transpose(1, 0, 2)
+
+    n_kv_per_q = None if window < 0 else (window + bq - 1) // bk + 1
+
+    def block_scores(qi, ki, qp, kp):
+        s = jnp.einsum("bhqd,bhsd->bhqs", qi, ki, preferred_element_type=jnp.float32)
+        ok = kp[:, None, :] >= 0  # kv-slot validity (padded slots carry -1)
+        if causal:
+            ok = ok & (qp[:, :, None] >= kp[:, None, :])
+        if window > 0:
+            ok = ok & (qp[:, :, None] - kp[:, None, :] < window)
+        return jnp.where(ok[:, None, :, :], s, NEG_INF)
+
+    def online_update(carry, qi, ki, vi, qp, kp):
+        mi, li, ai = carry
+        s = block_scores(qi, ki, qp, kp)
+        m_new = jnp.maximum(mi, jnp.max(s, axis=-1))
+        # A4 (refuted, §Perf): materializing p in bf16 ADDED a convert pass
+        # at the fusion boundary (+4% memory term) — fp32 p with an inline
+        # cast at the dot is what XLA fuses best.
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mi - m_new)
+        l_new = li * corr + jnp.sum(p, axis=-1)
+        a_new = ai * corr[..., None] + jnp.einsum(
+            "bhqs,bhsd->bhqd", p.astype(vi.dtype), vi, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, a_new
+
+    if mode == "train":
+        # Differentiable layout: one (checkpointed) kv-scan per q block. The
+        # backward then recomputes the (bq, bk) probability block instead of
+        # saving it — the pair-scan layout stacks every p block as a scan
+        # residual (4.8 GiB/layer/chip at smollm train_4k; EXPERIMENTS §Perf).
+        outs = []
+        for iq in range(n_q):
+            if not causal:
+                kv_idx = list(range(n_kv))
+            else:
+                lo = 0 if n_kv_per_q is None else max(0, iq - n_kv_per_q + 1)
+                kv_idx = list(range(lo, iq + 1))
+            qi = qb[iq]
+            qp = qpb[iq]
+            m0 = jnp.full((B, H, bq), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, H, bq), jnp.float32)
+            a0 = jnp.zeros((B, H, bq, hd), jnp.float32)
+            m0, l0, a0 = (constrain(m0, "attn_carry_q"), constrain(l0, "attn_carry_q"),
+                          constrain(a0, "attn_carry_qa"))
+
+            @jax.checkpoint
+            def body(carry, ikv, _qi=qi, _qp=qp):
+                ki = jax.lax.dynamic_index_in_dim(kb, ikv, 0, keepdims=False)
+                vi = jax.lax.dynamic_index_in_dim(vb, ikv, 0, keepdims=False)
+                kp = jax.lax.dynamic_index_in_dim(kpb, ikv, 0, keepdims=False)
+                return online_update(carry, _qi, ki, vi, _qp, kp), None
+
+            (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.asarray(kv_idx, jnp.int32))
+            outs.append(acc / jnp.maximum(l[..., None], 1e-30))
+        out = jnp.stack(outs)  # (n_q, B, H, bq, hd)
+    else:
+        # Inference layout: single scan over the static (iq, ikv) pair list —
+        # lowest HLO footprint, no transpose pass exists to pay for.
+        pairs = jnp.asarray(_pair_list(n_q, n_kv, n_kv_per_q, causal))  # (P, 2)
+        m0 = constrain(jnp.full((n_q, B, H, bq), NEG_INF, jnp.float32), "attn_carry")
+        l0 = constrain(jnp.zeros((n_q, B, H, bq), jnp.float32), "attn_carry")
+        a0 = constrain(jnp.zeros((n_q, B, H, bq, hd), jnp.float32), "attn_blocks")
+
+        def body(carry, pair):
+            m, l, acc = carry
+            iq, ikv = pair[0], pair[1]
+            qi = jax.lax.dynamic_index_in_dim(qb, iq, 0, keepdims=False)  # (B,H,bq,hd)
+            ki = jax.lax.dynamic_index_in_dim(kb, ikv, 0, keepdims=False)
+            vi = jax.lax.dynamic_index_in_dim(vb, ikv, 0, keepdims=False)
+            qp = jax.lax.dynamic_index_in_dim(qpb, iq, 0, keepdims=False)  # (B, bq)
+            kp = jax.lax.dynamic_index_in_dim(kpb, ikv, 0, keepdims=False)  # (B, bk)
+            mi = jax.lax.dynamic_index_in_dim(m, iq, 0, keepdims=False)
+            li = jax.lax.dynamic_index_in_dim(l, iq, 0, keepdims=False)
+            ai = jax.lax.dynamic_index_in_dim(acc, iq, 0, keepdims=False)
+            m_new, l_new, a_new = online_update((mi, li, ai), qi, ki, vi, qp, kp)
+            m = jax.lax.dynamic_update_index_in_dim(m, m_new, iq, 0)
+            l = jax.lax.dynamic_update_index_in_dim(l, l_new, iq, 0)
+            acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, iq, 0)
+            return (m, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), pairs)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, S, H * hd)  # (B,S,H*hd)
+    return out[:, :S_orig].astype(q.dtype)
+
+
+def attn_apply_train(
+    params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    window: int = -1,
+    constrain=lambda t, s: t,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (training / prefill)."""
+    tp = getattr(constrain, "tp", 1)
+    q, k, v = _qkv(params, x, positions, cfg, tp, constrain)
+    v = constrain(v, "act_kv_heads")
+    # prefill (return_kv) is forward-only: the pair-scan layout is cheaper
+    out = blockwise_attention(q, k, v, positions, positions, window=window,
+                              constrain=constrain,
+                              mode="infer" if return_kv else "train",
+                              kv_map=head_to_kv_map(cfg, tp))
+    out = _unpad_heads(out, cfg, tp) @ params["wo"].astype(dt(cfg, "compute"))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def init_cache(cfg: ModelConfig, B: int, S_ctx: int, window: int, dtype) -> KVCache:
+    """Cache for one layer. Windowed layers allocate only `window` slots."""
+    slots = S_ctx if window < 0 else min(window, S_ctx)
+    hd = cfg.resolved_head_dim()
+    return KVCache(
+        k=jnp.zeros((B, slots, cfg.num_kv_heads, hd), dtype),
+        v=jnp.zeros((B, slots, cfg.num_kv_heads, hd), dtype),
+        pos=jnp.full((B, slots), -1, jnp.int32),
+    )
+
+
+def attn_apply_decode(
+    params,
+    x: jax.Array,  # (B, 1, d)
+    cur_pos: jax.Array,  # scalar int32: absolute position of the new token
+    cache: KVCache,
+    cfg: ModelConfig,
+    *,
+    window: int = -1,
+    constrain=lambda t, s: t,
+):
+    """One-token decode against the cache; returns (out, new_cache)."""
+    cdt = dt(cfg, "compute")
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim()
+    H, Kv = cfg.num_heads, cfg.num_kv_heads
+    G = H // Kv  # decode: heads are unsharded, no padding needed
+    positions = jnp.broadcast_to(cur_pos[None], (B, 1))
+    q, k_new, v_new = _qkv(params, x, positions, cfg, tp=1)
+
+    slots = cache.k.shape[1]
+    slot = (cur_pos % slots).astype(jnp.int32)  # identity when slots covers ctx
+    z = jnp.zeros((), jnp.int32)  # index dtypes must match under x64 mode
+    k_cache = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (z, slot, z, z))
+    v_cache = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (z, slot, z, z))
+    pos_cache = jax.lax.dynamic_update_slice(
+        cache.pos, jnp.broadcast_to(cur_pos[None, None], (B, 1)).astype(jnp.int32), (z, slot)
+    )
+
+    qg = q.reshape(B, Kv, G, hd)  # (B,Kv,G,hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(cdt),
+                   preferred_element_type=jnp.float32) * hd**-0.5
+    valid = (pos_cache >= 0) & (pos_cache <= cur_pos)
+    if window > 0:
+        valid = valid & (cur_pos - pos_cache < window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(cdt), v_cache.astype(cdt),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H * hd).astype(cdt) @ params["wo"].astype(cdt)
+    return out, KVCache(k_cache, v_cache, pos_cache)
+
+
+def cache_from_prefill(cache: KVCache, k: jax.Array, v: jax.Array,
+                       positions: jax.Array, window: int) -> KVCache:
+    """Fill a pre-allocated decode cache from prefill KV.
+
+    Windowed layers keep only the last `slots` positions, ring-indexed by
+    absolute position (so subsequent decode steps write consistently)."""
+    B, S = positions.shape
+    slots = cache.k.shape[1]
+    if S <= slots:
+        return KVCache(
+            jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0)),
+            jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0)),
+            jax.lax.dynamic_update_slice(cache.pos, positions.astype(jnp.int32), (0, 0)),
+        )
+    k_tail, v_tail, p_tail = k[:, -slots:], v[:, -slots:], positions[:, -slots:]
+    idx = p_tail % slots  # (B, slots)
+    bidx = jnp.arange(B)[:, None]
+    return KVCache(
+        cache.k.at[bidx, idx].set(k_tail.astype(cache.k.dtype)),
+        cache.v.at[bidx, idx].set(v_tail.astype(cache.v.dtype)),
+        cache.pos.at[bidx, idx].set(p_tail.astype(jnp.int32)),
+    )

@@ -1,0 +1,27 @@
+"""Modality-frontend STUBS (per the assignment: [audio]/[vlm] entries specify
+the transformer backbone only; input_specs() provides precomputed frame/patch
+embeddings).
+
+These stand in for whisper's mel+conv stack and InternViT: smoke tests and
+examples draw synthetic embeddings with the right shapes/statistics; the
+dry-run only ever sees ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+WHISPER_FRAMES = 1500  # 30 s audio -> conv-downsampled frame count
+INTERNVIT_TOKENS = 256  # 448px / patch14 -> 1024, pixel-shuffled 4x -> 256
+
+
+def audio_frames_stub(key, B: int, cfg: ModelConfig, dtype=jnp.float32) -> jax.Array:
+    """Precomputed post-conv mel-frame embeddings (B, F, d)."""
+    return jax.random.normal(key, (B, cfg.encoder_frames, cfg.d_model), dtype)
+
+
+def patch_embeds_stub(key, B: int, cfg: ModelConfig, dtype=jnp.float32) -> jax.Array:
+    """Precomputed InternViT patch embeddings projected to LM width (B, P, d)."""
+    return jax.random.normal(key, (B, cfg.frontend_tokens, cfg.d_model), dtype)

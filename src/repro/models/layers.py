@@ -1,0 +1,154 @@
+"""Common transformer layers — pure-pytree functional modules (no flax).
+
+Convention: every module is an (init, apply) pair. `init(key, cfg, ...)`
+returns a params dict; `apply(params, x, ...)` is shape-polymorphic and
+dtype-disciplined: matmuls run in cfg.compute_dtype, normalizations and
+softmax statistics in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dt(cfg: ModelConfig, kind: str = "param"):
+    return jnp.dtype(cfg.param_dtype if kind == "param" else cfg.compute_dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, cfg: ModelConfig, scale: float | None = None):
+    scale = scale if scale is not None else d_in**-0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dt(cfg))
+
+
+def rmsnorm_init(d: int, cfg: ModelConfig):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d: int | None = None, f: int | None = None):
+    d = d or cfg.d_model
+    f = f or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d, f, cfg),
+            "w_up": dense_init(ks[1], d, f, cfg),
+            "w_down": dense_init(ks[2], f, d, cfg),
+        }
+    return {"w_up": dense_init(ks[0], d, f, cfg), "w_down": dense_init(ks[1], f, d, cfg)}
+
+
+def mlp_apply(params, x: jax.Array, cfg: ModelConfig, constrain=lambda t, s: t) -> jax.Array:
+    cdt = dt(cfg, "compute")
+    x = x.astype(cdt)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"].astype(cdt)) * (x @ params["w_up"].astype(cdt))
+    else:
+        h = jax.nn.gelu(x @ params["w_up"].astype(cdt))
+    h = constrain(h, "ffn")
+    return h @ params["w_down"].astype(cdt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + sequence-chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig):
+    # table std d^-1/2: lookups are rescaled by sqrt(d) below, and tied
+    # logits x @ table^T come out unit-variance without a separate scale.
+    # Rows beyond vocab_size are TP padding (cfg.padded_vocab) — never
+    # indexed, and masked out of logits/CE.
+    table = (jax.random.normal(key, (cfg.padded_vocab(), cfg.d_model), jnp.float32)
+             * cfg.d_model**-0.5).astype(dt(cfg))
+    return {"table": table}
+
+
+def embed_lookup(params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return params["table"].astype(dt(cfg, "compute"))[tokens] * (cfg.d_model**0.5)
+
+
+def unembed_init(key, cfg: ModelConfig):
+    return {"w": dense_init(key, cfg.d_model, cfg.padded_vocab(), cfg)}
+
+
+def logits_from(params_embed, params_unembed, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Logits over the PADDED vocab (pad ids masked to -inf)."""
+    cdt = dt(cfg, "compute")
+    if cfg.tie_embeddings:
+        logits = x.astype(cdt) @ params_embed["table"].astype(cdt).T
+    else:
+        logits = x.astype(cdt) @ params_unembed["w"].astype(cdt)
+    if cfg.padded_vocab() != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab()) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits
+
+
+def chunked_softmax_xent(
+    x: jax.Array,
+    labels: jax.Array,
+    loss_mask: jax.Array,
+    params_embed,
+    params_unembed,
+    cfg: ModelConfig,
+    constrain=lambda t, s: t,
+) -> jax.Array:
+    """Mean CE over masked positions without materializing (B, S, V).
+
+    Scans over sequence chunks; per chunk the (B, c, V) logits live briefly
+    (sharded over the model axis via `constrain`) and reduce to fp32 scalars.
+    """
+    B, S, _ = x.shape
+    c = min(cfg.logits_chunk, S)
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        loss_mask = jnp.pad(loss_mask, ((0, 0), (0, pad)))
+    n_chunks = x.shape[1] // c
+    xs = x.reshape(B, n_chunks, c, -1).swapaxes(0, 1)  # (n, B, c, d)
+    ls = labels.reshape(B, n_chunks, c).swapaxes(0, 1)
+    ms = loss_mask.reshape(B, n_chunks, c).swapaxes(0, 1)
+
+    def body(carry, inp):
+        xc, lc, mc = inp
+        logits = logits_from(params_embed, params_unembed, xc, cfg)  # (B, c, V)
+        logits = constrain(logits.astype(jnp.float32), "logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),) * 2, (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

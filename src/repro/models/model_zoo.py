@@ -1,0 +1,97 @@
+"""Unified model API: build(cfg) dispatches to the right assembly and exposes
+(init, train_loss, prefill, decode_step, init_decode_state, input_specs).
+
+`input_specs(cfg, shape)` returns jax.ShapeDtypeStruct stand-ins for every
+model input of a given (arch x shape) cell — weak-type-correct, shardable, no
+device allocation — consumed by launch/dryrun.py. `make_batch` materializes
+the same structure with synthetic data for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import encdec, transformer
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], PyTree]
+    train_loss: Callable[..., tuple[jax.Array, Dict[str, jax.Array]]]
+    prefill: Callable[..., tuple[jax.Array, PyTree]]
+    decode_step: Callable[..., tuple[jax.Array, PyTree]]
+    init_decode_state: Callable[[int, int], PyTree]
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            train_loss=lambda p, b, constrain=lambda t, s: t: encdec.train_loss(
+                p, b, cfg, constrain=constrain),
+            prefill=lambda p, b, constrain=lambda t, s: t, total_slots=None: encdec.prefill(
+                p, b, cfg, constrain=constrain, total_slots=total_slots),
+            decode_step=lambda p, t, pos, st, constrain=lambda t_, s: t_: encdec.decode_step(
+                p, t, pos, st, cfg, constrain=constrain),
+            init_decode_state=lambda B, S: encdec.init_decode_state(cfg, B, S),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(key, cfg),
+        train_loss=lambda p, b, constrain=lambda t, s: t: transformer.train_loss(
+            p, b, cfg, constrain=constrain),
+        prefill=lambda p, b, constrain=lambda t, s: t, total_slots=None: transformer.prefill(
+            p, b, cfg, constrain=constrain, total_slots=total_slots),
+        decode_step=lambda p, t, pos, st, constrain=lambda t_, s: t_: transformer.decode_step(
+            p, t, pos, st, cfg, constrain=constrain),
+        init_decode_state=lambda B, S: transformer.init_decode_state(cfg, B, S),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs / synthetic batches per (arch x shape) cell
+# ---------------------------------------------------------------------------
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Text tokens in a cell; multimodal prefixes count toward seq_len."""
+    if cfg.frontend_tokens:
+        return seq_len - cfg.frontend_tokens
+    return seq_len
+
+
+def batch_shapes(cfg: ModelConfig, shape: ShapeCell, batch: int | None = None) -> Dict[str, Any]:
+    """Shapes+dtypes of the data batch for train/prefill cells."""
+    B = batch if batch is not None else shape.global_batch
+    S = _text_len(cfg, shape.seq_len)
+    spec: Dict[str, Any] = {"tokens": ((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        spec["encoder_frames"] = ((B, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend_tokens:
+        spec["frontend_embeds"] = ((B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+    return spec
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell, batch: int | None = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        k: jax.ShapeDtypeStruct(shp, dt) for k, (shp, dt) in batch_shapes(cfg, shape, batch).items()
+    }
+
+
+def make_batch(key: jax.Array, cfg: ModelConfig, shape: ShapeCell, batch: int | None = None) -> Dict[str, jax.Array]:
+    """Synthetic batch matching input_specs (smoke tests / examples)."""
+    out = {}
+    for name, (shp, dt) in batch_shapes(cfg, shape, batch).items():
+        key, sub = jax.random.split(key)
+        if dt == jnp.int32:
+            out[name] = jax.random.randint(sub, shp, 0, cfg.vocab_size, dt)
+        else:
+            out[name] = jax.random.normal(sub, shp, jnp.float32).astype(dt)
+    return out

@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a u_t)                      recurrence gate
+    i_t = sigmoid(W_i u_t)                      input gate
+    log a_t = c * r_t * log sigmoid(Lambda)     per-channel, c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ u_t)
+
+The recurrence is a first-order per-channel linear scan, so training uses
+jax.lax.associative_scan over time — O(T) work, O(log T) depth, and it
+parallelizes over the sequence (this is the TPU-native answer to "the RNN is
+sequential": no kernel needed, XLA fuses the combine). Decode is the O(1)
+step. A width-4 causal depthwise conv precedes the LRU, as in Griffin.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, dt
+
+LRU_C = 8.0
+CONV_W = 4
+
+
+def rglru_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate": dense_init(ks[0], d, d, cfg),  # gelu branch
+        "w_x": dense_init(ks[1], d, d, cfg),  # recurrent branch input
+        "conv_w": (jax.random.normal(ks[2], (CONV_W, d), jnp.float32) * 0.1).astype(dt(cfg)),
+        "conv_b": jnp.zeros((d,), jnp.float32),
+        "w_a": dense_init(ks[3], d, d, cfg),
+        "w_i": dense_init(ks[4], d, d, cfg),
+        "lam": jnp.full((d,), 2.0, jnp.float32),  # sigmoid(2) ~ .88 slow decay
+        "w_out": dense_init(ks[5], d, d, cfg),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array  # (B, d) fp32 recurrent state
+    conv: jax.Array  # (B, CONV_W-1, d) conv tail
+
+
+def rglru_state_init(cfg: ModelConfig, B: int, dtype) -> RGLRUState:
+    return RGLRUState(
+        h=jnp.zeros((B, cfg.d_model), jnp.float32),
+        conv=jnp.zeros((B, CONV_W - 1, cfg.d_model), dtype),
+    )
+
+
+def _conv1d_causal(params, u: jax.Array, tail: jax.Array):
+    """Depthwise causal conv, width CONV_W. u: (B,T,d); tail: (B,CONV_W-1,d).
+    Returns (out (B,T,d), new_tail)."""
+    w = params["conv_w"].astype(u.dtype)
+    ext = jnp.concatenate([tail.astype(u.dtype), u], axis=1)  # (B, T+3, d)
+    out = sum(ext[:, i : i + u.shape[1]] * w[i] for i in range(CONV_W))
+    return out + params["conv_b"].astype(u.dtype), ext[:, -(CONV_W - 1) :]
+
+
+def _lru_gates(params, u, cfg: ModelConfig):
+    cdt = dt(cfg, "compute")
+    r = jax.nn.sigmoid((u @ params["w_a"].astype(cdt)).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ params["w_i"].astype(cdt)).astype(jnp.float32))
+    log_a = LRU_C * r * jax.nn.log_sigmoid(params["lam"])  # (..., d) < 0
+    b = jnp.sqrt(-jnp.expm1(2.0 * log_a)) * i * u.astype(jnp.float32)  # sqrt(1-a^2)
+    return log_a, b
+
+
+def rglru_apply_train(params, x: jax.Array, state: RGLRUState, cfg: ModelConfig,
+                      constrain=lambda t, s: t):
+    """x: (B, T, d); returns (out, new_state)."""
+    cdt = dt(cfg, "compute")
+    gate = constrain(jax.nn.gelu(x.astype(cdt) @ params["w_gate"].astype(cdt)), "act_chan")
+    u = constrain(x.astype(cdt) @ params["w_x"].astype(cdt), "act_chan")
+    u, conv_tail = _conv1d_causal(params, u, state.conv)
+    log_a, b = _lru_gates(params, u, cfg)
+    log_a = constrain(log_a, "act_chan")
+    b = constrain(b, "act_chan")
+
+    # prepend carried state as a pseudo-step: h_0 carries in via b-slot
+    log_a_ext = jnp.concatenate([jnp.zeros_like(log_a[:, :1]), log_a], axis=1)
+    b_ext = jnp.concatenate([state.h[:, None, :], b], axis=1)
+
+    def combine(left, right):
+        la1, b1 = left
+        la2, b2 = right
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a_ext, b_ext), axis=1)
+    h = h[:, 1:]  # drop the carry pseudo-step
+    out = (gate * h.astype(cdt)) @ params["w_out"].astype(cdt)
+    return out, RGLRUState(h[:, -1, :], conv_tail)
+
+
+def rglru_apply_decode(params, x: jax.Array, state: RGLRUState, cfg: ModelConfig,
+                       constrain=lambda t, s: t):
+    """x: (B, 1, d) single step."""
+    cdt = dt(cfg, "compute")
+    xt = x.astype(cdt)
+    gate = jax.nn.gelu(xt @ params["w_gate"].astype(cdt))[:, 0]
+    u = (xt @ params["w_x"].astype(cdt))[:, 0]  # (B, d)
+    ext = jnp.concatenate([state.conv.astype(u.dtype), u[:, None]], axis=1)  # (B,4,d)
+    w = params["conv_w"].astype(u.dtype)
+    u = sum(ext[:, i] * w[i] for i in range(CONV_W)) + params["conv_b"].astype(u.dtype)
+    log_a, b = _lru_gates(params, u, cfg)
+    h = jnp.exp(log_a) * state.h + b
+    out = ((gate * h.astype(cdt)) @ params["w_out"].astype(cdt))[:, None, :]
+    return out, RGLRUState(h, ext[:, 1:])

@@ -1,0 +1,207 @@
+"""RWKV-6 "Finch" time-mix and channel-mix (arXiv:2404.05892).
+
+Attention-free temporal mixer with *data-dependent* per-channel decay
+(the defining Finch feature):
+
+    w_t = exp(-exp(w0 + lora_w(x_t)))                 in (0,1), per channel
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T               per head, (K, V) state
+    o_t = S_{t-1}^T r_t + (r_t . (u ⊙ k_t)) v_t       current token uses bonus u
+
+Training runs a *chunked* parallel form: sequence chunks of size CHUNK are
+processed with an exact intra-chunk pairwise matrix (c, c, K) — all decay
+exponentials are differences cum_{t-1} - cum_i <= 0 so exp() never overflows
+— while the (B, H, K, V) state carries across chunks through a lax.scan.
+Cost is O(T * c * K) time and O(c^2 K) live memory: sub-quadratic in T, which
+is what qualifies rwkv6 for the long_500k cell. Decode is the plain O(1)
+recurrence. (On real TPUs this chunk body is the natural Pallas kernel; the
+jnp form keeps HLO-level roofline analysis exact.)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, dt, rmsnorm, rmsnorm_init
+
+CHUNK = 64
+LORA_RANK = 64
+
+
+def timemix_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 9)
+    return {
+        "mu": jnp.full((4, d), 0.5, jnp.float32),  # shift-mix for r,k,v,g
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "w0": jnp.full((d,), -6.0, jnp.float32),  # decay bias (slow default)
+        "lora_wA": dense_init(ks[0], d, LORA_RANK, cfg),
+        "lora_wB": (jnp.zeros((LORA_RANK, d))).astype(dt(cfg)),
+        "wr": dense_init(ks[1], d, d, cfg),
+        "wk": dense_init(ks[2], d, d, cfg),
+        "wv": dense_init(ks[3], d, d, cfg),
+        "wg": dense_init(ks[4], d, d, cfg),
+        "wo": dense_init(ks[5], d, d, cfg),
+        "u": jnp.zeros((d,), jnp.float32),  # per-channel bonus
+        "gn_scale": jnp.ones((d,), jnp.float32),  # per-head groupnorm
+    }
+
+
+class TimeMixState(NamedTuple):
+    S: jax.Array  # (B, H, K, V) wkv state
+    x_prev: jax.Array  # (B, d) last token (for token shift)
+
+
+def timemix_state_init(cfg: ModelConfig, B: int, dtype) -> TimeMixState:
+    K = cfg.rwkv_head_dim
+    H = cfg.d_model // K
+    return TimeMixState(
+        S=jnp.zeros((B, H, K, K), jnp.float32),
+        x_prev=jnp.zeros((B, cfg.d_model), dtype),
+    )
+
+
+def _shift_mix(x, x_shift, mu):
+    return x + (x_shift - x) * mu
+
+
+def _decays(params, xw, cfg: ModelConfig):
+    cdt = dt(cfg, "compute")
+    lora = jnp.tanh(xw.astype(cdt) @ params["lora_wA"].astype(cdt)) @ params["lora_wB"].astype(cdt)
+    logw = -jnp.exp(jnp.clip(params["w0"] + lora.astype(jnp.float32), -8.0, 2.0))
+    return logw  # (..., d), log of decay in (-inf, 0)
+
+
+def _groupnorm(params, o, H):
+    B, T, d = o.shape
+    oh = o.reshape(B, T, H, d // H).astype(jnp.float32)
+    mean = jnp.mean(oh, axis=-1, keepdims=True)
+    var = jnp.var(oh, axis=-1, keepdims=True)
+    oh = (oh - mean) * jax.lax.rsqrt(var + 1e-5)
+    return (oh.reshape(B, T, d) * params["gn_scale"]).astype(o.dtype)
+
+
+def timemix_apply_chunked(params, x: jax.Array, state: TimeMixState, cfg: ModelConfig,
+                          constrain=lambda t, s: t):
+    """x: (B, T, d) with T % CHUNK == 0. Returns (out, new_state)."""
+    cdt = dt(cfg, "compute")
+    B, T, d = x.shape
+    K = cfg.rwkv_head_dim
+    H = d // K
+    c = min(CHUNK, T)
+    pad = (-T) % c  # trailing pad steps are exact no-ops: k=0, decay=1
+    n = (T + pad) // c
+
+    # token shift over the full sequence (cheap), chunk the projections
+    x_shift = jnp.concatenate([state.x_prev[:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+    mu = params["mu"]
+    xr = _shift_mix(x, x_shift, mu[0]).astype(cdt)
+    xk = _shift_mix(x, x_shift, mu[1]).astype(cdt)
+    xv = _shift_mix(x, x_shift, mu[2]).astype(cdt)
+    xg = _shift_mix(x, x_shift, mu[3]).astype(cdt)
+    xw = _shift_mix(x, x_shift, params["mu_w"])
+
+    r = (xr @ params["wr"].astype(cdt)).reshape(B, T, H, K)
+    k = (xk @ params["wk"].astype(cdt)).reshape(B, T, H, K)
+    v = (xv @ params["wv"].astype(cdt)).reshape(B, T, H, K)
+    g = jax.nn.silu(xg @ params["wg"].astype(cdt))  # (B, T, d)
+    logw = _decays(params, xw, cfg).reshape(B, T, H, K)  # fp32
+    u = params["u"].reshape(H, K)
+
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))  # log 1 = 0
+
+    # chunk: (n, B, c, H, K) fp32 for the state math
+    def chunked(t):
+        return t.reshape(B, n, c, H, K).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+
+    rc, kc, vc, wc = (constrain(chunked(t), "rwkv_chunks") for t in (r, k, v, logw))
+    S0 = constrain(state.S, "rwkv_state")
+
+    @jax.checkpoint  # backward recomputes the (c, c) pairwise block, never stores it
+    def body(S, inp):
+        ri, ki, vi, lwi = inp  # (B, c, H, K)
+        cum = jnp.cumsum(lwi, axis=1)  # inclusive (B, c, H, K)
+        cum_prev = cum - lwi  # exclusive: sum_{j<t}
+        # intra-chunk pairwise: A[t,i] = sum_a r_t k_i exp(cum_prev_t - cum_i), i < t
+        diff = cum_prev[:, :, None] - cum[:, None, :]  # (B, c, c, H, K)
+        tri = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])[None, :, :, None, None]
+        Aij = jnp.sum(ri[:, :, None] * ki[:, None, :] * jnp.exp(diff) * tri, axis=-1)
+        # diagonal: bonus term
+        Adiag = jnp.sum(ri * u[None, None] * ki, axis=-1)  # (B, c, H)
+        A = Aij + Adiag[:, :, None] * jnp.eye(c)[None, :, :, None]  # (B, c, c, H)
+        o_intra = jnp.einsum("btih,bihv->bthv", A, vi)
+        # cross-chunk: o_cross[t] = (r_t * exp(cum_prev_t)) @ S_in
+        o_cross = jnp.einsum("bthk,bhkv->bthv", ri * jnp.exp(cum_prev), S)
+        # state update: S' = exp(cum_last) * S + sum_i exp(cum_last - cum_i) k_i v_i^T
+        cum_last = cum[:, -1]  # (B, H, K)
+        S_decay = jnp.exp(cum_last)[:, :, :, None] * S
+        kd = ki * jnp.exp(cum_last[:, None] - cum)  # (B, c, H, K)
+        S_new = S_decay + jnp.einsum("bthk,bthv->bhkv", kd, vi)
+        return S_new, o_intra + o_cross
+
+    S_new, o = jax.lax.scan(body, S0, (rc, kc, vc, wc))
+    o = o.transpose(1, 0, 2, 3, 4).reshape(B, T + pad, d)[:, :T]  # (B, T, d)
+    o = _groupnorm(params, o, H) * g
+    out = o.astype(cdt) @ params["wo"].astype(cdt)
+    return out, TimeMixState(S_new, x[:, -1, :])
+
+
+def timemix_apply_decode(params, x: jax.Array, state: TimeMixState, cfg: ModelConfig,
+                         constrain=lambda t, s: t):
+    """x: (B, 1, d) single-token recurrence."""
+    cdt = dt(cfg, "compute")
+    B, _, d = x.shape
+    K = cfg.rwkv_head_dim
+    H = d // K
+    xt = x[:, 0]
+    xs = state.x_prev.astype(xt.dtype)
+    mu = params["mu"]
+    proj = lambda name, m: (_shift_mix(xt, xs, m).astype(cdt) @ params[name].astype(cdt))
+    r = proj("wr", mu[0]).reshape(B, H, K).astype(jnp.float32)
+    k = proj("wk", mu[1]).reshape(B, H, K).astype(jnp.float32)
+    v = proj("wv", mu[2]).reshape(B, H, K).astype(jnp.float32)
+    g = jax.nn.silu(_shift_mix(xt, xs, mu[3]).astype(cdt) @ params["wg"].astype(cdt))
+    logw = _decays(params, _shift_mix(xt, xs, params["mu_w"]), cfg).reshape(B, H, K)
+    u = params["u"].reshape(H, K)
+
+    # o = S^T r + (r . (u*k)) v ; S' = diag(w) S + k v^T
+    o = jnp.einsum("bhk,bhkv->bhv", r, state.S) + jnp.sum(r * u * k, -1, keepdims=True) * v
+    S_new = jnp.exp(logw)[..., None] * state.S + k[..., None] * v[:, :, None, :]
+    o = o.reshape(B, 1, d)
+    o = _groupnorm(params, o.astype(cdt), H) * g[:, None, :]
+    out = o.astype(cdt) @ params["wo"].astype(cdt)
+    return out, TimeMixState(S_new, xt)
+
+
+# ---------------------------------------------------------------------------
+# channel mix
+# ---------------------------------------------------------------------------
+
+def chanmix_init(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "wk": dense_init(ks[0], d, f, cfg),
+        "wv": dense_init(ks[1], f, d, cfg),
+        "wr": dense_init(ks[2], d, d, cfg),
+    }
+
+
+def chanmix_apply(params, x: jax.Array, x_prev: jax.Array, cfg: ModelConfig):
+    """x: (B, T, d); x_prev: (B, d) last token of the previous call.
+    Returns (out, new_x_prev)."""
+    cdt = dt(cfg, "compute")
+    x_shift = jnp.concatenate([x_prev[:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+    xk = _shift_mix(x, x_shift, params["mu_k"]).astype(cdt)
+    xr = _shift_mix(x, x_shift, params["mu_r"]).astype(cdt)
+    kk = jnp.square(jax.nn.relu(xk @ params["wk"].astype(cdt)))
+    out = jax.nn.sigmoid(xr @ params["wr"].astype(cdt)) * (kk @ params["wv"].astype(cdt))
+    return out, x[:, -1, :]

@@ -1,0 +1,15 @@
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+from repro.optim.schedule import wsd_schedule, cosine_schedule, constant_schedule
+from repro.optim.compression import topk_compress_decompress, CompressionState
+
+__all__ = [
+    "AdamConfig",
+    "AdamState",
+    "adam_init",
+    "adam_update",
+    "wsd_schedule",
+    "cosine_schedule",
+    "constant_schedule",
+    "topk_compress_decompress",
+    "CompressionState",
+]

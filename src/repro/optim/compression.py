@@ -1,0 +1,54 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 2+ pods the DP all-reduce crosses the DCN (slow inter-pod links), so we
+provide top-k sparsification with error feedback (Stich et al. style): keep
+the k largest-magnitude entries per tensor, carry the residual into the next
+step. Convergence-safe (error feedback makes it unbiased-in-the-limit) and
+cuts cross-pod all-reduce bytes by 1/ratio.
+
+Applied only to the *pod* axis reduction in the training step (see
+launch/train.py); the intra-pod ICI all-reduce stays dense.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class CompressionState(NamedTuple):
+    residual: PyTree  # error-feedback accumulator, same structure as grads
+
+
+def compression_init(grads_like: PyTree) -> CompressionState:
+    return CompressionState(jax.tree.map(lambda g: jnp.zeros_like(g), grads_like))
+
+
+def topk_compress_decompress(
+    grads: PyTree, state: CompressionState, ratio: float = 0.01
+) -> tuple[PyTree, CompressionState]:
+    """Returns (sparsified-but-dense grads, new residual state).
+
+    The output has the same dense layout (so it can feed an ordinary psum) but
+    only ceil(ratio * n) nonzeros per tensor — a real deployment pairs this
+    with a sparse collective; in XLA-land the win is modeled at the roofline
+    level (collective_bytes * ratio) and validated numerically here.
+    """
+
+    def one(g: jax.Array, r: jax.Array) -> tuple[jax.Array, jax.Array]:
+        acc = g.astype(jnp.float32) + r.astype(jnp.float32)
+        flat = acc.reshape(-1)
+        k = max(1, int(ratio * flat.size))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = (jnp.abs(flat) >= thresh).astype(flat.dtype)
+        kept = flat * mask
+        new_resid = (flat - kept).reshape(g.shape)
+        return kept.reshape(g.shape).astype(g.dtype), new_resid.astype(r.dtype)
+
+    pairs = jax.tree.map(one, grads, state.residual)
+    compressed = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    residual = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return compressed, CompressionState(residual)

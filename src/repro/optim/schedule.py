@@ -1,0 +1,37 @@
+"""LR schedules. WSD (warmup-stable-decay) is required by minicpm-2b's
+training recipe (arXiv:2404.06395); cosine is the default for the rest."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn
+
+
+def wsd_schedule(peak_lr: float, warmup_steps: int, stable_steps: int, decay_steps: int,
+                 min_ratio: float = 0.01):
+    """Warmup-Stable-Decay: linear warmup, flat plateau, exponential-ish
+    (here: linear in log-space) decay tail."""
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        decay_start = warmup_steps + stable_steps
+        frac = jnp.clip((step - decay_start) / max(decay_steps, 1), 0.0, 1.0)
+        decay = peak_lr * jnp.exp(frac * jnp.log(min_ratio))
+        return jnp.where(
+            step < warmup_steps, warm, jnp.where(step < decay_start, peak_lr, decay)
+        )
+
+    return fn

@@ -1,0 +1,202 @@
+"""Logical-axis sharding rules: one table maps every parameter, activation
+tag, optimizer slot, and decode-state leaf to a PartitionSpec.
+
+Scheme (MaxText-style FSDP + TP, DP over the pod axis by default):
+
+  batch axes       = ("pod", "data")  — all data parallelism
+  "model" axis     = tensor parallel (attention heads / ffn hidden / vocab /
+                     MoE experts) — 16-way intra-pod (one ICI torus axis)
+  FSDP             = params additionally sharded over "data" on a non-TP dim;
+                     XLA all-gathers them per scan step (overlapped by the
+                     latency-hiding scheduler)
+
+Param rules are keyed on the flattened pytree path (trailing dims only, so
+scan-stacked leading layer axes are transparent).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+BATCH = ("pod", "data")  # collapses to ("data",) on single-pod meshes
+
+
+def _batch_axes(mesh: Mesh):
+    axes = tuple(a for a in BATCH if a in mesh.axis_names)
+    return axes if len(axes) > 1 else axes[0] if axes else None
+
+
+# (path regex, spec for the TRAILING dims; leading dims padded with None)
+PARAM_RULES: Sequence[Tuple[str, Tuple]] = (
+    (r"embed/table$", ("model", "data")),  # (V, d): vocab-TP + FSDP
+    (r"unembed/w$", ("data", "model")),  # (d, V)
+    (r"(attn|xattn)/w[qkv]$", ("data", "model")),  # (d, H*hd)
+    (r"(attn|xattn)/wo$", ("model", "data")),  # (H*hd, d)
+    (r"moe/router$", (None, None)),  # (d, E) replicated: loss-bearing fp32
+    (r"moe/w_(gate|up)$", ("model", "data", None)),  # (E, d, f): EP + FSDP
+    (r"moe/w_down$", ("model", None, "data")),  # (E, f, d)
+    (r"mlp/w_(gate|up)$", ("data", "model")),  # (d, f)
+    (r"mlp/w_down$", ("model", "data")),  # (f, d)
+    (r"rwkv/(wr|wk|wv|wg)$", ("data", "model")),  # (d, d): channels TP
+    (r"rwkv/wo$", ("model", "data")),
+    (r"rwkv/lora_wA$", ("data", None)),
+    (r"rwkv/lora_wB$", (None, "model")),
+    (r"cmix/(wk|wr)$", ("data", "model")),
+    (r"cmix/wv$", ("model", "data")),
+    (r"rglru/(w_gate|w_x|w_a|w_i)$", ("data", "model")),  # (d, d): channels TP
+    (r"rglru/w_out$", ("model", "data")),
+    (r"rglru/conv_w$", (None, "model")),  # (4, d) depthwise
+    # GP core (data-parallel local params live on the batch axes)
+    (r"q_(mu|logS)$", (BATCH, None)),
+    (r"^Z$", (None, None)),
+)
+
+# decode-state rules (path, trailing spec). KV caches shard batch + SLOTS
+# (sequence) over the model axis — flash-decode style: scores/softmax over a
+# sharded kv-length psum partial max/sum, and the (tiny) attention output
+# all-reduces. This is what fits a 32k x 128-batch arctic cache in HBM
+# (kv-head sharding can't: Kv=8 < tp=16).
+STATE_RULES: Sequence[Tuple[str, Tuple]] = (
+    (r"kv/[kv]$", (BATCH, "model", None, None)),  # (B, slots, Kv, hd)
+    (r"kv/pos$", (BATCH, "model")),  # (B, slots)
+    (r"cross_[kv]$", (BATCH, "model", None, None)),  # (B, F, Kv, hd); F=1500 -> replicated
+    (r"enc_pos$", (BATCH, None)),
+    (r"rwkv_tm/S$", (BATCH, "model", None, None)),  # (B, H, K, V)
+    (r"rwkv_tm/x_prev$", (BATCH, "model")),
+    (r"rglru/h$", (BATCH, "model")),  # (B, d)
+    (r"rglru/conv$", (BATCH, None, "model")),  # (B, 3, d)
+    (r"cmix_prev$", (BATCH, "model")),
+)
+
+# activation tags used by models' `constrain` callbacks
+ACT_RULES = {
+    # residual stream: sequence-parallel over the model axis (Megatron SP) —
+    # norms/residual adds are pointwise over S, and it divides the remat
+    # carry stack by tp. Attention/FFN internals reshard to head/ffn layouts.
+    "act_embed": (BATCH, "model", None),  # (B, S, d)
+    "act_heads": (BATCH, None, "model", None),  # (B, S, H, hd)
+    "act_kv_heads": (BATCH, None, "model", None),
+    "ffn": (BATCH, None, "model"),  # (B, S, f)
+    "logits": (BATCH, None, "model"),  # (B, c, V); rank-2 handled below
+    "moe_tokens": ("model", None, None),  # (E, C, d)
+    "moe_ffn": ("model", None, None),  # (E, C, f)
+    # blockwise-attention internals: blocked q/k/v/acc and softmax stats
+    "attn_blocks": (None, BATCH, "model", None, None),  # (n, B, H, blk, hd)
+    "attn_carry": (None, BATCH, "model", None),  # (n_q, B, H, bq)
+    "attn_carry_q": (BATCH, "model", None),  # (B, H, bq) per-q-block stats
+    "attn_carry_qa": (BATCH, "model", None, None),  # (B, H, bq, hd)
+    # rwkv wkv internals: heads over model
+    "rwkv_chunks": (None, BATCH, None, "model", None),  # (n, B, c, H, K)
+    "rwkv_state": (BATCH, "model", None, None),  # (B, H, K, V)
+    # per-channel activations (rglru branch tensors): (B, S, d) channels-TP
+    "act_chan": (BATCH, None, "model"),
+    # MoE entry: (T, d) tokens on the batch axes, replicated over model
+    "moe_input": (BATCH, None),
+    # a2a-EP entry: tokens sharded over batch AND model axes
+    "moe_input_a2a": (BATCH + ("model",), None),
+}
+
+
+def _resolve(entry, mesh: Mesh) -> Optional[Any]:
+    """Map a rule entry (axis name / axis tuple / None) to mesh axes,
+    dropping axes the mesh doesn't have (e.g. "pod" on single-pod)."""
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return entry if entry in mesh.axis_names else None
+    axes = tuple(a for a in entry if a in mesh.axis_names)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _spec_from_trailing(trailing: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Resolve a trailing-dims rule against a concrete shape; any axis whose
+    size does not evenly divide the dim is dropped (jit arguments must shard
+    evenly — padding decisions are made explicitly in the models instead)."""
+    rank = len(shape)
+    resolved = list(_resolve(e, mesh) for e in trailing)
+    if rank < len(resolved):  # tag reused on a lower-rank tensor: keep tail
+        resolved = resolved[len(resolved) - rank :]
+    resolved = [None] * (rank - len(resolved)) + resolved
+    for i, (dim, ax) in enumerate(zip(shape, resolved)):
+        if ax is not None and dim % _axes_size(mesh, ax) != 0:
+            resolved[i] = None
+    return P(*resolved)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))))
+    return "/".join(parts)
+
+
+def _rules_spec(rules, path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    for pat, trailing in rules:
+        if re.search(pat, path):
+            return _spec_from_trailing(trailing, shape, mesh)
+    return P()  # replicate (norm scales, gates, scalars, biases)
+
+
+def param_specs(params: PyTree, mesh: Mesh) -> PyTree:
+    def leaf(path, x):
+        return _rules_spec(PARAM_RULES, _path_str(path), tuple(getattr(x, "shape", ())), mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def state_specs(states: PyTree, mesh: Mesh) -> PyTree:
+    def leaf(path, x):
+        return _rules_spec(STATE_RULES, _path_str(path), tuple(getattr(x, "shape", ())), mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, states)
+
+
+def batch_specs(batch: PyTree, mesh: Mesh) -> PyTree:
+    def leaf(x):
+        shape = tuple(getattr(x, "shape", ()))
+        if not shape:
+            return P()
+        return _spec_from_trailing((BATCH,) + (None,) * (len(shape) - 1), shape, mesh)
+
+    return jax.tree.map(leaf, batch)
+
+
+def to_shardings(specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def make_constrain(mesh: Mesh):
+    """The `constrain(tensor, tag)` callback threaded through the models.
+    Carries `tp` (model-axis size) so attention can pad query heads to an
+    evenly-shardable count."""
+
+    def constrain(t, tag: str):
+        trailing = ACT_RULES.get(tag)
+        if trailing is None:
+            return t
+        spec = _spec_from_trailing(trailing, tuple(t.shape), mesh)
+        return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+    constrain.tp = mesh.shape.get("model", 1)
+    constrain.mesh = mesh
+    return constrain

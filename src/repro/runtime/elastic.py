@@ -1,0 +1,30 @@
+"""Elastic scaling: resume any checkpoint on any mesh.
+
+Checkpoints store full (gathered) arrays; resuming on a different topology is
+re-placement, not resharding of shard files: build the step on the NEW mesh,
+compute its shardings from the same rules table, and restore with them.
+`reshard_for_mesh` is the one-call utility; tests/test_checkpoint.py proves a
+2-device-mesh checkpoint resumes bit-exactly on a 4-device mesh and back.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.parallel import sharding as shd
+
+PyTree = Any
+
+
+def reshard_for_mesh(ckpt_dir: str, abstract_params: PyTree, mesh: Mesh,
+                     step: int | None = None) -> tuple[PyTree, dict]:
+    """Load `ckpt_dir` and place parameters for `mesh` (any device count)."""
+    mgr = CheckpointManager(ckpt_dir)
+    specs = shd.param_specs(abstract_params, mesh)
+    shardings = shd.to_shardings(specs, mesh)
+    tree = {"params": abstract_params}
+    restored, extra = mgr.restore(tree, step=step, shardings={"params": shardings})
+    return restored["params"], extra

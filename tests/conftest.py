@@ -1,0 +1,11 @@
+import os
+
+# Tests must see the real device count (1 CPU) — the 512-device override is
+# exclusively the dry-run's (see launch/dryrun.py). Subprocess-based tests
+# set their own XLA_FLAGS.
+os.environ.pop("XLA_FLAGS", None)
+
+import jax  # noqa: E402
+
+# GP numerics tests compare against O(N^3) oracles: fp64 on CPU.
+jax.config.update("jax_enable_x64", True)

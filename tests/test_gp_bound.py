@@ -1,0 +1,88 @@
+"""Correctness of the collapsed variational bound (paper eq. (2)-(4))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gplvm, inference, psi_stats, svgp
+from repro.core.gp_kernels import RBF
+
+
+def _problem(N=200, M=30, Q=2, D=3, seed=0):
+    key = jax.random.PRNGKey(seed)
+    X = jax.random.normal(key, (N, Q), jnp.float64)
+    kern = RBF(Q)
+    kp = {k: v.astype(jnp.float64) for k, v in kern.init(1.5, 0.8).items()}
+    W = jax.random.normal(jax.random.PRNGKey(1), (Q, D), jnp.float64)
+    Y = jnp.sin(X @ W * 2.0) + 0.1 * jax.random.normal(jax.random.PRNGKey(2), (N, D), jnp.float64)
+    return kern, kp, X, Y
+
+
+def test_bound_below_exact_marginal():
+    kern, kp, X, Y = _problem()
+    beta = jnp.asarray(100.0, jnp.float64)
+    exact = svgp.exact_gp_log_marginal(kern.K(kp, X), Y, beta)
+    stats = psi_stats.exact_stats_rbf(kp, X, Y, X[:30], )
+    terms = svgp.collapsed_bound(kern.K(kp, X[:30]), stats, beta, Y.shape[1])
+    assert float(terms.bound) <= float(exact)
+
+
+def test_bound_tight_when_Z_is_X():
+    kern, kp, X, Y = _problem()
+    beta = jnp.asarray(100.0, jnp.float64)
+    exact = svgp.exact_gp_log_marginal(kern.K(kp, X), Y, beta)
+    stats = psi_stats.exact_stats_rbf(kp, X, Y, X)
+    terms = svgp.collapsed_bound(kern.K(kp, X), stats, beta, Y.shape[1])
+    # jitter-level slack only
+    assert abs(float(exact - terms.bound)) < 0.05 * abs(float(exact)) + 0.5
+
+
+def test_bound_monotone_in_M():
+    kern, kp, X, Y = _problem()
+    beta = jnp.asarray(100.0, jnp.float64)
+    vals = []
+    for M in (5, 15, 60, 200):
+        stats = psi_stats.exact_stats_rbf(kp, X, Y, X[:M])
+        vals.append(float(svgp.collapsed_bound(kern.K(kp, X[:M]), stats, beta, Y.shape[1]).bound))
+    assert vals == sorted(vals), vals
+
+
+def test_prediction_recovers_function():
+    kern, kp, X, Y = _problem(N=300, M=60)
+    beta = jnp.asarray(100.0, jnp.float64)
+    Z = X[:60]
+    stats = psi_stats.exact_stats_rbf(kp, X, Y, Z)
+    terms = svgp.collapsed_bound(kern.K(kp, Z), stats, beta, Y.shape[1])
+    post = svgp.optimal_qu(terms, beta)
+    mean, var = svgp.predict_f(post, kern.K(kp, X[:50], Z), kern.Kdiag(kp, X[:50]))
+    rmse = float(jnp.sqrt(jnp.mean((mean - Y[:50]) ** 2)))
+    assert rmse < 0.3, rmse
+    assert np.all(np.asarray(var) > 0)
+
+
+def test_gplvm_bound_improves_under_adam():
+    key = jax.random.PRNGKey(0)
+    from repro.data.synthetic import gplvm_synthetic
+
+    _, Y = gplvm_synthetic(key, N=128, D=3, Q=1)
+    Y = Y.astype(jnp.float64)
+    params = gplvm.init_params(key, np.asarray(Y), Q=1, M=16)
+    params = jax.tree.map(lambda x: x.astype(jnp.float64), params)
+    l0 = float(gplvm.loss(params, Y))
+    params, hist = inference.fit_adam(gplvm.loss, params, (Y,), steps=60, lr=5e-2)
+    assert hist[-1] < l0 - 0.1, (l0, hist[-1])
+
+
+def test_lbfgs_driver_matches_paper_setup():
+    """The paper optimizes with (scipy) L-BFGS-B; a few iterations must
+    decrease the negative bound."""
+    key = jax.random.PRNGKey(1)
+    from repro.data.synthetic import gplvm_synthetic
+
+    _, Y = gplvm_synthetic(key, N=96, D=3, Q=1)
+    Y = Y.astype(jnp.float64)
+    params = gplvm.init_params(key, np.asarray(Y), Q=1, M=12)
+    params = jax.tree.map(lambda x: x.astype(jnp.float64), params)
+    l0 = float(gplvm.loss(params, Y))
+    _, lf = inference.fit_lbfgs(gplvm.loss, params, (Y,), maxiter=25)
+    assert lf < l0

@@ -1,0 +1,150 @@
+"""Pallas kernel validation: interpret-mode kernel bodies vs the pure-jnp
+oracles, swept over shapes and dtypes (the per-kernel allclose requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.kfu import kfu_pallas
+from repro.kernels.psi1 import psi1_pallas
+from repro.kernels.psi2 import psi2_pallas
+
+SHAPES = [
+    (64, 32, 1),  # paper's Q=1 setting
+    (200, 100, 2),  # paper's M=100
+    (513, 128, 3),  # n not a tile multiple
+    (128, 257, 5),  # m not a tile multiple
+    (31, 7, 4),  # everything small / ragged
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _inputs(N, M, Q, dtype, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    mu = jax.random.normal(ks[0], (N, Q), jnp.float32).astype(dtype)
+    S = (0.05 + jax.random.uniform(ks[1], (N, Q), jnp.float32)).astype(dtype)
+    Z = jax.random.normal(ks[2], (M, Q), jnp.float32).astype(dtype)
+    var = jnp.asarray(1.7, jnp.float32)
+    ls = 0.5 + jax.random.uniform(ks[3], (Q,), jnp.float32)
+    return mu, S, Z, var, ls
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_kfu_matches_ref(shape, dtype):
+    N, M, Q = shape
+    X, _, Z, var, ls = _inputs(N, M, Q, dtype)
+    got = kfu_pallas(X, Z, var, ls, interpret=True)
+    want = ref.kfu_rbf(X.astype(jnp.float32), Z.astype(jnp.float32), var, ls)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_psi1_matches_ref(shape, dtype):
+    N, M, Q = shape
+    mu, S, Z, var, ls = _inputs(N, M, Q, dtype)
+    got = psi1_pallas(mu, S, Z, var, ls, interpret=True)
+    want = ref.psi1_rbf(mu.astype(jnp.float32), S.astype(jnp.float32),
+                        Z.astype(jnp.float32), var, ls)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_psi2_matches_ref(shape, dtype):
+    N, M, Q = shape
+    mu, S, Z, var, ls = _inputs(N, M, Q, dtype)
+    got = psi2_pallas(mu, S, Z, var, ls, interpret=True)
+    want = ref.psi2_rbf(mu.astype(jnp.float32), S.astype(jnp.float32),
+                        Z.astype(jnp.float32), var, ls)
+    scale = float(jnp.max(jnp.abs(want)))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32) / scale,
+                               np.asarray(want) / scale, rtol=tol, atol=tol)
+
+
+def test_ops_gradients_match_ref():
+    """custom_vjp wrappers: gradients through the Pallas forward equal
+    gradients of the oracle (paper Table 2's quantities)."""
+    N, M, Q = 48, 24, 2
+    mu, S, Z, var, ls = _inputs(N, M, Q, jnp.float32)
+    w = jnp.cos(jnp.arange(M * M, dtype=jnp.float32).reshape(M, M) * 0.01)
+
+    def f_ops(mu, S, Z, var, ls):
+        return jnp.sum(ops.psi2(mu, S, Z, var, ls) * w) + jnp.sum(
+            ops.psi1(mu, S, Z, var, ls)) + jnp.sum(ops.kfu(mu, Z, var, ls))
+
+    def f_ref(mu, S, Z, var, ls):
+        return jnp.sum(ref.psi2_rbf(mu, S, Z, var, ls) * w) + jnp.sum(
+            ref.psi1_rbf(mu, S, Z, var, ls)) + jnp.sum(ref.kfu_rbf(mu, Z, var, ls))
+
+    g_ops = jax.grad(f_ops, argnums=(0, 1, 2, 3, 4))(mu, S, Z, var, ls)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2, 3, 4))(mu, S, Z, var, ls)
+    for a, b, name in zip(g_ops, g_ref, "mu S Z var ls".split()):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-4,
+                                   err_msg=name)
+
+
+def test_pallas_stats_equal_jnp_stats():
+    """End-to-end: the sufficient statistics feeding the GP-LVM bound are
+    identical between backend='pallas' and backend='jnp' (f32). The bound
+    epilogue is deterministic given equal stats (test_gp_bound covers it)."""
+    from repro.core import gplvm
+
+    key = jax.random.PRNGKey(0)
+    Y = jax.random.normal(key, (96, 3), jnp.float32)
+    params = gplvm.init_params(key, np.asarray(Y), Q=1, M=16)
+    s_jnp = gplvm.local_stats(params, Y, backend="jnp")
+    s_pal = gplvm.local_stats(params, Y, backend="pallas")
+    for a, b, name in zip(s_jnp, s_pal, s_jnp._fields):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                                   rtol=5e-4, atol=5e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("shape", [(200, 100, 1, 3), (513, 128, 3, 2), (64, 130, 2, 5)])
+def test_fused_suffstats_kernel_matches_ref(shape):
+    """The beyond-paper fused kernel (psi2 + psiY in one pass, §Perf C3)."""
+    from repro.kernels.suffstats import suffstats_pallas
+
+    N, M, Q, D = shape
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    mu = jax.random.normal(ks[0], (N, Q), jnp.float32)
+    S = 0.05 + jax.random.uniform(ks[1], (N, Q), jnp.float32)
+    Y = jax.random.normal(ks[2], (N, D), jnp.float32)
+    Z = jax.random.normal(ks[3], (M, Q), jnp.float32)
+    var = jnp.asarray(1.3, jnp.float32)
+    ls = 0.6 + jax.random.uniform(ks[1], (Q,), jnp.float32)
+    p2, pY = suffstats_pallas(mu, S, Y, Z, var, ls, interpret=True)
+    p2r = ref.psi2_rbf(mu, S, Z, var, ls)
+    pYr = ref.psi1_rbf(mu, S, Z, var, ls).T @ Y
+    np.testing.assert_allclose(np.asarray(p2) / np.abs(p2r).max(),
+                               np.asarray(p2r) / np.abs(p2r).max(), atol=2e-6)
+    np.testing.assert_allclose(np.asarray(pY) / np.abs(pYr).max(),
+                               np.asarray(pYr) / np.abs(pYr).max(), atol=2e-6)
+
+
+def test_fused_jnp_backend_matches_separate():
+    from repro.core import psi_stats
+
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 4)
+    N, M, Q, D = 300, 64, 2, 3
+    mu = jax.random.normal(ks[0], (N, Q), jnp.float32)
+    S = 0.05 + jax.random.uniform(ks[1], (N, Q), jnp.float32)
+    Y = jax.random.normal(ks[2], (N, D), jnp.float32)
+    Z = jax.random.normal(ks[3], (M, Q), jnp.float32)
+    kp = {"log_variance": jnp.asarray(0.3, jnp.float32),
+          "log_lengthscale": jnp.zeros((Q,), jnp.float32)}
+    a = psi_stats.expected_stats_rbf(kp, mu, S, Y, Z, backend="jnp")
+    b = psi_stats.expected_stats_rbf(kp, mu, S, Y, Z, backend="fused")
+    for x, y, name in zip(a, b, a._fields):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=2e-5,
+                                   atol=2e-5, err_msg=name)

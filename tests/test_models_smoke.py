@@ -1,0 +1,101 @@
+"""Per-architecture smoke tests (the assignment's reduced-config requirement):
+one forward/train step on CPU asserting output shapes + finiteness, plus
+decode-after-prefill consistency for every family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, ShapeCell, get_config, get_smoke_config
+from repro.models import model_zoo
+
+CELL = ShapeCell("smoke", 64, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = model_zoo.build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = model_zoo.make_batch(key, cfg, CELL)
+    loss, metrics = jax.jit(lambda p, b: model.train_loss(p, b))(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) > 0
+    # one adam step keeps everything finite
+    from repro.optim import AdamConfig, adam_init, adam_update
+
+    acfg = AdamConfig(lr=1e-3)
+    g = jax.grad(lambda p: model.train_loss(p, batch)[0])(params)
+    p2, _, gnorm = adam_update(g, adam_init(params, acfg), params, acfg)
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+    assert all(np.all(np.isfinite(np.asarray(x, np.float32))) for x in jax.tree.leaves(p2))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode_shapes(arch):
+    cfg = get_smoke_config(arch)
+    model = model_zoo.build(cfg)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    batch = model_zoo.make_batch(key, cfg, CELL)
+    logits, states = model.prefill(params, batch)
+    assert logits.shape == (2, cfg.padded_vocab())
+    pos = jnp.asarray(batch["tokens"].shape[1] + (cfg.frontend_tokens or 0), jnp.int32)
+    logits2, _ = model.decode_step(params, batch["tokens"][:, :1], pos, states)
+    assert logits2.shape == (2, cfg.padded_vocab())
+    assert np.all(np.isfinite(np.asarray(logits2)))
+    # padded vocab entries are masked out
+    if cfg.padded_vocab() != cfg.vocab_size:
+        assert np.all(np.asarray(logits2)[:, cfg.vocab_size :] < -1e29)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_full_forward(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.num_experts:  # capacity-dropping differs between batch shapes
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    model = model_zoo.build(cfg)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    batch = model_zoo.make_batch(key, cfg, ShapeCell("p", 64, 2, "prefill"))
+    bm1 = dict(batch)
+    bm1["tokens"] = batch["tokens"][:, :-1]
+    logits_full, _ = model.prefill(params, batch)
+    _, states = model.prefill(params, bm1)
+    pos = jnp.asarray(batch["tokens"].shape[1] - 1 + (cfg.frontend_tokens or 0), jnp.int32)
+    logits_dec, _ = model.decode_step(params, batch["tokens"][:, -1:], pos, states)
+    scale = float(jnp.max(jnp.abs(logits_full))) + 1e-6
+    err = float(jnp.max(jnp.abs(logits_full - logits_dec)))
+    assert err < 1e-3 * max(scale, 1.0), (arch, err, scale)
+
+
+def test_full_configs_match_assignment():
+    """The full (dry-run) configs carry the exact assigned hyperparameters."""
+    expect = {
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+    }
+    for arch, (L, d, H, kv, f, V) in expect.items():
+        cfg = get_config(arch)
+        got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == (L, d, H, kv, f, V), (arch, got)
+    assert get_config("arctic-480b").num_experts == 128
+    assert get_config("arctic-480b").num_experts_per_tok == 2
+    assert get_config("arctic-480b").moe_dense_residual
+    assert get_config("moonshot-v1-16b-a3b").num_experts_per_tok == 6
+    assert get_config("gemma3-4b").window_pattern.count(-1) == 1  # 5 local : 1 global
+    assert get_config("recurrentgemma-2b").mixer_pattern == ("rglru", "rglru", "attn")
+    assert get_config("whisper-small").encoder_frames == 1500
+    assert get_config("internvl2-2b").frontend_tokens == 256

@@ -1,0 +1,107 @@
+"""Sufficient-statistic properties — the algebra the paper's distribution
+scheme rests on (stats form a commutative monoid over datapoint subsets)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import psi_stats
+from repro.core.gp_kernels import Linear, RBF
+from repro.kernels import ref
+
+
+def _qx(key, N, Q):
+    k1, k2 = jax.random.split(key)
+    mu = jax.random.normal(k1, (N, Q), jnp.float64)
+    S = 0.05 + 0.2 * jax.random.uniform(k2, (N, Q), jnp.float64)
+    return mu, S
+
+
+def test_chunked_psi2_matches_oracle():
+    key = jax.random.PRNGKey(0)
+    mu, S = _qx(key, 217, 3)
+    Z = jax.random.normal(jax.random.PRNGKey(1), (41, 3), jnp.float64)
+    var = jnp.asarray(1.4, jnp.float64)
+    ls = jnp.asarray([0.7, 1.1, 2.0], jnp.float64)
+    a = psi_stats._psi2_rbf_chunked(mu, S, Z, var, ls, chunk=64)
+    b = ref.psi2_rbf(mu, S, Z, var, ls)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-10, atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n1=st.integers(1, 40), n2=st.integers(1, 40), q=st.integers(1, 4),
+    m=st.integers(1, 12), seed=st.integers(0, 2**16),
+)
+def test_stats_combine_equals_full(n1, n2, q, m, seed):
+    """combine(stats(A), stats(B)) == stats(A ∪ B) — the paper's §2 claim."""
+    key = jax.random.PRNGKey(seed)
+    mu, S = _qx(key, n1 + n2, q)
+    Y = jax.random.normal(jax.random.fold_in(key, 1), (n1 + n2, 2), jnp.float64)
+    Z = jax.random.normal(jax.random.fold_in(key, 2), (m, q), jnp.float64)
+    kp = {k: v.astype(jnp.float64) for k, v in RBF(q).init(1.3, 0.9).items()}
+
+    full = psi_stats.expected_stats_rbf(kp, mu, S, Y, Z)
+    a = psi_stats.expected_stats_rbf(kp, mu[:n1], S[:n1], Y[:n1], Z)
+    b = psi_stats.expected_stats_rbf(kp, mu[n1:], S[n1:], Y[n1:], Z)
+    combined = psi_stats.SuffStats.combine(a, b)
+    for f, c in zip(full, combined):
+        np.testing.assert_allclose(np.asarray(f), np.asarray(c), rtol=1e-9, atol=1e-10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 50), q=st.integers(1, 3), m=st.integers(1, 10),
+       seed=st.integers(0, 2**16))
+def test_psi1_bounded_by_variance(n, q, m, seed):
+    """0 < Psi1 <= sigma^2 — expectations of a positive kernel bounded by its
+    amplitude (catches sign/normalization bugs)."""
+    key = jax.random.PRNGKey(seed)
+    mu, S = _qx(key, n, q)
+    Z = jax.random.normal(jax.random.fold_in(key, 5), (m, q), jnp.float64)
+    var = jnp.asarray(2.1, jnp.float64)
+    ls = jnp.full((q,), 0.8, jnp.float64)
+    p1 = ref.psi1_rbf(mu, S, Z, var, ls)
+    assert np.all(np.asarray(p1) > 0)
+    assert np.all(np.asarray(p1) <= float(var) + 1e-12)
+
+
+def test_psi2_positive_semidefinite():
+    key = jax.random.PRNGKey(3)
+    mu, S = _qx(key, 64, 2)
+    Z = jax.random.normal(jax.random.fold_in(key, 1), (20, 2), jnp.float64)
+    p2 = ref.psi2_rbf(mu, S, Z, jnp.asarray(1.0, jnp.float64), jnp.ones((2,), jnp.float64))
+    evals = np.linalg.eigvalsh(np.asarray(p2))
+    assert evals.min() > -1e-8, evals.min()
+
+
+def test_linear_kernel_stats_match_monte_carlo():
+    key = jax.random.PRNGKey(4)
+    N, Q, M = 6, 2, 5
+    mu, S = _qx(key, N, Q)
+    Z = jax.random.normal(jax.random.fold_in(key, 1), (M, Q), jnp.float64)
+    kp = {"log_ard": jnp.log(jnp.asarray([0.7, 1.8], jnp.float64))}
+    ard = Linear.ard(kp)
+    # Monte Carlo over q(X)
+    n_mc = 200_000
+    eps = jax.random.normal(jax.random.fold_in(key, 2), (n_mc, N, Q), jnp.float64)
+    Xs = mu[None] + jnp.sqrt(S)[None] * eps
+    kfu = jnp.einsum("snq,q,mq->snm", Xs, ard, Z)
+    psi1_mc = jnp.mean(kfu, 0)
+    psi2_mc = jnp.einsum("snm,snl->ml", kfu, kfu) / n_mc
+    np.testing.assert_allclose(np.asarray(ref.psi1_linear(mu, S, Z, ard)),
+                               np.asarray(psi1_mc), rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(ref.psi2_linear(mu, S, Z, ard)),
+                               np.asarray(psi2_mc), rtol=3e-2, atol=3e-2)
+
+
+def test_exact_stats_match_definition():
+    key = jax.random.PRNGKey(5)
+    X = jax.random.normal(key, (50, 3), jnp.float64)
+    Y = jax.random.normal(jax.random.fold_in(key, 1), (50, 2), jnp.float64)
+    Z = jax.random.normal(jax.random.fold_in(key, 2), (11, 3), jnp.float64)
+    kp = {k: v.astype(jnp.float64) for k, v in RBF(3).init(1.2, 1.1).items()}
+    stats = psi_stats.exact_stats_rbf(kp, X, Y, Z)
+    Kfu = ref.kfu_rbf(X, Z, RBF.variance(kp), RBF.lengthscale(kp))
+    np.testing.assert_allclose(np.asarray(stats.psi2), np.asarray(Kfu.T @ Kfu), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(stats.psiY), np.asarray(Kfu.T @ Y), rtol=1e-12)
+    assert float(stats.psi0) == 50 * float(RBF.variance(kp))

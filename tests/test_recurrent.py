@@ -1,0 +1,80 @@
+"""RWKV6 chunked form == step recurrence; RG-LRU associative scan == step
+recurrence — train/decode state handoff exactness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.models import rglru as rg
+from repro.models import rwkv6 as rw
+
+
+def test_rwkv_chunked_equals_stepwise():
+    cfg = get_smoke_config("rwkv6-7b")
+    key = jax.random.PRNGKey(0)
+    params = rw.timemix_init(key, cfg)
+    B, T = 2, 37  # deliberately not a chunk multiple
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, T, cfg.d_model), jnp.float32)
+
+    st = rw.timemix_state_init(cfg, B, jnp.float32)
+    out_chunk, st_chunk = rw.timemix_apply_chunked(params, x, st, cfg)
+
+    st2 = rw.timemix_state_init(cfg, B, jnp.float32)
+    outs = []
+    for t in range(T):
+        o, st2 = rw.timemix_apply_decode(params, x[:, t : t + 1], st2, cfg)
+        outs.append(o)
+    out_step = jnp.concatenate(outs, axis=1)
+
+    np.testing.assert_allclose(np.asarray(out_chunk), np.asarray(out_step),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_chunk.S), np.asarray(st2.S),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_chunk.x_prev), np.asarray(st2.x_prev))
+
+
+def test_rwkv_state_carries_across_calls():
+    """Processing [0:T] in one call == two calls [0:T/2], [T/2:T]."""
+    cfg = get_smoke_config("rwkv6-7b")
+    key = jax.random.PRNGKey(1)
+    params = rw.timemix_init(key, cfg)
+    B, T = 2, 64
+    x = jax.random.normal(key, (B, T, cfg.d_model), jnp.float32)
+    st = rw.timemix_state_init(cfg, B, jnp.float32)
+    full, st_full = rw.timemix_apply_chunked(params, x, st, cfg)
+    a, st_mid = rw.timemix_apply_chunked(params, x[:, :32], st, cfg)
+    b, st_end = rw.timemix_apply_chunked(params, x[:, 32:], st_mid, cfg)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(jnp.concatenate([a, b], 1)),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_full.S), np.asarray(st_end.S), rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_scan_equals_stepwise():
+    cfg = get_smoke_config("recurrentgemma-2b")
+    key = jax.random.PRNGKey(2)
+    params = rg.rglru_init(key, cfg)
+    B, T = 2, 23
+    x = jax.random.normal(key, (B, T, cfg.d_model), jnp.float32)
+    st = rg.rglru_state_init(cfg, B, jnp.float32)
+    out_scan, st_scan = rg.rglru_apply_train(params, x, st, cfg)
+
+    st2 = rg.rglru_state_init(cfg, B, jnp.float32)
+    outs = []
+    for t in range(T):
+        o, st2 = rg.rglru_apply_decode(params, x[:, t : t + 1], st2, cfg)
+        outs.append(o)
+    out_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_scan), np.asarray(out_step), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(st_scan.h), np.asarray(st2.h), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(st_scan.conv), np.asarray(st2.conv), rtol=1e-5, atol=1e-6)
+
+
+def test_rwkv_decay_in_unit_interval():
+    cfg = get_smoke_config("rwkv6-7b")
+    params = rw.timemix_init(jax.random.PRNGKey(3), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, cfg.d_model), jnp.float32) * 3
+    logw = rw._decays(params, x, cfg)
+    w = np.asarray(jnp.exp(logw))
+    assert np.all(w > 0) and np.all(w < 1)

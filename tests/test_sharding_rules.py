@@ -1,0 +1,102 @@
+"""Sharding-rule regression tests: every (arch x step-input) leaf must shard
+evenly on the production mesh — checked abstractly (no 512-device compile)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.models import model_zoo
+from repro.parallel import sharding as shd
+
+
+class FakeMesh:
+    """Just enough of a Mesh for the rules table (axis names + sizes)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+POD = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _check(specs, tree, mesh):
+    for (path, leaf), (_, spec) in zip(
+        jax.tree_util.tree_flatten_with_path(tree)[0],
+        jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P))[0],
+    ):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * (len(leaf.shape) - len(spec))):
+            if ax is None:
+                continue
+            size = shd._axes_size(mesh, ax)
+            assert dim % size == 0, (path, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("mesh", [POD, MULTI], ids=["pod", "multipod"])
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divide_evenly(arch, mesh):
+    cfg = get_config(arch)
+    model = model_zoo.build(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    _check(shd.param_specs(params, mesh), params, mesh)
+
+
+@pytest.mark.parametrize("arch", ["arctic-480b", "rwkv6-7b", "recurrentgemma-2b",
+                                  "whisper-small"])
+def test_state_specs_divide_evenly(arch):
+    cfg = get_config(arch)
+    model = model_zoo.build(cfg)
+    states = jax.eval_shape(lambda: model.init_decode_state(128, 32768))
+    _check(shd.state_specs(states, POD), states, POD)
+
+
+def test_batch_b1_not_sharded():
+    specs = shd.batch_specs({"tokens": jax.ShapeDtypeStruct((1, 64), jnp.int32)}, POD)
+    assert specs["tokens"] == P(None, None)
+
+
+def test_sharded_param_fraction_is_high():
+    """Catch silent replication: most parameter BYTES must be sharded over
+    both axes on the pod mesh."""
+    for arch in ("internlm2-20b", "arctic-480b", "rwkv6-7b"):
+        cfg = get_config(arch)
+        model = model_zoo.build(cfg)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        specs = shd.param_specs(params, POD)
+        total = both = 0
+        for (path, leaf), (_, spec) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0],
+        ):
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            total += n
+            axes = {a for a in jax.tree.leaves(tuple(spec)) if a is not None}
+            if {"data", "model"} <= set(map(str, axes)):
+                both += n
+        assert both / total > 0.95, (arch, both / total)
+
+
+def test_vocab_padding_multiple_and_head_padding():
+    from repro.models.attention import head_to_kv_map
+
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        assert cfg.padded_vocab() % 256 == 0
+        assert cfg.padded_vocab() >= cfg.vocab_size
+        hp = cfg.padded_heads(16)
+        assert hp % 16 == 0 and hp >= cfg.num_heads
+        # flat padding (perf iteration A1): the head->kv gather map carries
+        # the grouping, so hp need NOT divide by num_kv_heads
+        kv_map = head_to_kv_map(cfg, 16)
+        assert len(kv_map) == hp
+        assert all(0 <= int(k) < cfg.num_kv_heads for k in kv_map)
+        G = cfg.num_heads // cfg.num_kv_heads
+        assert all(int(kv_map[h]) == h // G for h in range(cfg.num_heads))
+    assert get_config("arctic-480b").padded_heads(16) == 64  # 56 -> 64
+    assert get_config("smollm-360m").padded_heads(16) == 16  # 15 -> 16, not 80
