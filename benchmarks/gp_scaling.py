@@ -15,20 +15,22 @@ import numpy as np
 from benchmarks.common import row, time_call
 from repro.core import gplvm
 from repro.data.synthetic import gplvm_synthetic
+from repro.gp import get
 
 SIZES = (1024, 2048, 4096, 8192, 16384)
 M = 100
 
 
-def run(sizes=SIZES) -> list[str]:
+def run(sizes=SIZES, kernel_name: str = "rbf") -> list[str]:
     out = []
     key = jax.random.PRNGKey(0)
+    kern = get(kernel_name)(1)
     times = {}
     for N in sizes:
         _, Y = gplvm_synthetic(key, N=N, D=3, Q=1)
         Y = Y.astype(jnp.float32)
-        params = gplvm.init_params(key, np.asarray(Y), Q=1, M=M)
-        vg = jax.jit(jax.value_and_grad(lambda p: gplvm.loss(p, Y)))
+        params = gplvm.init_params(key, np.asarray(Y), Q=1, M=M, kernel=kern)
+        vg = jax.jit(jax.value_and_grad(lambda p: gplvm.loss(p, Y, kernel=kern)))
         t = time_call(vg, params, warmup=1, iters=3)
         times[N] = t
         out.append(row(f"gp_scaling_N{N}", t, f"per_point_us={t/N*1e6:.3f}"))

@@ -12,26 +12,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_call
-from repro.core import gplvm, psi_stats
+from repro.core import gplvm
 from repro.data.synthetic import gplvm_synthetic
+from repro.gp import get
 
 SIZES = (1024, 4096, 16384)
 M = 100
 
 
-def run(sizes=SIZES) -> list[str]:
+def run(sizes=SIZES, kernel_name: str = "rbf") -> list[str]:
     out = []
     key = jax.random.PRNGKey(0)
+    kern = get(kernel_name)(1)
     for N in sizes:
         _, Y = gplvm_synthetic(key, N=N, D=3, Q=1)
         Y = Y.astype(jnp.float32)
-        params = gplvm.init_params(key, np.asarray(Y), Q=1, M=M)
+        params = gplvm.init_params(key, np.asarray(Y), Q=1, M=M, kernel=kern)
 
-        stats_fn = jax.jit(lambda p: gplvm.local_stats(p, Y))
+        stats_fn = jax.jit(lambda p: gplvm.local_stats(p, Y, kernel=kern))
         stats = stats_fn(params)
         epilogue = jax.jit(
             lambda p, s: gplvm.bound_from_stats(
-                p, s, gplvm.kl_qp(p["q_mu"], p["q_logS"]), Y.shape[1]))
+                p, s, gplvm.kl_qp(p["q_mu"], p["q_logS"]), Y.shape[1], kernel=kern))
 
         t_stats = time_call(stats_fn, params, warmup=1, iters=3)
         t_epi = time_call(epilogue, params, stats, warmup=1, iters=3)

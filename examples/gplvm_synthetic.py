@@ -5,8 +5,9 @@ synthetic data — recover the 1-D latent line from 3-D observations.
 
 Setup mirrors the paper: Q=1 latent dim, M=100 inducing points, data sampled
 through an RBF-kernel function. Optimizes the distributed bound with Adam
-(use --lbfgs for the paper's optimizer) and reports the latent-recovery
-correlation (up to sign/scale, the invariances of the model).
+(use --lbfgs for the paper's optimizer) through the `repro.gp.BayesianGPLVM`
+facade and reports the latent-recovery correlation (up to sign/scale, the
+invariances of the model).
 """
 import argparse
 import sys
@@ -16,11 +17,11 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distributed, gplvm, inference
+from repro.core.distributed import make_gp_mesh
 from repro.data.synthetic import gplvm_synthetic
+from repro.gp import BayesianGPLVM, get
 
 
 def main() -> None:
@@ -30,35 +31,30 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=400)
     ap.add_argument("--lbfgs", action="store_true", help="paper's optimizer")
     ap.add_argument("--pallas", action="store_true", help="psi-stats via Pallas kernels")
+    ap.add_argument("--min-corr", type=float, default=0.95,
+                    help="latent-recovery bar (smoke-mode CI relaxes it: the "
+                         "recovery quality depends on the data draw and N)")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
     X_true, Y = gplvm_synthetic(key, N=args.n, D=3, Q=1)
     print(f"data: N={args.n} 3-D points from a 1-D latent (paper §4)")
 
-    params = gplvm.init_params(key, np.asarray(Y), Q=1, M=args.m)
-    backend = "pallas" if args.pallas else "jnp"
-    mesh = distributed.make_gp_mesh()
-    loss = distributed.gplvm_loss_dist(mesh, backend=backend)
+    lvm = BayesianGPLVM(kernel=get("rbf")(1), M=args.m, mesh=make_gp_mesh(),
+                        backend="pallas" if args.pallas else "jnp")
 
     t0 = time.time()
-    if args.lbfgs:
-        params, final = inference.fit_lbfgs(lambda p, Y: loss(p, Y), params, (Y,),
-                                            maxiter=args.steps)
-    else:
-        params, hist = inference.fit_adam(loss, params, (Y,), steps=args.steps,
-                                          lr=2e-2, log_every=max(args.steps // 8, 1))
-        final = hist[-1]
+    lvm.fit(Y, optimizer="lbfgs" if args.lbfgs else "adam", steps=args.steps,
+            lr=2e-2, log_every=0 if args.lbfgs else max(args.steps // 8, 1), key=key)
     dt = time.time() - t0
     print(f"optimized {args.steps} steps in {dt:.1f}s "
-          f"({dt/args.steps*1e3:.1f} ms/iter) final loss {final:.4f}")
+          f"({dt/args.steps*1e3:.1f} ms/iter) final loss {lvm.history[-1]:.4f}")
 
     # latent recovery: correlation of q_mu with the true latent (sign/scale free)
-    mu = np.asarray(params["q_mu"][:, 0])
-    xt = np.asarray(X_true[:, 0])
-    corr = abs(np.corrcoef(mu, xt)[0, 1])
+    mu, _ = lvm.latent()
+    corr = abs(np.corrcoef(np.asarray(mu[:, 0]), np.asarray(X_true[:, 0]))[0, 1])
     print(f"|corr(latent, truth)| = {corr:.3f}")
-    assert corr > 0.95, "latent line not recovered"
+    assert corr > args.min_corr, f"latent line not recovered: {corr:.3f} <= {args.min_corr}"
     print("recovered the 1-D latent structure — paper reproduction OK")
 
 

@@ -1,11 +1,13 @@
-"""Quickstart: sparse GP regression with the distributed collapsed bound.
+"""Quickstart: sparse GP regression through the `repro.gp` facade.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--steps 300]
 
 Fits a sparse GP (Titsias bound, the paper's eq. (2)-(3)) to 1-D data via the
 same distributed code path used on a pod (here the mesh is 1 CPU device —
-the code is identical), then prints test RMSE and calibration.
+the code is identical), then prints test RMSE and calibration. The facade
+owns the wiring this example used to hand-roll across five modules.
 """
+import argparse
 import sys
 from pathlib import Path
 
@@ -13,47 +15,43 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import distributed, inference, psi_stats, svgp
-from repro.core.gp_kernels import RBF
+from repro.core.distributed import make_gp_mesh
+from repro.gp import SparseGPRegression, get
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--pallas", action="store_true", help="stats via Pallas kernels")
+    args = ap.parse_args()
+
     key = jax.random.PRNGKey(0)
     N, M = 2000, 32
     X = jnp.sort(jax.random.uniform(key, (N, 1), minval=-3.0, maxval=3.0), axis=0)
     f = jnp.sin(2.0 * X[:, 0]) + 0.3 * jnp.cos(5.0 * X[:, 0])
     Y = (f + 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (N,)))[:, None]
 
-    kern = RBF(1)
-    params = {
-        "kern": kern.init(variance=1.0, lengthscale=1.0),
-        "Z": X[:: N // M][:M],
-        "log_beta": jnp.asarray(2.0, jnp.float32),
-    }
+    # --- the whole model setup: kernel by name, mesh + backend from the ctor
+    gp = SparseGPRegression(kernel=get("rbf")(1), M=M, mesh=make_gp_mesh(),
+                            backend="pallas" if args.pallas else "jnp")
+    loss0 = -gp.fit(X, Y, steps=0).elbo() / N  # initial nlml/point (0 steps)
+    print(f"initial nlml/point: {loss0:.4f}")
+    gp.fit(X, Y, steps=args.steps, lr=3e-2)
+    print(f"final   nlml/point: {-gp.elbo() / N:.4f}")
 
-    mesh = distributed.make_gp_mesh()
-    loss = distributed.sgpr_loss_dist(mesh)  # shard_map + psum, as on a pod
-    print(f"initial nlml/point: {float(loss(params, X, Y)):.4f}")
-    params, _ = inference.fit_adam(loss, params, (X, Y), steps=300, lr=3e-2)
-    print(f"final   nlml/point: {float(loss(params, X, Y)):.4f}")
-
-    # prediction
-    stats = psi_stats.exact_stats_rbf(params["kern"], X, Y, params["Z"])
-    beta = jnp.exp(params["log_beta"])
-    terms = svgp.collapsed_bound(kern.K(params["kern"], params["Z"]), stats, beta, 1)
-    post = svgp.optimal_qu(terms, beta)
+    # --- prediction through the facade
     Xt = jnp.linspace(-3, 3, 200)[:, None]
-    mean, var = svgp.predict_f(post, kern.K(params["kern"], Xt, params["Z"]),
-                               kern.Kdiag(params["kern"], Xt))
+    mean, var = gp.predict(Xt)
     f_true = jnp.sin(2.0 * Xt[:, 0]) + 0.3 * jnp.cos(5.0 * Xt[:, 0])
     rmse = float(jnp.sqrt(jnp.mean((mean[:, 0] - f_true) ** 2)))
     inside = float(jnp.mean((jnp.abs(mean[:, 0] - f_true) < 2 * jnp.sqrt(var))))
     print(f"test RMSE {rmse:.4f}; {inside*100:.0f}% of truth inside 2-sigma")
-    print(f"learned lengthscale {float(RBF.lengthscale(params['kern'])[0]):.3f}, "
-          f"noise std {float(beta ** -0.5):.3f}")
+    kern_cls = type(gp.kernel)
+    print(f"learned lengthscale {float(kern_cls.lengthscale(gp.params['kern'])[0]):.3f}, "
+          f"noise std {float(jnp.exp(gp.params['log_beta']) ** -0.5):.3f}")
     assert rmse < 0.1
+    print("quickstart OK")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + both GP examples in smoke mode, so the
+# repro.gp facade path is exercised end-to-end on every PR.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== quickstart (sparse GP regression, facade) =="
+python examples/quickstart.py --steps 150
+
+echo "== gplvm_synthetic (Bayesian GP-LVM, facade, smoke size) =="
+# smoke bar: at N=512 the latent-recovery correlation is draw-limited (~0.7
+# even for the pre-facade code); the 0.95 bar is the full-size (default-args)
+# target. Smoke mode checks the whole facade path runs and learns.
+python examples/gplvm_synthetic.py --n 512 --m 32 --steps 150 --min-corr 0.55
+
+echo "CI OK"

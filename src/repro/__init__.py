@@ -1,0 +1,5 @@
+"""repro: GP models with parallelization and GPU acceleration (jax/pallas).
+
+A regular package (not a namespace package) so `repro.__file__` resolves —
+subprocess-based tests locate the source tree through it.
+"""

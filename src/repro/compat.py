@@ -1,0 +1,82 @@
+"""Version-drift shims for the JAX APIs this repo relies on.
+
+The codebase targets the jax.shard_map / jax.make_mesh(axis_types=...) API
+surface; older installs (e.g. jax 0.4.x) spell these differently or lack
+them. Every mesh/shard_map/cost-analysis call site goes through this module
+so the drift is handled exactly once.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+import jax
+
+# jax.shard_map (new) vs jax.experimental.shard_map.shard_map (0.4.x).
+# The old entry point also spells check_vma as check_rep.
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - branch depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def shard_map(f, *, check_vma: bool | None = None, **kwargs):
+        if check_vma is not None:
+            kwargs["check_rep"] = check_vma
+        # legacy shard_map has no replication rule for pallas_call (the
+        # Pallas statistics backends run inside these bodies) — the
+        # documented workaround is check_rep=False; correctness is
+        # unaffected (the losses psum explicitly).
+        kwargs.setdefault("check_rep", False)
+        return _shard_map_legacy(f, **kwargs)
+
+# Explicit-sharding axis types only exist on newer jax; Auto is the default
+# behaviour everywhere, so dropping the kwarg is semantics-preserving.
+HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices=None) -> jax.sharding.Mesh:
+    """jax.make_mesh with Auto axis types where the kwarg exists."""
+    kwargs: Dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if HAS_AXIS_TYPES:
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+# jax 0.4.x has no differentiation rule for optimization_barrier; newer jax
+# differentiates it as "barrier the tangents/cotangents too". Reproduce that
+# with a custom_vjp so remat'd scans (models/transformer.py) stay trainable.
+def _barrier_is_differentiable() -> bool:
+    try:
+        jax.eval_shape(
+            jax.grad(lambda x: jax.lax.optimization_barrier(x)), 1.0
+        )
+        return True
+    except NotImplementedError:
+        return False
+
+
+if _barrier_is_differentiable():
+    optimization_barrier = jax.lax.optimization_barrier
+else:  # pragma: no cover - branch depends on installed jax
+
+    @jax.custom_vjp
+    def optimization_barrier(x):
+        return jax.lax.optimization_barrier(x)
+
+    def _barrier_fwd(x):
+        return optimization_barrier(x), None
+
+    def _barrier_bwd(_, g):
+        return (jax.lax.optimization_barrier(g),)
+
+    optimization_barrier.defvjp(_barrier_fwd, _barrier_bwd)
+
+
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """compiled.cost_analysis() returns a dict on new jax, [dict] on 0.4.x."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return cost

@@ -2,6 +2,15 @@
 sparse GP models (Titsias bound + Bayesian GP-LVM), decomposed into
 shard-local sufficient statistics + one psum + a replicated O(M^3) epilogue,
 with the hot statistics implemented as Pallas TPU kernels (repro.kernels)."""
-from repro.core import distributed, gp_head, gp_kernels, gplvm, inference, psi_stats, svgp
+import importlib
 
 __all__ = ["distributed", "gp_head", "gp_kernels", "gplvm", "inference", "psi_stats", "svgp"]
+
+
+def __getattr__(name):
+    # Lazy (PEP 562) so that repro.gp.kernels can import repro.core.psi_stats
+    # without dragging in the whole core layer (gp_kernels shims back to
+    # repro.gp.kernels — an eager import here would be circular).
+    if name in __all__:
+        return importlib.import_module(f"repro.core.{name}")
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

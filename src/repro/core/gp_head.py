@@ -19,8 +19,9 @@ from typing import Dict, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import psi_stats, svgp
+from repro.core import svgp
 from repro.core.gp_kernels import RBF
+from repro.gp.stats import ExactBatch, suff_stats
 
 Params = Dict[str, jax.Array]
 
@@ -45,10 +46,10 @@ def head_loss(params: Params, features: jax.Array, targets: jax.Array,
     tgts = targets.astype(jnp.float32)
     if tgts.ndim == 1:
         tgts = tgts[:, None]
-    stats = psi_stats.exact_stats_rbf(params["kern"], feats, tgts, params["Z"])
+    kern = RBF(params["Z"].shape[1])
+    stats = suff_stats(kern, params["kern"], ExactBatch(feats, tgts, params["Z"]))
     if axis_names:
         stats = jax.tree.map(lambda x: jax.lax.psum(x, axis_names), stats)
-    kern = RBF(params["Z"].shape[1])
     Kuu = kern.K(params["kern"], params["Z"])
     terms = svgp.collapsed_bound(Kuu, stats, jnp.exp(params["log_beta"]), tgts.shape[1])
     return -terms.bound / stats.n
@@ -65,8 +66,8 @@ def head_predict(params: Params, train_features: jax.Array, train_targets: jax.A
     tgts = train_targets.astype(jnp.float32)
     if tgts.ndim == 1:
         tgts = tgts[:, None]
-    stats = psi_stats.exact_stats_rbf(params["kern"], feats, tgts, params["Z"])
     kern = RBF(params["Z"].shape[1])
+    stats = suff_stats(kern, params["kern"], ExactBatch(feats, tgts, params["Z"]))
     Kuu = kern.K(params["kern"], params["Z"])
     beta = jnp.exp(params["log_beta"])
     terms = svgp.collapsed_bound(Kuu, stats, beta, tgts.shape[1])

@@ -1,86 +1,10 @@
-"""Covariance functions for sparse GP models.
+"""Covariance functions for sparse GP models — compatibility shim.
 
-The paper (and GPy) parameterize the RBF/ARD kernel as
-
-    k(x, x') = sigma_f^2 * exp(-0.5 * sum_q (x_q - x'_q)^2 / l_q^2)
-
-Parameters are stored as unconstrained log-values so gradient-based
-optimizers (Adam here, L-BFGS-B in the paper) work on R^n.
+The kernel classes moved to `repro.gp.kernels`, which adds the full Kernel
+protocol (exact/expected sufficient statistics), the Matern family,
+Sum/Product composites, and the string registry. This module keeps the old
+import path (`from repro.core.gp_kernels import RBF`) working.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict
-
-import jax
-import jax.numpy as jnp
-
-Params = Dict[str, jax.Array]
-
-
-@dataclasses.dataclass(frozen=True)
-class RBF:
-    """RBF (squared exponential) kernel with ARD lengthscales.
-
-    Closed-form psi statistics under Gaussian q(X) exist for this kernel,
-    which is why the paper's GP-LVM experiments use it.
-    """
-
-    input_dim: int
-
-    def init(self, variance: float = 1.0, lengthscale: float = 1.0) -> Params:
-        return {
-            "log_variance": jnp.asarray(jnp.log(variance), jnp.float32),
-            "log_lengthscale": jnp.full((self.input_dim,), jnp.log(lengthscale), jnp.float32),
-        }
-
-    @staticmethod
-    def variance(params: Params) -> jax.Array:
-        return jnp.exp(params["log_variance"])
-
-    @staticmethod
-    def lengthscale(params: Params) -> jax.Array:
-        return jnp.exp(params["log_lengthscale"])
-
-    def K(self, params: Params, X: jax.Array, X2: jax.Array | None = None) -> jax.Array:
-        """Dense covariance matrix k(X, X2)."""
-        ls = self.lengthscale(params)
-        Xs = X / ls
-        X2s = Xs if X2 is None else X2 / ls
-        # squared euclidean distances via the stable (a-b)^2 expansion
-        d2 = (
-            jnp.sum(Xs**2, -1)[:, None]
-            + jnp.sum(X2s**2, -1)[None, :]
-            - 2.0 * Xs @ X2s.T
-        )
-        d2 = jnp.maximum(d2, 0.0)
-        return self.variance(params) * jnp.exp(-0.5 * d2)
-
-    def Kdiag(self, params: Params, X: jax.Array) -> jax.Array:
-        return jnp.full((X.shape[0],), self.variance(params))
-
-
-@dataclasses.dataclass(frozen=True)
-class Linear:
-    """Linear kernel k(x,x') = sum_q a_q x_q x'_q (ARD variances).
-
-    Also admits closed-form psi statistics; used in tests to make sure the
-    psi-statistics layer is kernel-generic.
-    """
-
-    input_dim: int
-
-    def init(self, variance: float = 1.0) -> Params:
-        return {"log_ard": jnp.full((self.input_dim,), jnp.log(variance), jnp.float32)}
-
-    @staticmethod
-    def ard(params: Params) -> jax.Array:
-        return jnp.exp(params["log_ard"])
-
-    def K(self, params: Params, X: jax.Array, X2: jax.Array | None = None) -> jax.Array:
-        a = self.ard(params)
-        X2 = X if X2 is None else X2
-        return (X * a) @ X2.T
-
-    def Kdiag(self, params: Params, X: jax.Array) -> jax.Array:
-        return jnp.sum(self.ard(params) * X * X, -1)
+from repro.gp.kernels import Linear, Params, RBF  # noqa: F401

@@ -29,8 +29,15 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.gp_kernels import RBF, Linear
 from repro.kernels import ref
+
+
+def _rbf_variance(kern_params) -> jax.Array:
+    return jnp.exp(kern_params["log_variance"])
+
+
+def _rbf_lengthscale(kern_params) -> jax.Array:
+    return jnp.exp(kern_params["log_lengthscale"])
 
 
 class SuffStats(NamedTuple):
@@ -52,8 +59,8 @@ class SuffStats(NamedTuple):
 def exact_stats_rbf(
     kern_params, X: jax.Array, Y: jax.Array, Z: jax.Array, *, backend: str = "jnp"
 ) -> SuffStats:
-    variance = RBF.variance(kern_params)
-    lengthscale = RBF.lengthscale(kern_params)
+    variance = _rbf_variance(kern_params)
+    lengthscale = _rbf_lengthscale(kern_params)
     if backend == "pallas":
         from repro.kernels import ops
 
@@ -180,8 +187,8 @@ def expected_stats_rbf(
     backend: str = "jnp",
     psi2_chunk: int = 256,
 ) -> SuffStats:
-    variance = RBF.variance(kern_params)
-    lengthscale = RBF.lengthscale(kern_params)
+    variance = _rbf_variance(kern_params)
+    lengthscale = _rbf_lengthscale(kern_params)
     if backend == "pallas":
         from repro.kernels import ops
 
@@ -204,7 +211,7 @@ def expected_stats_rbf(
 def expected_stats_linear(
     kern_params, mu: jax.Array, S: jax.Array, Y: jax.Array, Z: jax.Array
 ) -> SuffStats:
-    ard = Linear.ard(kern_params)
+    ard = jnp.exp(kern_params["log_ard"])
     psi1 = ref.psi1_linear(mu, S, Z, ard)
     return SuffStats(
         psi0=ref.psi0_linear(mu, S, ard),

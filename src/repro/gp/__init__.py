@@ -1,0 +1,35 @@
+"""Public GP API: GPy-style model facades over the distributed collapsed bound.
+
+    from repro.gp import SparseGPRegression, kernels
+
+    gp = SparseGPRegression(kernel=kernels.get("rbf")(1), M=32).fit(X, Y)
+    mean, var = gp.predict(Xt)
+
+Kernels resolve by name through `repro.gp.kernels.get` (rbf, linear,
+matern12/32/52, sum, product); models accept `mesh=` for the paper's
+shard_map+psum data parallelism and `backend=` for the Pallas/fused
+statistics paths.
+
+Model classes load lazily (PEP 562) so importing `repro.gp.kernels` from the
+core layers never drags in the model/optimizer stack.
+"""
+from repro.gp import kernels
+from repro.gp.kernels import Kernel, available, get, register
+from repro.gp.stats import ExactBatch, ExpectedBatch, suff_stats
+
+__all__ = [
+    "Kernel", "available", "get", "register", "kernels",
+    "ExactBatch", "ExpectedBatch", "suff_stats",
+    "SparseGPRegression", "BayesianGPLVM", "models",
+]
+
+_LAZY = ("SparseGPRegression", "BayesianGPLVM", "models")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        models = importlib.import_module("repro.gp.models")
+        return models if name == "models" else getattr(models, name)
+    raise AttributeError(f"module 'repro.gp' has no attribute {name!r}")

@@ -1,0 +1,506 @@
+"""Kernel protocol + string registry for the `repro.gp` API (GPy-style).
+
+Every kernel is a lightweight stateless object; parameters live in a plain
+dict of (log-transformed) arrays so the whole model state stays a pytree the
+optimizers and shard_map understand. The protocol every kernel implements:
+
+    init(...)                 -> Params             unconstrained init
+    K(params, X, X2=None)     -> (N, N2)            dense covariance
+    Kdiag(params, X)          -> (N,)               diagonal of K(X, X)
+    exact_suff_stats(...)     -> SuffStats          deterministic-X statistics
+    expected_suff_stats(...)  -> SuffStats          statistics under q(X)
+
+Expected (psi) statistics additionally factor through `psi0/psi1/psi2`, which
+is what lets `Sum` compose them: psi2 of a sum kernel needs the closed-form
+*cross* statistics sum_n <kA(x_n, z_m) kB(x_n, z_m')> between every pair of
+parts (GPy's "psicomp" cross terms; implemented here for RBF x Linear and
+Linear x Linear). Kernels without closed-form psi statistics (the Materns)
+support the exact path and raise `NotImplementedError` from the expected one.
+
+Registry: `get("rbf")(input_dim)` — a string -> class mapping so models,
+configs, and serving endpoints can name kernels without importing classes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import psi_stats
+from repro.core.psi_stats import SuffStats
+from repro.kernels import ref
+
+Params = Dict[str, jax.Array]
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type["Kernel"]] = {}
+
+
+def register(name: str) -> Callable[[Type["Kernel"]], Type["Kernel"]]:
+    def deco(cls: Type["Kernel"]) -> Type["Kernel"]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get(name: str) -> Type["Kernel"]:
+    """Resolve a kernel class by registry name, e.g. get("rbf")(1)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel {name!r}; available: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def default_rbf(kernel: "Kernel | None", input_dim: int) -> "Kernel":
+    """The shared defaulting rule: no kernel given -> the paper's RBF."""
+    return kernel if kernel is not None else RBF(input_dim)
+
+
+# ---------------------------------------------------------------------------
+# protocol / base class
+# ---------------------------------------------------------------------------
+
+
+class Kernel:
+    """Base kernel: generic exact statistics via K_fu, psi-statistics abstract.
+
+    `exact_suff_stats` works for ANY kernel that can evaluate K — the paper's
+    supervised sparse-GP path only needs K_fu matmuls. The expected path
+    needs the kernel-specific closed forms (psi0/psi1/psi2).
+    """
+
+    name: str = "kernel"
+    input_dim: int
+
+    def init(self, **kwargs) -> Params:
+        raise NotImplementedError
+
+    def K(self, params: Params, X: jax.Array, X2: jax.Array | None = None) -> jax.Array:
+        raise NotImplementedError
+
+    def Kdiag(self, params: Params, X: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def _check_backend(self, backend: str) -> None:
+        # loud rather than a silent jnp fallback: only the RBF hot path (and
+        # delegating composites like all-RBF Product) have Pallas/fused kernels
+        if backend != "jnp":
+            raise ValueError(
+                f"{type(self).__name__} implements backend='jnp' statistics "
+                f"only (got {backend!r}); the Pallas/fused backends exist for "
+                f"the RBF kernel"
+            )
+
+    # -- exact statistics (deterministic X) ---------------------------------
+    def exact_suff_stats(
+        self, params: Params, X: jax.Array, Y: jax.Array, Z: jax.Array,
+        *, backend: str = "jnp",
+    ) -> SuffStats:
+        self._check_backend(backend)
+        Kfu = self.K(params, X, Z)
+        return SuffStats(
+            psi0=jnp.sum(self.Kdiag(params, X)),
+            psi2=Kfu.T @ Kfu,
+            psiY=Kfu.T @ Y,
+            yy=jnp.sum(Y * Y),
+            n=jnp.asarray(X.shape[0], Kfu.dtype),
+        )
+
+    # -- expected statistics under q(X) = prod_n N(mu_n, diag(S_n)) ---------
+    def psi0(self, params: Params, mu: jax.Array, S: jax.Array) -> jax.Array:
+        raise NotImplementedError(self._no_psi())
+
+    def psi1(self, params: Params, mu: jax.Array, S: jax.Array, Z: jax.Array) -> jax.Array:
+        raise NotImplementedError(self._no_psi())
+
+    def psi2(self, params: Params, mu: jax.Array, S: jax.Array, Z: jax.Array) -> jax.Array:
+        raise NotImplementedError(self._no_psi())
+
+    def expected_suff_stats(
+        self, params: Params, mu: jax.Array, S: jax.Array, Y: jax.Array,
+        Z: jax.Array, *, backend: str = "jnp",
+    ) -> SuffStats:
+        self._check_backend(backend)
+        psi1 = self.psi1(params, mu, S, Z)
+        return SuffStats(
+            psi0=self.psi0(params, mu, S),
+            psi2=self.psi2(params, mu, S, Z),
+            psiY=psi1.T @ Y,
+            yy=jnp.sum(Y * Y),
+            n=jnp.asarray(mu.shape[0], mu.dtype),
+        )
+
+    def _no_psi(self) -> str:
+        return (
+            f"closed-form psi statistics under Gaussian q(X) do not exist for "
+            f"the {type(self).__name__!r} kernel; it supports the exact "
+            f"(deterministic-X) path only. Use an 'rbf'/'linear' kernel (or a "
+            f"Sum/Product of them) for Bayesian GP-LVM models."
+        )
+
+
+# ---------------------------------------------------------------------------
+# leaf kernels
+# ---------------------------------------------------------------------------
+
+
+@register("rbf")
+@dataclasses.dataclass(frozen=True)
+class RBF(Kernel):
+    """RBF (squared exponential) kernel with ARD lengthscales.
+
+    The paper (and GPy) parameterize it as
+
+        k(x, x') = sigma_f^2 * exp(-0.5 * sum_q (x_q - x'_q)^2 / l_q^2)
+
+    stored as unconstrained log-values so gradient-based optimizers (Adam
+    here, L-BFGS-B in the paper) work on R^n. Closed-form psi statistics
+    under Gaussian q(X) exist, which is why the paper's GP-LVM experiments
+    use it; its statistics also have Pallas TPU kernels (backend="pallas")
+    and a fused streaming-jnp path (backend="fused").
+    """
+
+    input_dim: int
+
+    def init(self, variance: float = 1.0, lengthscale: float = 1.0) -> Params:
+        return {
+            "log_variance": jnp.asarray(jnp.log(variance), jnp.float32),
+            "log_lengthscale": jnp.full((self.input_dim,), jnp.log(lengthscale), jnp.float32),
+        }
+
+    @staticmethod
+    def variance(params: Params) -> jax.Array:
+        return jnp.exp(params["log_variance"])
+
+    @staticmethod
+    def lengthscale(params: Params) -> jax.Array:
+        return jnp.exp(params["log_lengthscale"])
+
+    def K(self, params: Params, X: jax.Array, X2: jax.Array | None = None) -> jax.Array:
+        ls = self.lengthscale(params)
+        Xs = X / ls
+        X2s = Xs if X2 is None else X2 / ls
+        # squared euclidean distances via the stable (a-b)^2 expansion
+        d2 = (
+            jnp.sum(Xs**2, -1)[:, None]
+            + jnp.sum(X2s**2, -1)[None, :]
+            - 2.0 * Xs @ X2s.T
+        )
+        d2 = jnp.maximum(d2, 0.0)
+        return self.variance(params) * jnp.exp(-0.5 * d2)
+
+    def Kdiag(self, params: Params, X: jax.Array) -> jax.Array:
+        return jnp.full((X.shape[0],), self.variance(params))
+
+    def exact_suff_stats(self, params, X, Y, Z, *, backend: str = "jnp") -> SuffStats:
+        if backend not in ("jnp", "pallas"):
+            raise ValueError(
+                f"RBF exact statistics support backend='jnp'|'pallas', got "
+                f"{backend!r} ('fused' is an expected-statistics/GP-LVM backend)"
+            )
+        return psi_stats.exact_stats_rbf(params, X, Y, Z, backend=backend)
+
+    def psi0(self, params, mu, S) -> jax.Array:
+        return ref.psi0_rbf(mu, S, self.variance(params), self.lengthscale(params))
+
+    def psi1(self, params, mu, S, Z) -> jax.Array:
+        return ref.psi1_rbf(mu, S, Z, self.variance(params), self.lengthscale(params))
+
+    def psi2(self, params, mu, S, Z) -> jax.Array:
+        return psi_stats._psi2_rbf_chunked(
+            mu, S, Z, self.variance(params), self.lengthscale(params)
+        )
+
+    def expected_suff_stats(self, params, mu, S, Y, Z, *, backend: str = "jnp") -> SuffStats:
+        if backend not in ("jnp", "pallas", "fused"):
+            raise ValueError(
+                f"RBF expected statistics support backend='jnp'|'pallas'|'fused', "
+                f"got {backend!r}"
+            )
+        return psi_stats.expected_stats_rbf(params, mu, S, Y, Z, backend=backend)
+
+
+@register("linear")
+@dataclasses.dataclass(frozen=True)
+class Linear(Kernel):
+    """Linear kernel k(x,x') = sum_q a_q x_q x'_q (ARD variances).
+
+    Also admits closed-form psi statistics; used in tests to make sure the
+    psi-statistics layer is kernel-generic.
+    """
+
+    input_dim: int
+
+    def init(self, variance: float = 1.0) -> Params:
+        return {"log_ard": jnp.full((self.input_dim,), jnp.log(variance), jnp.float32)}
+
+    @staticmethod
+    def ard(params: Params) -> jax.Array:
+        return jnp.exp(params["log_ard"])
+
+    def K(self, params: Params, X: jax.Array, X2: jax.Array | None = None) -> jax.Array:
+        a = self.ard(params)
+        X2 = X if X2 is None else X2
+        return (X * a) @ X2.T
+
+    def Kdiag(self, params: Params, X: jax.Array) -> jax.Array:
+        return jnp.sum(self.ard(params) * X * X, -1)
+
+    def psi0(self, params, mu, S) -> jax.Array:
+        return ref.psi0_linear(mu, S, self.ard(params))
+
+    def psi1(self, params, mu, S, Z) -> jax.Array:
+        return ref.psi1_linear(mu, S, Z, self.ard(params))
+
+    def psi2(self, params, mu, S, Z) -> jax.Array:
+        return ref.psi2_linear(mu, S, Z, self.ard(params))
+
+
+@dataclasses.dataclass(frozen=True)
+class _Matern(Kernel):
+    """Shared machinery of the Matern family: K is a function of the scaled
+    distance r = sqrt(sum_q (x_q - x'_q)^2 / l_q^2). No closed-form psi
+    statistics under Gaussian q(X) exist (the expectation of exp(-r) has no
+    elementary form), so only the exact path is supported — the base-class
+    expected_suff_stats raises cleanly.
+    """
+
+    input_dim: int
+
+    def init(self, variance: float = 1.0, lengthscale: float = 1.0) -> Params:
+        return {
+            "log_variance": jnp.asarray(jnp.log(variance), jnp.float32),
+            "log_lengthscale": jnp.full((self.input_dim,), jnp.log(lengthscale), jnp.float32),
+        }
+
+    @staticmethod
+    def variance(params: Params) -> jax.Array:
+        return jnp.exp(params["log_variance"])
+
+    @staticmethod
+    def lengthscale(params: Params) -> jax.Array:
+        return jnp.exp(params["log_lengthscale"])
+
+    def _r(self, params: Params, X: jax.Array, X2: jax.Array | None) -> jax.Array:
+        ls = self.lengthscale(params)
+        Xs = X / ls
+        X2s = Xs if X2 is None else X2 / ls
+        d2 = (
+            jnp.sum(Xs**2, -1)[:, None]
+            + jnp.sum(X2s**2, -1)[None, :]
+            - 2.0 * Xs @ X2s.T
+        )
+        # sqrt has an infinite derivative at 0: clamp from below (the value
+        # error is ~1e-9, far under kernel noise floors)
+        return jnp.sqrt(jnp.maximum(d2, 1e-18))
+
+    def _shape_fn(self, r: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def K(self, params: Params, X: jax.Array, X2: jax.Array | None = None) -> jax.Array:
+        return self.variance(params) * self._shape_fn(self._r(params, X, X2))
+
+    def Kdiag(self, params: Params, X: jax.Array) -> jax.Array:
+        return jnp.full((X.shape[0],), self.variance(params))
+
+
+@register("matern12")
+@dataclasses.dataclass(frozen=True)
+class Matern12(_Matern):
+    """Matern nu=1/2 (exponential / Ornstein-Uhlenbeck) kernel."""
+
+    def _shape_fn(self, r: jax.Array) -> jax.Array:
+        return jnp.exp(-r)
+
+
+@register("matern32")
+@dataclasses.dataclass(frozen=True)
+class Matern32(_Matern):
+    """Matern nu=3/2 kernel."""
+
+    def _shape_fn(self, r: jax.Array) -> jax.Array:
+        s = jnp.sqrt(3.0) * r
+        return (1.0 + s) * jnp.exp(-s)
+
+
+@register("matern52")
+@dataclasses.dataclass(frozen=True)
+class Matern52(_Matern):
+    """Matern nu=5/2 kernel."""
+
+    def _shape_fn(self, r: jax.Array) -> jax.Array:
+        s = jnp.sqrt(5.0) * r
+        return (1.0 + s + s**2 / 3.0) * jnp.exp(-s)
+
+
+# ---------------------------------------------------------------------------
+# cross psi-2 statistics between heterogeneous parts (for Sum)
+# ---------------------------------------------------------------------------
+
+
+def _cross_psi2_rbf_linear(
+    rbf: RBF, p_rbf: Params, lin: Linear, p_lin: Params,
+    mu: jax.Array, S: jax.Array, Z: jax.Array,
+) -> jax.Array:
+    """C[m, m'] = sum_n <k_rbf(x_n, z_m) k_lin(x_n, z_m')>_{q(x_n)}.
+
+    Writing k_rbf(x, z) prop N(x | z, diag(l^2)), the product q(x_n) k_rbf
+    is an unnormalized Gaussian with mass Psi1[n, m] and mean
+
+        c[n, m, q] = (mu_nq l_q^2 + z_mq S_nq) / (l_q^2 + S_nq),
+
+    so <k_rbf(x, z_m) sum_q a_q x_q z'_q> = Psi1[n, m] * (a * c[n, m]) . z'.
+    (GPy's RBF x Linear psicomp cross term.)
+    """
+    l2 = rbf.lengthscale(p_rbf) ** 2  # (Q,)
+    a = lin.ard(p_lin)  # (Q,)
+    psi1 = ref.psi1_rbf(mu, S, Z, rbf.variance(p_rbf), rbf.lengthscale(p_rbf))  # (N, M)
+    # tilted-Gaussian mean per (n, m, q)
+    c = (mu[:, None, :] * l2[None, None, :] + Z[None, :, :] * S[:, None, :]) / (
+        l2[None, None, :] + S[:, None, :]
+    )
+    return jnp.einsum("nm,nmq,kq->mk", psi1, c, Z * a)
+
+
+def _cross_psi2_linear_linear(
+    ka: Linear, pa: Params, kb: Linear, pb: Params,
+    mu: jax.Array, S: jax.Array, Z: jax.Array,
+) -> jax.Array:
+    """C[m, m'] = (z_m * a1)^T [sum_n (mu_n mu_n^T + diag(S_n))] (z_m' * a2)."""
+    moment = (mu.T @ mu) + jnp.diag(jnp.sum(S, axis=0))  # (Q, Q)
+    return (Z * ka.ard(pa)) @ moment @ (Z * kb.ard(pb)).T
+
+
+def _cross_psi2(ka: Kernel, pa: Params, kb: Kernel, pb: Params, mu, S, Z) -> jax.Array:
+    """Dispatch the closed-form cross term; transpose handles argument order."""
+    if isinstance(ka, RBF) and isinstance(kb, Linear):
+        return _cross_psi2_rbf_linear(ka, pa, kb, pb, mu, S, Z)
+    if isinstance(ka, Linear) and isinstance(kb, RBF):
+        return _cross_psi2_rbf_linear(kb, pb, ka, pa, mu, S, Z).T
+    if isinstance(ka, Linear) and isinstance(kb, Linear):
+        return _cross_psi2_linear_linear(ka, pa, kb, pb, mu, S, Z)
+    raise NotImplementedError(
+        f"no closed-form cross psi2 statistics between "
+        f"{type(ka).__name__} and {type(kb).__name__} (GPy implements "
+        f"RBF x Linear; use the exact path or those part types)"
+    )
+
+
+# ---------------------------------------------------------------------------
+# composite kernels
+# ---------------------------------------------------------------------------
+
+
+class _Composite(Kernel):
+    """Shared plumbing: parts act on the same inputs, params nest as k0/k1/..."""
+
+    def __init__(self, *parts: Kernel):
+        if len(parts) < 2:
+            raise ValueError(f"{type(self).__name__} needs >= 2 parts")
+        dims = {p.input_dim for p in parts}
+        if len(dims) != 1:
+            raise ValueError(f"parts disagree on input_dim: {sorted(dims)}")
+        self.parts: Tuple[Kernel, ...] = tuple(parts)
+        self.input_dim = parts[0].input_dim
+
+    def init(self, **kwargs) -> Params:
+        return {f"k{i}": p.init() for i, p in enumerate(self.parts)}
+
+    def _split(self, params: Params):
+        return [(p, params[f"k{i}"]) for i, p in enumerate(self.parts)]
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({', '.join(map(repr, self.parts))})"
+
+
+@register("sum")
+class Sum(_Composite):
+    """k = sum_i k_i. Exact statistics come generically from K; expected
+    statistics compose part psi stats plus pairwise closed-form cross terms.
+    """
+
+    def K(self, params: Params, X: jax.Array, X2: jax.Array | None = None) -> jax.Array:
+        return sum(p.K(pp, X, X2) for p, pp in self._split(params))
+
+    def Kdiag(self, params: Params, X: jax.Array) -> jax.Array:
+        return sum(p.Kdiag(pp, X) for p, pp in self._split(params))
+
+    def psi0(self, params, mu, S) -> jax.Array:
+        return sum(p.psi0(pp, mu, S) for p, pp in self._split(params))
+
+    def psi1(self, params, mu, S, Z) -> jax.Array:
+        return sum(p.psi1(pp, mu, S, Z) for p, pp in self._split(params))
+
+    def psi2(self, params, mu, S, Z) -> jax.Array:
+        pairs = self._split(params)
+        total = sum(p.psi2(pp, mu, S, Z) for p, pp in pairs)
+        for i, (pa, ppa) in enumerate(pairs):
+            for pb, ppb in pairs[i + 1 :]:
+                cross = _cross_psi2(pa, ppa, pb, ppb, mu, S, Z)
+                total = total + cross + cross.T
+        return total
+
+
+@register("product")
+class Product(_Composite):
+    """k = prod_i k_i. Exact statistics are generic (K_fu is an elementwise
+    product). Expected statistics exist in closed form only when every part
+    is an RBF: a product of RBFs is itself an RBF with variance prod sigma_i^2
+    and lengthscales (sum_i l_i^-2)^(-1/2) — delegate to that kernel.
+    """
+
+    def K(self, params: Params, X: jax.Array, X2: jax.Array | None = None) -> jax.Array:
+        out = None
+        for p, pp in self._split(params):
+            k = p.K(pp, X, X2)
+            out = k if out is None else out * k
+        return out
+
+    def Kdiag(self, params: Params, X: jax.Array) -> jax.Array:
+        out = None
+        for p, pp in self._split(params):
+            k = p.Kdiag(pp, X)
+            out = k if out is None else out * k
+        return out
+
+    def _equivalent_rbf(self, params: Params) -> tuple[RBF, Params]:
+        pairs = self._split(params)
+        if not all(isinstance(p, RBF) for p, _ in pairs):
+            raise NotImplementedError(
+                "Product psi statistics exist in closed form only for "
+                "all-RBF parts (the product is then itself an RBF); "
+                f"got {[type(p).__name__ for p, _ in pairs]}"
+            )
+        log_var = sum(pp["log_variance"] for _, pp in pairs)
+        inv_l2 = sum(jnp.exp(-2.0 * pp["log_lengthscale"]) for _, pp in pairs)
+        eq_params = {"log_variance": log_var, "log_lengthscale": -0.5 * jnp.log(inv_l2)}
+        return RBF(self.input_dim), eq_params
+
+    def psi0(self, params, mu, S) -> jax.Array:
+        k, p = self._equivalent_rbf(params)
+        return k.psi0(p, mu, S)
+
+    def psi1(self, params, mu, S, Z) -> jax.Array:
+        k, p = self._equivalent_rbf(params)
+        return k.psi1(p, mu, S, Z)
+
+    def psi2(self, params, mu, S, Z) -> jax.Array:
+        k, p = self._equivalent_rbf(params)
+        return k.psi2(p, mu, S, Z)
+
+    def expected_suff_stats(self, params, mu, S, Y, Z, *, backend: str = "jnp") -> SuffStats:
+        k, p = self._equivalent_rbf(params)
+        return k.expected_suff_stats(p, mu, S, Y, Z, backend=backend)

@@ -1,0 +1,258 @@
+"""GPy-style model facades over the distributed collapsed bound.
+
+    gp = SparseGPRegression(kernel=get("rbf")(1), M=32, mesh=make_gp_mesh())
+    gp.fit(X, Y, optimizer="adam", steps=300)
+    mean, var = gp.predict(Xt)
+
+The facades own exactly the wiring `examples/quickstart.py` used to hand-roll:
+parameter init, the (optionally distributed) loss, the optimizer driver, and
+the posterior/prediction epilogue. The math stays where it was — svgp.py for
+the bound, the kernel objects for statistics, core.distributed for the
+shard_map+psum decomposition — so the facade path and the hand-wired path
+produce bit-identical losses.
+
+`mesh=` selects the paper's data-parallel path (shard_map over the data axes,
+one psum of the sufficient statistics); `backend=` routes the statistics
+through Pallas TPU kernels ("pallas") or the fused streaming pass ("fused",
+GP-LVM only). Both come from the constructor so serving/config code can pick
+them by string without touching model internals.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import distributed, gplvm, inference, svgp
+from repro.gp.kernels import Kernel, RBF, default_rbf
+from repro.gp.stats import ExactBatch, suff_stats
+
+Params = Dict[str, jax.Array]
+
+_OPTIMIZERS = ("adam", "lbfgs")
+
+
+def _as_2d(Y: jax.Array) -> jax.Array:
+    return Y[:, None] if Y.ndim == 1 else Y
+
+
+def _pick_inducing(X: jax.Array, M: int) -> jax.Array:
+    """Every (N // M)-th datapoint — the quickstart's deterministic subset."""
+    N = X.shape[0]
+    if M >= N:
+        return X
+    return X[:: max(N // M, 1)][:M]
+
+
+class _CollapsedGPModel:
+    """Shared facade plumbing: kernel/mesh/backend state + optimizer driver."""
+
+    def __init__(self, kernel: Optional[Kernel], M: int, *,
+                 mesh: Optional[Mesh] = None, backend: str = "jnp"):
+        self.kernel = kernel
+        self.M = int(M)
+        self.mesh = mesh
+        self.backend = backend
+        self.params: Optional[Params] = None
+        self.history: list = []
+        self._loss_cache = None  # (kernel, built_loss): rebuilt if kernel changes
+        self._posterior_cache: Optional[svgp.Posterior] = None  # cleared by fit
+
+    # -- subclass hooks ----------------------------------------------------
+    def _build_loss(self):
+        raise NotImplementedError
+
+    def _loss_fn(self):
+        """Build the (possibly shard_map'd) loss once per kernel — repeated
+        elbo()/fit() calls reuse the same closure so jit caching holds."""
+        if self._loss_cache is None or self._loss_cache[0] is not self.kernel:
+            self._loss_cache = (self.kernel, self._build_loss())
+        return self._loss_cache[1]
+
+    def _require_fitted(self):
+        if self.params is None:
+            raise RuntimeError(f"{type(self).__name__} is not fitted yet — call .fit() first")
+
+    def _optimize(self, loss_fn, params: Params, data: tuple, *, optimizer: str,
+                  steps: int, lr: float, log_every: int) -> Params:
+        self._posterior_cache = None
+        if optimizer == "adam":
+            params, self.history = inference.fit_adam(
+                loss_fn, params, data, steps=steps, lr=lr, log_every=log_every)
+        elif optimizer == "lbfgs":
+            params, final = inference.fit_lbfgs(loss_fn, params, data, maxiter=steps)
+            self.history = [final]
+        else:
+            raise ValueError(f"optimizer must be one of {_OPTIMIZERS}, got {optimizer!r}")
+        return params
+
+    def elbo(self) -> float:
+        """Evidence lower bound (total, not per-datapoint) on the training data."""
+        self._require_fitted()
+        loss = self._loss_fn()
+        n = self._data[0].shape[0]
+        return float(-loss(self.params, *self._data) * n)
+
+
+class SparseGPRegression(_CollapsedGPModel):
+    """Sparse GP regression on the collapsed (Titsias) bound, paper eq. (2)-(3).
+
+    Args:
+      kernel: any `repro.gp.kernels.Kernel`; default RBF (inferred input dim).
+      M: number of inducing points (initialized as a subset of X).
+      mesh: optional jax Mesh — statistics shard over its data axes and merge
+        with one psum (the paper's MPI scheme); None = single-device math.
+      backend: "jnp" | "pallas" statistics path.
+    """
+
+    def __init__(self, kernel: Optional[Kernel] = None, M: int = 32, *,
+                 mesh: Optional[Mesh] = None, backend: str = "jnp"):
+        super().__init__(kernel, M, mesh=mesh, backend=backend)
+        self._data: Optional[Tuple[jax.Array, jax.Array]] = None
+
+    def _build_loss(self):
+        if self.mesh is not None:
+            return distributed.sgpr_loss_dist(self.mesh, kernel=self.kernel,
+                                              backend=self.backend)
+        kernel, backend = self.kernel, self.backend
+
+        def loss(params: Params, X: jax.Array, Y: jax.Array) -> jax.Array:
+            kern = default_rbf(kernel, params["Z"].shape[1])
+            stats = suff_stats(kern, params["kern"],
+                               ExactBatch(X, Y, params["Z"]), backend=backend)
+            Kuu = kern.K(params["kern"], params["Z"])
+            terms = svgp.collapsed_bound(Kuu, stats, jnp.exp(params["log_beta"]),
+                                         Y.shape[1])
+            return -terms.bound / stats.n
+
+        return loss
+
+    def init_params(self, X: jax.Array, Y: jax.Array, *,
+                    log_beta: float = 2.0) -> Params:
+        if self.kernel is None:
+            self.kernel = RBF(X.shape[1])
+        return {
+            "kern": self.kernel.init(),
+            "Z": _pick_inducing(X, self.M),
+            "log_beta": jnp.asarray(log_beta, X.dtype),
+        }
+
+    def fit(self, X: jax.Array, Y: jax.Array, *, optimizer: str = "adam",
+            steps: int = 300, lr: float = 3e-2, log_every: int = 0,
+            params: Optional[Params] = None) -> "SparseGPRegression":
+        Y = _as_2d(Y)
+        if params is None:
+            params = self.init_params(X, Y)
+        elif self.kernel is None:
+            self.kernel = RBF(params["Z"].shape[1])
+        self._data = (X, Y)
+        self.params = self._optimize(self._loss_fn(), params, (X, Y),
+                                     optimizer=optimizer, steps=steps, lr=lr,
+                                     log_every=log_every)
+        return self
+
+    def posterior(self) -> svgp.Posterior:
+        """Optimal q(u) implied by the collapsed bound at the fitted params.
+        Cached: the O(N M^2) statistics pass runs once per fit, not per
+        predict call."""
+        self._require_fitted()
+        if self._posterior_cache is not None:
+            return self._posterior_cache
+        X, Y = self._data
+        p = self.params
+        stats = suff_stats(self.kernel, p["kern"], ExactBatch(X, Y, p["Z"]),
+                           backend=self.backend)
+        beta = jnp.exp(p["log_beta"])
+        terms = svgp.collapsed_bound(self.kernel.K(p["kern"], p["Z"]), stats,
+                                     beta, Y.shape[1])
+        self._posterior_cache = svgp.optimal_qu(terms, beta)
+        return self._posterior_cache
+
+    def predict(self, Xt: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Posterior mean (N*, D) and marginal variance (N*,) of f at Xt."""
+        self._require_fitted()
+        p = self.params
+        post = self.posterior()
+        return svgp.predict_f(post, self.kernel.K(p["kern"], Xt, p["Z"]),
+                              self.kernel.Kdiag(p["kern"], Xt))
+
+
+class BayesianGPLVM(_CollapsedGPModel):
+    """Bayesian GP-LVM (paper eq. (4)): latent X with factorized Gaussian q(X).
+
+    Args:
+      kernel: kernel with closed-form psi statistics (RBF/Linear or their
+        Sum/Product composites); default RBF(Q).
+      Q: latent dimensionality.
+      M: number of inducing points.
+      mesh / backend: as for SparseGPRegression; backend additionally accepts
+        "fused" (single streaming pass producing psi1/psi2 together).
+    """
+
+    def __init__(self, kernel: Optional[Kernel] = None, M: int = 100,
+                 Q: Optional[int] = None, *,
+                 mesh: Optional[Mesh] = None, backend: str = "jnp"):
+        super().__init__(kernel, M, mesh=mesh, backend=backend)
+        if kernel is not None and Q is not None and Q != kernel.input_dim:
+            raise ValueError(
+                f"Q={Q} conflicts with kernel.input_dim={kernel.input_dim}; "
+                f"pass one or make them agree"
+            )
+        self.Q = kernel.input_dim if kernel is not None else (Q if Q is not None else 1)
+        self._data: Optional[Tuple[jax.Array]] = None
+
+    def _build_loss(self):
+        if self.mesh is not None:
+            return distributed.gplvm_loss_dist(self.mesh, kernel=self.kernel,
+                                               backend=self.backend)
+        return functools.partial(gplvm.loss, kernel=self.kernel, backend=self.backend)
+
+    def fit(self, Y: jax.Array, *, optimizer: str = "adam", steps: int = 400,
+            lr: float = 2e-2, log_every: int = 0,
+            init_X: Optional[jax.Array] = None,
+            key: Optional[jax.Array] = None,
+            params: Optional[Params] = None) -> "BayesianGPLVM":
+        Y = _as_2d(Y)
+        if self.kernel is None:
+            self.kernel = RBF(self.Q)
+        if params is None:
+            params = gplvm.init_params(key if key is not None else jax.random.PRNGKey(0),
+                                       np.asarray(Y), self.Q, self.M,
+                                       init_X=init_X, kernel=self.kernel)
+        if self.mesh is not None:
+            params = distributed.shard_gp_params(params, self.mesh)
+        self._data = (Y,)
+        self.params = self._optimize(self._loss_fn(), params, (Y,),
+                                     optimizer=optimizer, steps=steps, lr=lr,
+                                     log_every=log_every)
+        return self
+
+    def latent(self) -> Tuple[jax.Array, jax.Array]:
+        """Variational posterior over the latents: (q_mu, q_S)."""
+        self._require_fitted()
+        return self.params["q_mu"], jnp.exp(self.params["q_logS"])
+
+    def posterior(self) -> svgp.Posterior:
+        self._require_fitted()
+        if self._posterior_cache is not None:
+            return self._posterior_cache
+        (Y,) = self._data
+        p = self.params
+        stats = gplvm.local_stats(p, Y, kernel=self.kernel, backend=self.backend)
+        beta = jnp.exp(p["log_beta"])
+        terms = svgp.collapsed_bound(self.kernel.K(p["kern"], p["Z"]), stats,
+                                     beta, Y.shape[1])
+        self._posterior_cache = svgp.optimal_qu(terms, beta)
+        return self._posterior_cache
+
+    def predict(self, Xstar: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Decode latent coordinates Xstar to data space: mean (N*, D), var (N*,)."""
+        self._require_fitted()
+        p = self.params
+        post = self.posterior()
+        return svgp.predict_f(post, self.kernel.K(p["kern"], Xstar, p["Z"]),
+                              self.kernel.Kdiag(p["kern"], Xstar))

@@ -1,0 +1,52 @@
+"""Kernel-dispatched sufficient statistics for the collapsed bound.
+
+One entry point, `suff_stats(kernel, params, batch, backend=...)`, replaces
+the RBF-only free functions (`psi_stats.exact_stats_rbf` / `expected_stats_rbf`)
+at every call site: the batch type selects exact (deterministic X) vs
+expected (Gaussian q(X)) statistics, the kernel object supplies the math,
+and `backend` routes the hot path through Pallas kernels ("pallas"), the
+fused streaming-jnp pass ("fused", RBF expected only) or plain jnp.
+
+The returned `SuffStats` is the same commutative monoid as before — callers
+psum/combine it identically regardless of kernel or backend.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Union
+
+import jax
+
+from repro.core.psi_stats import SuffStats
+from repro.gp.kernels import Kernel, Params
+
+
+class ExactBatch(NamedTuple):
+    """Supervised sparse-GP data: deterministic inputs X."""
+
+    X: jax.Array  # (N, Q)
+    Y: jax.Array  # (N, D)
+    Z: jax.Array  # (M, Q)
+
+
+class ExpectedBatch(NamedTuple):
+    """Bayesian GP-LVM data: Gaussian q(X) = prod_n N(mu_n, diag(S_n))."""
+
+    mu: jax.Array  # (N, Q)
+    S: jax.Array  # (N, Q)
+    Y: jax.Array  # (N, D)
+    Z: jax.Array  # (M, Q)
+
+
+Batch = Union[ExactBatch, ExpectedBatch]
+
+
+def suff_stats(kernel: Kernel, params: Params, batch: Batch, *,
+               backend: str = "jnp") -> SuffStats:
+    """Sufficient statistics of `batch` under `kernel`, kernel-dispatched."""
+    if isinstance(batch, ExactBatch):
+        return kernel.exact_suff_stats(params, batch.X, batch.Y, batch.Z, backend=backend)
+    if isinstance(batch, ExpectedBatch):
+        return kernel.expected_suff_stats(
+            params, batch.mu, batch.S, batch.Y, batch.Z, backend=backend
+        )
+    raise TypeError(f"expected ExactBatch or ExpectedBatch, got {type(batch).__name__}")

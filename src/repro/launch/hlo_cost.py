@@ -152,6 +152,7 @@ class HloCostModel:
         self.entry: Optional[str] = None
         self._parse(hlo_text)
         self._memo: Dict[str, Cost] = {}
+        self._params_memo: Dict[str, Dict[int, str]] = {}
 
     # ------------------------------------------------------------------
     def _parse(self, text: str) -> None:
@@ -246,6 +247,62 @@ class HloCostModel:
     # ------------------------------------------------------------------
     _SLICING_OPS = {"dynamic-slice", "gather", "slice"}
 
+    def _comp_params(self, comp: str) -> Dict[int, str]:
+        cached = self._params_memo.get(comp)
+        if cached is not None:
+            return cached
+        params: Dict[int, str] = {}
+        for i in self.comps.get(comp, []):
+            if i.opcode == "parameter":
+                m = re.match(r"(\d+)", i.rest)
+                if m:
+                    params[int(m.group(1))] = i.name
+        self._params_memo[comp] = params
+        return params
+
+    def _param_traffic(self, callee: str, idx: int, *, depth: int = 0) -> Optional[float]:
+        """Bytes `callee` actually reads from its idx-th parameter, or None
+        when any use touches the full array (caller then charges full size).
+        Recurses through nested fusion/call wrappers — newer XLA wraps the
+        loop-body slice fusion in a parallel `call` computation."""
+        if depth > 4:
+            return None
+        pname = self._comp_params(callee).get(idx)
+        if pname is None:
+            return None
+        instrs = self.comps.get(callee, [])
+        uses = [i for i in instrs if pname in self._operand_names(i)]
+        if not uses:
+            return None
+        total = 0.0
+        for u in uses:
+            if u.opcode in self._SLICING_OPS:
+                total += _parse_shape(u.ty)[0]
+                continue
+            if u.opcode == "dynamic-update-slice":
+                uops = self._operand_names(u)
+                if uops and uops[0] == pname and len(uops) > 1:
+                    # in-place update target: traffic = the update slice
+                    sym = self._symtab(callee)
+                    total += _parse_shape(sym.get(uops[1], ""))[0]
+                    continue
+                return None
+            if u.opcode in ("fusion", "call"):
+                sub = self._called(u)
+                if not sub:
+                    return None
+                # the same array may feed several operand slots: charge each
+                for sub_idx, o in enumerate(self._operand_names(u)):
+                    if o != pname:
+                        continue
+                    b = self._param_traffic(sub[0], sub_idx, depth=depth + 1)
+                    if b is None:
+                        return None
+                    total += b
+                continue
+            return None
+        return total
+
     def _fusion_operand_bytes(self, callee: str, operands: List[str],
                               symtab: Dict[str, str]) -> float:
         """Bytes read by a fusion, counting a parameter consumed ONLY by
@@ -253,40 +310,13 @@ class HloCostModel:
         scan-over-layers accounting honest: the stacked (L, ...) parameter
         array enters the loop-body fusion, but each iteration only touches
         one layer's slice."""
-        instrs = self.comps.get(callee)
-        if instrs is None:
+        if self.comps.get(callee) is None:
             return sum(_parse_shape(symtab.get(o, ""))[0] for o in operands)
-        params: Dict[int, str] = {}
-        for i in instrs:
-            if i.opcode == "parameter":
-                m = re.match(r"(\d+)", i.rest)
-                if m:
-                    params[int(m.group(1))] = i.name
         total = 0.0
         for idx, opname in enumerate(operands):
             full = _parse_shape(symtab.get(opname, ""))[0]
-            pname = params.get(idx)
-            if pname is None:
-                total += full
-                continue
-            uses = [i for i in instrs if pname in self._operand_names(i)]
-
-            def _use_bytes(u):
-                if u.opcode in self._SLICING_OPS:
-                    return _parse_shape(u.ty)[0]
-                if u.opcode == "dynamic-update-slice":
-                    uops = self._operand_names(u)
-                    if uops and uops[0] == pname and len(uops) > 1:
-                        # in-place update target: traffic = the update slice
-                        sym = self._symtab(callee)
-                        return _parse_shape(sym.get(uops[1], ""))[0]
-                return None
-
-            per_use = [_use_bytes(u) for u in uses]
-            if uses and all(b is not None for b in per_use):
-                total += sum(per_use)
-            else:
-                total += full
+            sliced = self._param_traffic(callee, idx)
+            total += full if sliced is None else sliced
         return total
 
     def comp_cost(self, comp: str) -> Cost:

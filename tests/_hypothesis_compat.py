@@ -1,0 +1,73 @@
+"""Use real `hypothesis` when installed; otherwise a tiny deterministic
+fallback so the property tests still collect AND run (satisfying the suite
+on minimal images). The fallback draws a fixed pseudo-random sample per
+strategy per example — far weaker than hypothesis (no shrinking, no database)
+but it executes the same properties over a spread of inputs.
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: rng.choice(options))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    st = _Strategies()
+
+    def settings(*, max_examples: int = _FALLBACK_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # no functools.wraps: pytest would follow __wrapped__ / the copied
+            # signature and demand the strategy names as fixtures
+            def wrapper(*args, **kwargs):
+                # read at call time: @settings sits ABOVE @given and tags the
+                # wrapper after given() has already run
+                n = getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES)
+                # deterministic per-test stream: same examples every run
+                rng = random.Random(fn.__name__)
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in strategies.items()}
+                    fn(*args, **{**kwargs, **drawn})
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

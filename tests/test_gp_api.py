@@ -1,0 +1,304 @@
+"""The `repro.gp` facade: registry round-trips, kernel protocol, composite
+psi statistics vs dense references, and facade-vs-hand-wired parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributed, gplvm, svgp
+from repro.gp import BayesianGPLVM, SparseGPRegression, available, get, kernels, suff_stats
+from repro.gp.kernels import RBF, Linear, Matern32, Product, Sum
+from repro.gp.stats import ExactBatch, ExpectedBatch
+
+ALL_NAMES = ("rbf", "linear", "matern12", "matern32", "matern52", "sum", "product")
+
+
+def _f64(params):
+    return jax.tree.map(lambda x: x.astype(jnp.float64), params)
+
+
+def _make(name, Q=2):
+    cls = get(name)
+    if name in ("sum", "product"):
+        return cls(RBF(Q), Linear(Q))
+    return cls(Q)
+
+
+def _qx(key, N, Q):
+    k1, k2 = jax.random.split(key)
+    mu = jax.random.normal(k1, (N, Q), jnp.float64)
+    S = 0.05 + 0.2 * jax.random.uniform(k2, (N, Q), jnp.float64)
+    return mu, S
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_round_trip_every_name():
+    assert set(ALL_NAMES) <= set(available())
+    for name in available():
+        cls = get(name)
+        assert cls.name == name
+        kern = _make(name)
+        params = kern.init()
+        # every kernel evaluates K and Kdiag
+        X = jax.random.normal(jax.random.PRNGKey(0), (7, kern.input_dim), jnp.float64)
+        K = kern.K(_f64(params), X)
+        assert K.shape == (7, 7)
+        np.testing.assert_allclose(np.asarray(jnp.diagonal(K)),
+                                   np.asarray(kern.Kdiag(_f64(params), X)),
+                                   rtol=1e-9, atol=1e-9)
+
+
+def test_registry_unknown_name_lists_available():
+    with pytest.raises(KeyError, match="rbf"):
+        get("no-such-kernel")
+
+
+# ---------------------------------------------------------------------------
+# kernel protocol: exact statistics are kernel-generic
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_exact_stats_match_dense_kfu_reference(name):
+    """SuffStats from any kernel == the dense K_fu-based definition."""
+    key = jax.random.PRNGKey(1)
+    kern = _make(name)
+    p = _f64(kern.init())
+    X = jax.random.normal(key, (40, 2), jnp.float64)
+    Y = jax.random.normal(jax.random.fold_in(key, 1), (40, 3), jnp.float64)
+    Z = jax.random.normal(jax.random.fold_in(key, 2), (9, 2), jnp.float64)
+    stats = kern.exact_suff_stats(p, X, Y, Z)
+    Kfu = kern.K(p, X, Z)
+    np.testing.assert_allclose(np.asarray(stats.psi2), np.asarray(Kfu.T @ Kfu), rtol=1e-10)
+    np.testing.assert_allclose(np.asarray(stats.psiY), np.asarray(Kfu.T @ Y), rtol=1e-10)
+    np.testing.assert_allclose(float(stats.psi0), float(jnp.sum(kern.Kdiag(p, X))), rtol=1e-10)
+    assert float(stats.n) == 40
+
+
+@pytest.mark.parametrize("name", ("matern12", "matern32", "matern52"))
+def test_matern_expected_stats_raise_cleanly(name):
+    kern = _make(name)
+    p = _f64(kern.init())
+    mu, S = _qx(jax.random.PRNGKey(2), 10, 2)
+    Y = jnp.ones((10, 1), jnp.float64)
+    Z = mu[:4]
+    with pytest.raises(NotImplementedError, match="psi statistics"):
+        kern.expected_suff_stats(p, mu, S, Y, Z)
+
+
+def test_matern_bound_below_exact_marginal():
+    """The collapsed bound through a Matern kernel is still a lower bound."""
+    key = jax.random.PRNGKey(3)
+    kern = Matern32(2)
+    p = _f64(kern.init(1.2, 0.9))
+    X = jax.random.normal(key, (120, 2), jnp.float64)
+    Y = jnp.sin(X @ jnp.ones((2, 2), jnp.float64)) \
+        + 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (120, 2), jnp.float64)
+    beta = jnp.asarray(50.0, jnp.float64)
+    exact = svgp.exact_gp_log_marginal(kern.K(p, X), Y, beta)
+    stats = kern.exact_suff_stats(p, X, Y, X[:25])
+    terms = svgp.collapsed_bound(kern.K(p, X[:25]), stats, beta, Y.shape[1])
+    assert float(terms.bound) <= float(exact)
+
+
+# ---------------------------------------------------------------------------
+# composite kernels: expected (psi) statistics vs dense per-point reference
+# ---------------------------------------------------------------------------
+
+def _psi2_reference_quadrature(kern, params, mu, S, Z, n_grid=600):
+    """Dense reference: <k_fu^T k_fu> by Gauss-ish quadrature per datapoint,
+    valid for any 1-D latent kernel. Independent of the closed forms."""
+    N, Q = mu.shape
+    assert Q == 1
+    # midpoint rule over +-8 sigma per point
+    t = jnp.linspace(-8.0, 8.0, n_grid)
+    w = (t[1] - t[0]) * jnp.exp(-0.5 * t**2) / jnp.sqrt(2.0 * jnp.pi)
+    total = jnp.zeros((Z.shape[0], Z.shape[0]), jnp.float64)
+    psi1 = jnp.zeros((N, Z.shape[0]), jnp.float64)
+    for n in range(N):
+        x = (mu[n, 0] + jnp.sqrt(S[n, 0]) * t)[:, None]  # (G, 1)
+        Kf = kern.K(params, x, Z)  # (G, M)
+        psi1 = psi1.at[n].set(jnp.einsum("g,gm->m", w, Kf))
+        total = total + jnp.einsum("g,gm,gl->ml", w, Kf, Kf)
+    return psi1, total
+
+
+@pytest.mark.parametrize("make_kern", [
+    lambda: Sum(RBF(1), Linear(1)),
+    lambda: Sum(Linear(1), RBF(1)),
+    lambda: Sum(Linear(1), Linear(1)),
+    lambda: Product(RBF(1), RBF(1)),
+])
+def test_composite_expected_stats_match_dense_reference(make_kern):
+    key = jax.random.PRNGKey(4)
+    kern = make_kern()
+    p = _f64(kern.init())
+    mu, S = _qx(key, 6, 1)
+    Z = jax.random.normal(jax.random.fold_in(key, 1), (5, 1), jnp.float64)
+    Y = jax.random.normal(jax.random.fold_in(key, 2), (6, 2), jnp.float64)
+    psi1_ref, psi2_ref = _psi2_reference_quadrature(kern, p, mu, S, Z)
+    stats = kern.expected_suff_stats(p, mu, S, Y, Z)
+    np.testing.assert_allclose(np.asarray(kern.psi1(p, mu, S, Z)), np.asarray(psi1_ref),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(stats.psi2), np.asarray(psi2_ref),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(stats.psiY), np.asarray(psi1_ref.T @ Y),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_sum_cross_terms_unsupported_pair_raises():
+    kern = Sum(RBF(1), Matern32(1))
+    p = _f64(kern.init())
+    mu, S = _qx(jax.random.PRNGKey(5), 4, 1)
+    with pytest.raises(NotImplementedError):
+        kern.psi2(p, mu, S, mu[:2])
+
+
+def test_non_rbf_backend_pallas_raises_not_silently_falls_back():
+    kern = Sum(RBF(1), Linear(1))
+    p = _f64(kern.init())
+    X = jnp.ones((4, 1), jnp.float64)
+    with pytest.raises(ValueError, match="backend"):
+        kern.exact_suff_stats(p, X, X, X[:2], backend="pallas")
+
+
+def test_gplvm_q_kernel_mismatch_raises():
+    with pytest.raises(ValueError, match="input_dim"):
+        BayesianGPLVM(kernel=get("rbf")(2), Q=3)
+
+
+def test_product_non_rbf_expected_raises():
+    kern = Product(RBF(1), Linear(1))
+    p = _f64(kern.init())
+    mu, S = _qx(jax.random.PRNGKey(6), 4, 1)
+    with pytest.raises(NotImplementedError, match="all-RBF"):
+        kern.psi1(p, mu, S, mu[:2])
+
+
+# ---------------------------------------------------------------------------
+# suff_stats dispatch
+# ---------------------------------------------------------------------------
+
+def test_suff_stats_dispatches_on_batch_type():
+    key = jax.random.PRNGKey(7)
+    kern = RBF(2)
+    p = _f64(kern.init(1.3, 0.8))
+    X = jax.random.normal(key, (30, 2), jnp.float64)
+    Y = jax.random.normal(jax.random.fold_in(key, 1), (30, 2), jnp.float64)
+    Z = X[:8]
+    a = suff_stats(kern, p, ExactBatch(X, Y, Z))
+    b = kern.exact_suff_stats(p, X, Y, Z)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    mu, S = _qx(key, 30, 2)
+    c = suff_stats(kern, p, ExpectedBatch(mu, S, Y, Z))
+    d = kern.expected_suff_stats(p, mu, S, Y, Z)
+    for x, y in zip(c, d):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    with pytest.raises(TypeError):
+        suff_stats(kern, p, (X, Y, Z))
+
+
+# ---------------------------------------------------------------------------
+# facade vs hand-wired parity
+# ---------------------------------------------------------------------------
+
+def _quickstart_data(N=600):
+    key = jax.random.PRNGKey(0)
+    X = jnp.sort(jax.random.uniform(key, (N, 1), minval=-3.0, maxval=3.0), axis=0)
+    f = jnp.sin(2.0 * X[:, 0]) + 0.3 * jnp.cos(5.0 * X[:, 0])
+    Y = (f + 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (N,)))[:, None]
+    return X.astype(jnp.float64), Y.astype(jnp.float64), f
+
+
+def test_facade_matches_hand_wired_sgpr_bound():
+    """SparseGPRegression reproduces the hand-wired distributed loss to 1e-5
+    (same data, same init) with and without a mesh."""
+    X, Y, _ = _quickstart_data()
+    mesh = distributed.make_gp_mesh()
+    gp = SparseGPRegression(kernel=get("rbf")(1), M=32, mesh=mesh)
+    p0 = _f64(gp.init_params(X, Y))
+    hand_wired = distributed.sgpr_loss_dist(mesh)
+    a = float(hand_wired(p0, X, Y))
+    b = float(gp._loss_fn()(p0, X, Y))
+    assert abs(a - b) < 1e-5, (a, b)
+    local = float(SparseGPRegression(kernel=get("rbf")(1), M=32)._loss_fn()(p0, X, Y))
+    assert abs(a - local) < 1e-5, (a, local)
+
+
+def test_facade_matches_hand_wired_gplvm_bound():
+    key = jax.random.PRNGKey(0)
+    from repro.data.synthetic import gplvm_synthetic
+
+    _, Y = gplvm_synthetic(key, N=96, D=3, Q=1)
+    Y = Y.astype(jnp.float64)
+    params = _f64(gplvm.init_params(key, np.asarray(Y), Q=1, M=12))
+    mesh = distributed.make_gp_mesh()
+    a = float(distributed.gplvm_loss_dist(mesh)(params, Y))
+    lvm = BayesianGPLVM(kernel=get("rbf")(1), M=12, mesh=mesh)
+    b = float(lvm._loss_fn()(params, Y))
+    assert abs(a - b) < 1e-5, (a, b)
+    c = float(gplvm.loss(params, Y))
+    assert abs(a - c) < 1e-5, (a, c)
+
+
+def test_facade_quickstart_fit_and_predict():
+    """The 10-line quickstart through the facade: RMSE < 0.1 like the paper
+    example, calibrated variance, pallas backend selectable."""
+    X, Y, f = _quickstart_data(N=800)
+    mesh = distributed.make_gp_mesh()
+    gp = SparseGPRegression(kernel=get("rbf")(1), M=32, mesh=mesh).fit(
+        X, Y, steps=200, lr=3e-2)
+    mean, var = gp.predict(X)
+    rmse = float(jnp.sqrt(jnp.mean((mean[:, 0] - f) ** 2)))
+    assert rmse < 0.1, rmse
+    assert np.all(np.asarray(var) > 0)
+    assert np.isfinite(gp.elbo())
+
+
+def test_facade_backend_pallas_matches_jnp():
+    X, Y, _ = _quickstart_data(N=300)
+    X32, Y32 = X.astype(jnp.float32), Y.astype(jnp.float32)
+    base = SparseGPRegression(kernel=get("rbf")(1), M=16)
+    p0 = base.init_params(X32, Y32)
+    a = float(base._loss_fn()(p0, X32, Y32))
+    pal = SparseGPRegression(kernel=get("rbf")(1), M=16, backend="pallas")
+    pal.kernel = pal.kernel or get("rbf")(1)
+    b = float(pal._loss_fn()(p0, X32, Y32))
+    assert abs(a - b) < 1e-4 * max(1.0, abs(a)), (a, b)
+
+
+def test_facade_fit_with_matern_and_lbfgs():
+    X, Y, f = _quickstart_data(N=300)
+    gp = SparseGPRegression(kernel=get("matern52")(1), M=24).fit(
+        X, Y, optimizer="lbfgs", steps=40)
+    mean, _ = gp.predict(X)
+    rmse = float(jnp.sqrt(jnp.mean((mean[:, 0] - f) ** 2)))
+    assert rmse < 0.2, rmse
+
+
+def test_facade_gplvm_recovers_latent():
+    key = jax.random.PRNGKey(0)
+    from repro.data.synthetic import gplvm_synthetic
+
+    X_true, Y = gplvm_synthetic(key, N=192, D=3, Q=1)
+    lvm = BayesianGPLVM(kernel=get("rbf")(1), M=16, mesh=distributed.make_gp_mesh())
+    lvm.fit(Y.astype(jnp.float64), steps=150, lr=5e-2, key=key)
+    mu, S = lvm.latent()
+    corr = abs(np.corrcoef(np.asarray(mu[:, 0]), np.asarray(X_true[:, 0]))[0, 1])
+    assert corr > 0.9, corr
+    assert np.all(np.asarray(S) > 0)
+
+
+def test_param_spec_table_covers_model_params():
+    """The declarative role table is the single source of truth for specs."""
+    mesh = distributed.make_gp_mesh()
+    specs = distributed.make_param_specs(distributed.GPLVM_PARAM_NAMES, mesh)
+    assert set(specs) == set(distributed.GPLVM_PARAM_NAMES)
+    from jax.sharding import PartitionSpec as P
+
+    assert specs["q_mu"] == P(("data",))
+    assert specs["kern"] == P()
+    assert distributed.PARAM_ROLES["q_logS"] == "local"

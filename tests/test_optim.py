@@ -3,7 +3,7 @@ top-k compression with error feedback."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.optim import (AdamConfig, adam_init, adam_update, constant_schedule,
                          cosine_schedule, topk_compress_decompress, wsd_schedule)

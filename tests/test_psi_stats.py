@@ -3,7 +3,7 @@ scheme rests on (stats form a commutative monoid over datapoint subsets)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import psi_stats
 from repro.core.gp_kernels import Linear, RBF
