@@ -1,0 +1,118 @@
+"""Streaming sufficient-statistics engine benchmark (BENCH_gp.json).
+
+Time-per-point and a trace-level peak-memory estimate versus N for the
+streaming (`chunk=`) engine, on the jnp and fused backends, up to a million
+datapoints on whatever this host is — the harness future perf PRs measure
+against. A "pallas-interpret" row exercises the fused Pallas kernel body
+(off-TPU it only runs for small N; see repro.kernels.ops).
+
+Rows time the jitted GP-LVM negative-ELBO (pass="loss", the predict-time
+statistics cost) and its value_and_grad (pass="step", the training step
+cost, timed at the smaller sizes so the full sweep stays minutes-scale),
+plus the exact-path SGPR loss — all chunked, so nothing materializes an
+(N, M) workspace (the peak_intermediate_bytes column is the proof).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, time_call, validate_psi_kernel
+from repro.core import gplvm
+from repro.data.synthetic import gplvm_synthetic
+from repro.gp import get
+from repro.launch.memory import peak_intermediate_bytes
+
+SIZES = (16384, 65536, 262144, 1048576)
+SMOKE_SIZES = (1024, 4096)
+GRAD_MAX_N = 65536  # value_and_grad rows are timed up to this size
+M, Q, D = 32, 1, 2
+CHUNK = 4096
+BACKENDS = ("jnp", "fused")
+
+
+def _json_row(model, backend, pass_, N, seconds, peak_bytes):
+    # the engine chunk only steers the jnp path; the fused/pallas ops stream
+    # at their own internal granularity, so their rows must not claim it
+    return {
+        "section": "gp_stream", "model": model, "backend": backend,
+        "pass": pass_, "N": int(N), "M": M,
+        "chunk": CHUNK if backend == "jnp" else None,
+        "seconds": float(seconds),
+        "us_per_point": float(seconds / N * 1e6),
+        "peak_intermediate_bytes": int(peak_bytes),
+    }
+
+
+def _bench(fn, *args, N):
+    jfn = jax.jit(fn)
+    t = time_call(jfn, *args, warmup=1, iters=1 if N > GRAD_MAX_N else 2)
+    peak = peak_intermediate_bytes(fn, *args)
+    return t, peak
+
+
+def run(sizes=SIZES, kernel_name: str = "rbf", *, smoke: bool = False):
+    """Returns (csv_rows, json_rows)."""
+    validate_psi_kernel(kernel_name)
+    if smoke:
+        sizes = SMOKE_SIZES
+    # the fused/pallas ops are RBF-only; other psi-capable kernels sweep jnp
+    backends = BACKENDS if kernel_name == "rbf" else ("jnp",)
+    csv, rows = [], []
+    key = jax.random.PRNGKey(0)
+    kern = get(kernel_name)(Q)
+
+    for N in sizes:
+        _, Y = gplvm_synthetic(key, N=N, D=D, Q=Q)
+        params = gplvm.init_params(key, np.asarray(Y), Q=Q, M=M, kernel=kern)
+        for backend in backends:
+            loss = functools.partial(gplvm.loss, kernel=kern, backend=backend,
+                                     chunk=CHUNK)
+            t, peak = _bench(loss, params, Y, N=N)
+            rows.append(_json_row("gplvm", backend, "loss", N, t, peak))
+            csv.append(row(f"gp_stream_gplvm_{backend}_loss_N{N}", t,
+                           f"per_point_us={t/N*1e6:.3f},peak_mb={peak/1e6:.1f}"))
+            if N <= GRAD_MAX_N:
+                vg = jax.value_and_grad(loss)
+                t, peak = _bench(vg, params, Y, N=N)
+                rows.append(_json_row("gplvm", backend, "step", N, t, peak))
+                csv.append(row(f"gp_stream_gplvm_{backend}_step_N{N}", t,
+                               f"per_point_us={t/N*1e6:.3f},peak_mb={peak/1e6:.1f}"))
+
+    # exact-path (SGPR) streaming: matmul-bound, cheap even at 1M
+    from repro.gp import SparseGPRegression
+
+    for N in sizes:
+        kx, kn = jax.random.split(jax.random.fold_in(key, N))
+        X = jax.random.uniform(kx, (N, 1), jax.numpy.float32, -3.0, 3.0)
+        Ys = jax.numpy.sin(2.0 * X) + 0.1 * jax.random.normal(kn, (N, 1))
+        gp = SparseGPRegression(kernel=get(kernel_name)(1), M=M, chunk=CHUNK)
+        p = gp.init_params(X, Ys)
+        loss = gp._loss_fn()
+        t, peak = _bench(loss, p, X, Ys, N=N)
+        rows.append(_json_row("sgpr", "jnp", "loss", N, t, peak))
+        csv.append(row(f"gp_stream_sgpr_jnp_loss_N{N}", t,
+                       f"per_point_us={t/N*1e6:.3f},peak_mb={peak/1e6:.1f}"))
+
+    # fused Pallas kernel body in interpret mode (small-N: per-grid-point
+    # interpretation is Python-priced; the TPU perf story is the roofline)
+    from repro.kernels import ops
+
+    n_int = min(1024, ops.FUSED_INTERPRET_MAX_N)
+    if not smoke and kernel_name == "rbf":  # smoke's fused N=1024 row is interpret already
+        _, Y = gplvm_synthetic(key, N=n_int, D=D, Q=Q)
+        params = gplvm.init_params(key, np.asarray(Y), Q=Q, M=M, kernel=kern)
+        loss = functools.partial(gplvm.loss, kernel=kern, backend="fused")
+        t, peak = _bench(loss, params, Y, N=n_int)
+        label = "pallas-interpret" if ops.INTERPRET else "pallas"
+        rows.append(_json_row("gplvm", label, "loss", n_int, t, peak))
+        csv.append(row(f"gp_stream_gplvm_{label}_loss_N{n_int}", t,
+                       f"per_point_us={t/n_int*1e6:.3f},peak_mb={peak/1e6:.1f}"))
+    return csv, rows
+
+
+if __name__ == "__main__":
+    csv, _ = run(smoke=True)
+    print("\n".join(csv))

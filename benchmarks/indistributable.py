@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_call
+from benchmarks.common import row, time_call, validate_psi_kernel
 from repro.core import gplvm
 from repro.data.synthetic import gplvm_synthetic
 from repro.gp import get
@@ -21,6 +21,7 @@ M = 100
 
 
 def run(sizes=SIZES, kernel_name: str = "rbf") -> list[str]:
+    validate_psi_kernel(kernel_name)
     out = []
     key = jax.random.PRNGKey(0)
     kern = get(kernel_name)(1)

@@ -1,35 +1,88 @@
-"""Benchmark driver: one section per paper table/figure + the roofline table.
+"""Benchmark driver: one section per paper table/figure + the roofline table
++ the streaming-engine sweep (BENCH_gp.json).
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast|--smoke] [--only SECTION] \
+        [--out BENCH_gp.json]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows to stdout. Whenever the
+gp_stream section runs (the default; excluded only by ``--only`` with
+another section), the machine-readable streaming-engine results (time/point
++ peak-memory estimate vs N for the jnp and fused backends) are written to
+``--out`` so perf PRs have a trajectory to diff against.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+
+SECTIONS = ("gp_scaling", "indistributable", "psi_kernels", "gp_stream",
+            "lm_step", "roofline")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fast", action="store_true", help="smaller sweeps")
+    ap.add_argument("--fast", "--smoke", dest="fast", action="store_true",
+                    help="smaller sweeps (CI smoke mode)")
+    ap.add_argument("--only", choices=SECTIONS, default=None,
+                    help="run a single section")
+    ap.add_argument("--out", default=None,
+                    help="where to write the streaming-engine JSON "
+                         "(default: BENCH_gp.json, or BENCH_gp.smoke.json "
+                         "under --smoke so the committed full-sweep "
+                         "trajectory is never clobbered by a smoke run)")
     args = ap.parse_args()
+    if args.out is None:
+        args.out = "BENCH_gp.smoke.json" if args.fast else "BENCH_gp.json"
 
-    from benchmarks import gp_scaling, indistributable, lm_step, psi_kernels, roofline_table
+    def wanted(name: str) -> bool:
+        return args.only is None or args.only == name
+
+    from benchmarks import (gp_scaling, gp_stream, indistributable, lm_step,
+                            psi_kernels, roofline_table)
     from repro.configs.base import ARCH_IDS
 
     rows = ["name,us_per_call,derived"]
-    print("# paper Fig 1a - GP-LVM iteration time vs N", file=sys.stderr)
-    rows += gp_scaling.run(sizes=(1024, 4096) if args.fast else gp_scaling.SIZES)
-    print("# paper Fig 1b - indistributable fraction", file=sys.stderr)
-    rows += indistributable.run(sizes=(1024, 4096) if args.fast else indistributable.SIZES)
-    print("# paper S3 - psi-statistic kernels", file=sys.stderr)
-    rows += psi_kernels.run()
-    print("# LM smoke step bench", file=sys.stderr)
-    rows += lm_step.run(archs=["smollm-360m", "rwkv6-7b"] if args.fast else ARCH_IDS)
-    print("# roofline table (from dry-run artifacts)", file=sys.stderr)
-    rows += roofline_table.run()
+    json_rows = []
+    if wanted("gp_scaling"):
+        print("# paper Fig 1a - GP-LVM iteration time vs N", file=sys.stderr)
+        rows += gp_scaling.run(sizes=(1024, 4096) if args.fast else gp_scaling.SIZES)
+    if wanted("indistributable"):
+        print("# paper Fig 1b - indistributable fraction", file=sys.stderr)
+        rows += indistributable.run(sizes=(1024, 4096) if args.fast else indistributable.SIZES)
+    if wanted("psi_kernels"):
+        print("# paper S3 - psi-statistic kernels", file=sys.stderr)
+        rows += psi_kernels.run()
+    if wanted("gp_stream"):
+        print("# streaming suffstats engine - time/point + peak memory vs N",
+              file=sys.stderr)
+        csv, json_rows = gp_stream.run(smoke=args.fast)
+        rows += csv
+    if wanted("lm_step"):
+        print("# LM smoke step bench", file=sys.stderr)
+        rows += lm_step.run(archs=["smollm-360m", "rwkv6-7b"] if args.fast else ARCH_IDS)
+    if wanted("roofline"):
+        print("# roofline table (from dry-run artifacts)", file=sys.stderr)
+        rows += roofline_table.run()
     print("\n".join(rows))
+
+    if wanted("gp_stream"):
+        import jax
+
+        doc = {
+            "meta": {
+                "bench": "gp_stream",
+                "jax_backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+                "smoke": bool(args.fast),
+                "chunk": gp_stream.CHUNK,
+                "M": gp_stream.M,
+            },
+            "rows": json_rows,
+        }
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"# wrote {args.out} ({len(json_rows)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

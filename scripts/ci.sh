@@ -18,4 +18,23 @@ echo "== gplvm_synthetic (Bayesian GP-LVM, facade, smoke size) =="
 # target. Smoke mode checks the whole facade path runs and learns.
 python examples/gplvm_synthetic.py --n 512 --m 32 --steps 150 --min-corr 0.55
 
+echo "== benchmark harness (streaming engine, smoke mode) =="
+# smoke output goes to a scratch path: the repo-root BENCH_gp.json is the
+# committed full-sweep trajectory and must not be clobbered with smoke rows
+SMOKE_BENCH="$(mktemp -t BENCH_gp_smoke.XXXXXX.json)"
+python -m benchmarks.run --smoke --only gp_stream --out "$SMOKE_BENCH" > /dev/null
+SMOKE_BENCH="$SMOKE_BENCH" python - <<'PY'
+import json
+import os
+
+doc = json.load(open(os.environ["SMOKE_BENCH"]))
+rows = doc["rows"]
+required = {"model", "backend", "pass", "N", "seconds", "us_per_point",
+            "peak_intermediate_bytes"}
+assert rows, "BENCH_gp.json has no rows"
+assert all(required <= set(r) for r in rows), "BENCH_gp.json rows malformed"
+assert {r["backend"] for r in rows} >= {"jnp", "fused"}, "missing backend rows"
+print(f"benchmark smoke JSON OK ({len(rows)} rows)")
+PY
+
 echo "CI OK"

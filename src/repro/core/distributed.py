@@ -95,12 +95,13 @@ shard_gplvm_params = shard_gp_params
 
 
 def gplvm_loss_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
-                    backend: str = "jnp"):
+                    backend: str = "jnp", chunk: Optional[int] = None):
     """Distributed GP-LVM negative-ELBO: shard_map over the data axes.
 
     Returns loss(params, Y) with Y and q(X) sharded over the data axes and a
     replicated scalar output. Differentiable; grads of global params are
-    automatically psum'd by the shard_map transpose.
+    automatically psum'd by the shard_map transpose. `chunk=` streams each
+    shard's datapoints (per-shard scan, then the one psum).
     """
     axes = _data_axes(mesh)
     local_spec = P(axes)
@@ -114,7 +115,8 @@ def gplvm_loss_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
     )
     def loss(params: Params, Y_local: jax.Array) -> jax.Array:
         D = Y_local.shape[1]
-        stats = gplvm.local_stats(params, Y_local, kernel=kernel, backend=backend)
+        stats = gplvm.local_stats(params, Y_local, kernel=kernel,
+                                  backend=backend, chunk=chunk)
         kl = gplvm.kl_qp(params["q_mu"], params["q_logS"])
         # --- the paper's single collective: combine sufficient statistics ---
         stats = jax.tree.map(lambda x: jax.lax.psum(x, axes), stats)
@@ -127,7 +129,7 @@ def gplvm_loss_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
 
 
 def sgpr_loss_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
-                   backend: str = "jnp"):
+                   backend: str = "jnp", chunk: Optional[int] = None):
     """Distributed sparse-GP-regression negative log-bound (deterministic X)."""
     axes = _data_axes(mesh)
     local_spec = P(axes)
@@ -144,13 +146,66 @@ def sgpr_loss_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
         kern = default_rbf(kernel, params["Z"].shape[1])
         stats = suff_stats(kern, params["kern"],
                            ExactBatch(X_local, Y_local, params["Z"]),
-                           backend=backend)
+                           backend=backend, chunk=chunk)
         stats = jax.tree.map(lambda x: jax.lax.psum(x, axes), stats)
         Kuu = kern.K(params["kern"], params["Z"])
         terms = svgp.collapsed_bound(Kuu, stats, jnp.exp(params["log_beta"]), D)
         return -terms.bound / stats.n
 
     return loss
+
+
+# ---------------------------------------------------------------------------
+# predict-time statistics (same decomposition, no epilogue)
+# ---------------------------------------------------------------------------
+
+def sgpr_stats_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
+                    backend: str = "jnp", chunk: Optional[int] = None):
+    """Distributed O(N M^2) statistics pass for SGPR posterior/prediction.
+
+    `posterior()` needs the same psum'd `SuffStats` the training loss
+    consumes, so prediction shards the pass identically: per-device (and
+    optionally per-chunk) statistics, one psum, replicated output.
+    """
+    axes = _data_axes(mesh)
+    local_spec = P(axes)
+    gspec = make_param_specs(SGPR_PARAM_NAMES, mesh)
+
+    @functools.partial(
+        compat.shard_map,
+        mesh=mesh,
+        in_specs=(gspec, local_spec, local_spec),
+        out_specs=P(),
+    )
+    def stats_fn(params: Params, X_local: jax.Array, Y_local: jax.Array):
+        kern = default_rbf(kernel, params["Z"].shape[1])
+        stats = suff_stats(kern, params["kern"],
+                           ExactBatch(X_local, Y_local, params["Z"]),
+                           backend=backend, chunk=chunk)
+        return jax.tree.map(lambda x: jax.lax.psum(x, axes), stats)
+
+    return stats_fn
+
+
+def gplvm_stats_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
+                     backend: str = "jnp", chunk: Optional[int] = None):
+    """Distributed statistics pass for the GP-LVM posterior (see above)."""
+    axes = _data_axes(mesh)
+    local_spec = P(axes)
+    gspec = make_param_specs(GPLVM_PARAM_NAMES, mesh)
+
+    @functools.partial(
+        compat.shard_map,
+        mesh=mesh,
+        in_specs=(gspec, local_spec),
+        out_specs=P(),
+    )
+    def stats_fn(params: Params, Y_local: jax.Array):
+        stats = gplvm.local_stats(params, Y_local, kernel=kernel,
+                                  backend=backend, chunk=chunk)
+        return jax.tree.map(lambda x: jax.lax.psum(x, axes), stats)
+
+    return stats_fn
 
 
 def make_gp_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:

@@ -10,6 +10,7 @@ Two paths, mirroring the paper:
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable, Iterable
 
 import jax
@@ -31,24 +32,41 @@ def fit_adam(
     log_every: int = 0,
     donate: bool = True,
 ) -> tuple[PyTree, list[float]]:
+    """SPMD Adam driver. `donate=` donates the (params, state) buffers to the
+    jitted step so each iteration updates in place instead of holding two
+    copies of the model state (the caller's pytrees are copied once up
+    front, so references the caller keeps stay valid). The returned history
+    ends with the loss the final step computed (at its pre-update
+    parameters) — no extra full statistics pass is spent on logging; with
+    `steps=0` no loss is ever evaluated and the history is empty.
+    """
     config = AdamConfig(lr=lr, clip_norm=None, weight_decay=0.0)
     state = adam_init(params, config)
 
-    @jax.jit
+    # the CPU backend does not implement buffer donation (XLA would warn and
+    # copy anyway), so only request it where it is real
+    donate_argnums = (0, 1) if donate and jax.default_backend() != "cpu" else ()
+    if donate_argnums:
+        # the first step would otherwise donate the CALLER's buffers — copy
+        # once up front so only loop-internal state is recycled
+        params = jax.tree.map(jnp.array, params)
+        state = jax.tree.map(jnp.array, state)
+
+    @functools.partial(jax.jit, donate_argnums=donate_argnums)
     def step(params, state, *batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, *batch)
         params, state, _ = adam_update(grads, state, params, config)
         return params, state, loss
 
     history = []
+    loss = None
     for i in range(steps):
         params, state, loss = step(params, state, *data)
         if log_every and i % log_every == 0:
             history.append(float(loss))
             print(f"  step {i:5d}  loss {float(loss):.4f}")
-        elif not log_every:
-            pass
-    history.append(float(step(params, state, *data)[2]))
+    if loss is not None and not (log_every and (steps - 1) % log_every == 0):
+        history.append(float(loss))
     return params, history
 
 

@@ -19,8 +19,11 @@ Two computation modes:
                  closed-form RBF/Linear expectations.
 
 `backend="pallas"` routes the hot statistics through the Pallas TPU kernels
-(repro.kernels.ops); `backend="jnp"` uses fused memory-lean jnp (scan over N
-chunks for Psi2 — never materializes (N, M, M)).
+(repro.kernels.ops); `backend="fused"` through the fused suffstats op (one
+pass over N for psi2 + psiY, differentiable via its hand-derived streaming
+VJP); `backend="jnp"` uses memory-lean jnp (scan over N chunks for Psi2 —
+never materializes (N, M, M)). O(chunk)-memory streaming over N for every
+backend lives one layer up, in `repro.gp.stats.suff_stats(chunk=...)`.
 """
 from __future__ import annotations
 
@@ -102,6 +105,10 @@ def _psi2_rbf_chunked(mu, S, Z, variance, lengthscale, *, chunk: int = 256) -> j
     S_c = S_p.reshape(-1, chunk, Q)
     w_c = w.reshape(-1, chunk)
 
+    # checkpoint: the transpose re-derives each chunk's (chunk, M, M) tensor
+    # instead of stacking it across scan steps — without this, reverse-mode
+    # saves O(N * M^2 / chunk) residuals and the memory claim is void
+    @jax.checkpoint
     def body(acc, xs):
         mu_i, S_i, w_i = xs  # (chunk, Q), (chunk, Q), (chunk,)
         denom = l2[None, :] + 2.0 * S_i  # (chunk, Q)
@@ -119,62 +126,6 @@ def _psi2_rbf_chunked(mu, S, Z, variance, lengthscale, *, chunk: int = 256) -> j
     acc0 = jnp.zeros((M, M), mu.dtype) + 0.0 * mu[0, 0]
     acc, _ = jax.lax.scan(body, acc0, (mu_c, S_c, w_c))
     return variance**2 * jnp.exp(zterm) * acc
-
-
-def _fused_stats_rbf(mu, S, Y, Z, variance, lengthscale, *, chunk: int = 1024) -> SuffStats:
-    """Single streaming pass over N producing (psiY, psi2) together — the
-    beyond-paper fusion (§Perf C2): one read of (mu, S, Y) per datapoint
-    instead of two (psi1 pass + psi2 pass), with both accumulators resident.
-    Mirrors the fused Pallas kernel's structure (kernels/suffstats.py)."""
-    N, Q = mu.shape
-    M = Z.shape[0]
-    D = Y.shape[1]
-    l2 = lengthscale**2
-    zdiff = Z[:, None, :] - Z[None, :, :]
-    zterm = -jnp.sum(zdiff**2 / (4.0 * l2), axis=-1)  # (M, M)
-    zbar = 0.5 * (Z[:, None, :] + Z[None, :, :])
-
-    pad = (-N) % chunk
-    mu_p = jnp.pad(mu, ((0, pad), (0, 0)))
-    S_p = jnp.pad(S, ((0, pad), (0, 0)), constant_values=1.0)
-    Y_p = jnp.pad(Y, ((0, pad), (0, 0)))
-    w = jnp.pad(jnp.ones((N,), mu.dtype), ((0, pad),))
-    n_chunks = (N + pad) // chunk
-    xs = (mu_p.reshape(n_chunks, chunk, Q), S_p.reshape(n_chunks, chunk, Q),
-          Y_p.reshape(n_chunks, chunk, D), w.reshape(n_chunks, chunk))
-
-    @jax.checkpoint
-    def body(acc, x):
-        mu_i, S_i, Y_i, w_i = x
-        acc2, accY = acc
-        # psi1 block via the MXU factorization (see kernels/psi1.py)
-        b = 1.0 / (l2[None, :] + S_i)
-        lognorm1 = -0.5 * jnp.sum(jnp.log1p(S_i / l2[None, :]), axis=-1)
-        c1 = jnp.sum(mu_i * mu_i * b, axis=-1)
-        expo1 = -0.5 * (c1[:, None] - 2.0 * (mu_i * b) @ Z.T + b @ (Z * Z).T)
-        psi1_blk = jnp.exp(lognorm1[:, None] + expo1) * w_i[:, None]  # (chunk, M)
-        accY = accY + variance * psi1_blk.T @ Y_i
-        # psi2 block
-        denom = l2[None, :] + 2.0 * S_i
-        lognorm2 = -0.5 * jnp.sum(jnp.log1p(2.0 * S_i / l2[None, :]), axis=-1)
-        expo = jnp.zeros((mu_i.shape[0], M, M), mu.dtype)
-        for q in range(Q):
-            dq = mu_i[:, None, None, q] - zbar[None, :, :, q]
-            expo = expo - dq * dq / denom[:, None, None, q]
-        contrib = w_i[:, None, None] * jnp.exp(lognorm2[:, None, None] + expo)
-        acc2 = acc2 + jnp.sum(contrib, axis=0)
-        return (acc2, accY), None
-
-    vma = 0.0 * mu[0, 0]  # inherit shard_map varying axes (see _psi2_rbf_chunked)
-    acc0 = (jnp.zeros((M, M), mu.dtype) + vma, jnp.zeros((M, D), mu.dtype) + vma)
-    (acc2, accY), _ = jax.lax.scan(body, acc0, xs)
-    return SuffStats(
-        psi0=N * variance,
-        psi2=variance**2 * jnp.exp(zterm) * acc2,
-        psiY=accY,
-        yy=jnp.sum(Y * Y),
-        n=jnp.asarray(N, mu.dtype),
-    )
 
 
 def expected_stats_rbf(
@@ -195,7 +146,20 @@ def expected_stats_rbf(
         psi1 = ops.psi1(mu, S, Z, variance, lengthscale)
         psi2 = ops.psi2(mu, S, Z, variance, lengthscale)
     elif backend == "fused":
-        return _fused_stats_rbf(mu, S, Y, Z, variance, lengthscale)
+        # single pass over N producing (psi2, psiY) together — the
+        # beyond-paper fusion (§Perf C2): one read of (mu, S, Y) per
+        # datapoint instead of two. Differentiable: the op carries the
+        # hand-derived streaming VJP (kernels/ops.py).
+        from repro.kernels import ops
+
+        psi2, psiY = ops.suffstats(mu, S, Y, Z, variance, lengthscale)
+        return SuffStats(
+            psi0=mu.shape[0] * variance,
+            psi2=psi2,
+            psiY=psiY,
+            yy=jnp.sum(Y * Y),
+            n=jnp.asarray(mu.shape[0], mu.dtype),
+        )
     else:
         psi1 = ref.psi1_rbf(mu, S, Z, variance, lengthscale)
         psi2 = _psi2_rbf_chunked(mu, S, Z, variance, lengthscale, chunk=psi2_chunk)

@@ -170,7 +170,8 @@ class RBF(Kernel):
     here, L-BFGS-B in the paper) work on R^n. Closed-form psi statistics
     under Gaussian q(X) exist, which is why the paper's GP-LVM experiments
     use it; its statistics also have Pallas TPU kernels (backend="pallas")
-    and a fused streaming-jnp path (backend="fused").
+    and the fused suffstats op (backend="fused": psi2 + psiY in one pass,
+    differentiable through its hand-derived streaming VJP).
     """
 
     input_dim: int
@@ -417,7 +418,29 @@ class _Composite(Kernel):
         self.input_dim = parts[0].input_dim
 
     def init(self, **kwargs) -> Params:
-        return {f"k{i}": p.init() for i, p in enumerate(self.parts)}
+        """Per-part init kwargs, addressed by slot: ``init(k0={"variance": 2.0})``
+        forwards to ``parts[0].init(variance=2.0)``. Unknown slots raise
+        instead of being silently dropped (leaf kernels honor their kwargs,
+        so composites must not eat them)."""
+        slots = [f"k{i}" for i in range(len(self.parts))]
+        unknown = sorted(set(kwargs) - set(slots))
+        if unknown:
+            raise TypeError(
+                f"{type(self).__name__}.init() takes per-part kwargs keyed by "
+                f"slot ({', '.join(slots)}), each a dict of that part's init "
+                f"kwargs; got unknown key(s) {unknown}"
+            )
+        out = {}
+        for slot, part in zip(slots, self.parts):
+            part_kwargs = kwargs.get(slot, {})
+            if not isinstance(part_kwargs, dict):
+                raise TypeError(
+                    f"{type(self).__name__}.init({slot}=...) must be a dict of "
+                    f"{type(part).__name__}.init kwargs, got "
+                    f"{type(part_kwargs).__name__}"
+                )
+            out[slot] = part.init(**part_kwargs)
+        return out
 
     def _split(self, params: Params):
         return [(p, params[f"k{i}"]) for i, p in enumerate(self.parts)]

@@ -13,9 +13,11 @@ produce bit-identical losses.
 
 `mesh=` selects the paper's data-parallel path (shard_map over the data axes,
 one psum of the sufficient statistics); `backend=` routes the statistics
-through Pallas TPU kernels ("pallas") or the fused streaming pass ("fused",
-GP-LVM only). Both come from the constructor so serving/config code can pick
-them by string without touching model internals.
+through Pallas TPU kernels ("pallas") or the fused suffstats op ("fused",
+GP-LVM only); `chunk=` streams the statistics over N in chunks of that size
+so training AND prediction peak at O(chunk * M + M^2) memory regardless of
+N. All three come from the constructor so serving/config code can pick them
+by string/int without touching model internals.
 """
 from __future__ import annotations
 
@@ -49,21 +51,29 @@ def _pick_inducing(X: jax.Array, M: int) -> jax.Array:
 
 
 class _CollapsedGPModel:
-    """Shared facade plumbing: kernel/mesh/backend state + optimizer driver."""
+    """Shared facade plumbing: kernel/mesh/backend/chunk state + optimizer
+    driver + the (possibly distributed, possibly streaming) posterior
+    statistics pass."""
 
     def __init__(self, kernel: Optional[Kernel], M: int, *,
-                 mesh: Optional[Mesh] = None, backend: str = "jnp"):
+                 mesh: Optional[Mesh] = None, backend: str = "jnp",
+                 chunk: Optional[int] = None):
         self.kernel = kernel
         self.M = int(M)
         self.mesh = mesh
         self.backend = backend
+        self.chunk = None if chunk is None else int(chunk)
         self.params: Optional[Params] = None
         self.history: list = []
         self._loss_cache = None  # (kernel, built_loss): rebuilt if kernel changes
+        self._stats_cache = None  # (kernel, built_stats_fn)
         self._posterior_cache: Optional[svgp.Posterior] = None  # cleared by fit
 
     # -- subclass hooks ----------------------------------------------------
     def _build_loss(self):
+        raise NotImplementedError
+
+    def _build_stats(self):
         raise NotImplementedError
 
     def _loss_fn(self):
@@ -72,6 +82,14 @@ class _CollapsedGPModel:
         if self._loss_cache is None or self._loss_cache[0] is not self.kernel:
             self._loss_cache = (self.kernel, self._build_loss())
         return self._loss_cache[1]
+
+    def _stats_fn(self):
+        """The posterior/predict-time statistics pass, built once per kernel.
+        With `mesh=` it shard_maps + psums like the training losses (the
+        ROADMAP's distributed-prediction item); with `chunk=` it streams."""
+        if self._stats_cache is None or self._stats_cache[0] is not self.kernel:
+            self._stats_cache = (self.kernel, jax.jit(self._build_stats()))
+        return self._stats_cache[1]
 
     def _require_fitted(self):
         if self.params is None:
@@ -107,29 +125,49 @@ class SparseGPRegression(_CollapsedGPModel):
       mesh: optional jax Mesh — statistics shard over its data axes and merge
         with one psum (the paper's MPI scheme); None = single-device math.
       backend: "jnp" | "pallas" statistics path.
+      chunk: stream the O(N) statistics in chunks of this size (training and
+        prediction both peak at O(chunk * M + M^2) memory); None = one shot.
     """
 
     def __init__(self, kernel: Optional[Kernel] = None, M: int = 32, *,
-                 mesh: Optional[Mesh] = None, backend: str = "jnp"):
-        super().__init__(kernel, M, mesh=mesh, backend=backend)
+                 mesh: Optional[Mesh] = None, backend: str = "jnp",
+                 chunk: Optional[int] = None):
+        super().__init__(kernel, M, mesh=mesh, backend=backend, chunk=chunk)
         self._data: Optional[Tuple[jax.Array, jax.Array]] = None
 
     def _build_loss(self):
         if self.mesh is not None:
             return distributed.sgpr_loss_dist(self.mesh, kernel=self.kernel,
-                                              backend=self.backend)
-        kernel, backend = self.kernel, self.backend
+                                              backend=self.backend,
+                                              chunk=self.chunk)
+        kernel, backend, chunk = self.kernel, self.backend, self.chunk
 
         def loss(params: Params, X: jax.Array, Y: jax.Array) -> jax.Array:
             kern = default_rbf(kernel, params["Z"].shape[1])
             stats = suff_stats(kern, params["kern"],
-                               ExactBatch(X, Y, params["Z"]), backend=backend)
+                               ExactBatch(X, Y, params["Z"]), backend=backend,
+                               chunk=chunk)
             Kuu = kern.K(params["kern"], params["Z"])
             terms = svgp.collapsed_bound(Kuu, stats, jnp.exp(params["log_beta"]),
                                          Y.shape[1])
             return -terms.bound / stats.n
 
         return loss
+
+    def _build_stats(self):
+        if self.mesh is not None:
+            return distributed.sgpr_stats_dist(self.mesh, kernel=self.kernel,
+                                               backend=self.backend,
+                                               chunk=self.chunk)
+        kernel, backend, chunk = self.kernel, self.backend, self.chunk
+
+        def stats_fn(params: Params, X: jax.Array, Y: jax.Array):
+            kern = default_rbf(kernel, params["Z"].shape[1])
+            return suff_stats(kern, params["kern"],
+                              ExactBatch(X, Y, params["Z"]), backend=backend,
+                              chunk=chunk)
+
+        return stats_fn
 
     def init_params(self, X: jax.Array, Y: jax.Array, *,
                     log_beta: float = 2.0) -> Params:
@@ -158,14 +196,14 @@ class SparseGPRegression(_CollapsedGPModel):
     def posterior(self) -> svgp.Posterior:
         """Optimal q(u) implied by the collapsed bound at the fitted params.
         Cached: the O(N M^2) statistics pass runs once per fit, not per
-        predict call."""
+        predict call — sharded over the mesh and/or streamed by `chunk=`,
+        exactly like the training losses."""
         self._require_fitted()
         if self._posterior_cache is not None:
             return self._posterior_cache
         X, Y = self._data
         p = self.params
-        stats = suff_stats(self.kernel, p["kern"], ExactBatch(X, Y, p["Z"]),
-                           backend=self.backend)
+        stats = self._stats_fn()(p, X, Y)
         beta = jnp.exp(p["log_beta"])
         terms = svgp.collapsed_bound(self.kernel.K(p["kern"], p["Z"]), stats,
                                      beta, Y.shape[1])
@@ -189,14 +227,17 @@ class BayesianGPLVM(_CollapsedGPModel):
         Sum/Product composites); default RBF(Q).
       Q: latent dimensionality.
       M: number of inducing points.
-      mesh / backend: as for SparseGPRegression; backend additionally accepts
-        "fused" (single streaming pass producing psi1/psi2 together).
+      mesh / backend / chunk: as for SparseGPRegression; backend additionally
+        accepts "fused" (the fused suffstats op: one pass over N producing
+        psi2/psiY together, differentiable via its hand-derived streaming
+        VJP).
     """
 
     def __init__(self, kernel: Optional[Kernel] = None, M: int = 100,
                  Q: Optional[int] = None, *,
-                 mesh: Optional[Mesh] = None, backend: str = "jnp"):
-        super().__init__(kernel, M, mesh=mesh, backend=backend)
+                 mesh: Optional[Mesh] = None, backend: str = "jnp",
+                 chunk: Optional[int] = None):
+        super().__init__(kernel, M, mesh=mesh, backend=backend, chunk=chunk)
         if kernel is not None and Q is not None and Q != kernel.input_dim:
             raise ValueError(
                 f"Q={Q} conflicts with kernel.input_dim={kernel.input_dim}; "
@@ -208,8 +249,18 @@ class BayesianGPLVM(_CollapsedGPModel):
     def _build_loss(self):
         if self.mesh is not None:
             return distributed.gplvm_loss_dist(self.mesh, kernel=self.kernel,
-                                               backend=self.backend)
-        return functools.partial(gplvm.loss, kernel=self.kernel, backend=self.backend)
+                                               backend=self.backend,
+                                               chunk=self.chunk)
+        return functools.partial(gplvm.loss, kernel=self.kernel,
+                                 backend=self.backend, chunk=self.chunk)
+
+    def _build_stats(self):
+        if self.mesh is not None:
+            return distributed.gplvm_stats_dist(self.mesh, kernel=self.kernel,
+                                                backend=self.backend,
+                                                chunk=self.chunk)
+        return functools.partial(gplvm.local_stats, kernel=self.kernel,
+                                 backend=self.backend, chunk=self.chunk)
 
     def fit(self, Y: jax.Array, *, optimizer: str = "adam", steps: int = 400,
             lr: float = 2e-2, log_every: int = 0,
@@ -242,7 +293,7 @@ class BayesianGPLVM(_CollapsedGPModel):
             return self._posterior_cache
         (Y,) = self._data
         p = self.params
-        stats = gplvm.local_stats(p, Y, kernel=self.kernel, backend=self.backend)
+        stats = self._stats_fn()(p, Y)
         beta = jnp.exp(p["log_beta"])
         terms = svgp.collapsed_bound(self.kernel.K(p["kern"], p["Z"]), stats,
                                      beta, Y.shape[1])

@@ -1,20 +1,30 @@
 """Kernel-dispatched sufficient statistics for the collapsed bound.
 
-One entry point, `suff_stats(kernel, params, batch, backend=...)`, replaces
-the RBF-only free functions (`psi_stats.exact_stats_rbf` / `expected_stats_rbf`)
-at every call site: the batch type selects exact (deterministic X) vs
-expected (Gaussian q(X)) statistics, the kernel object supplies the math,
-and `backend` routes the hot path through Pallas kernels ("pallas"), the
-fused streaming-jnp pass ("fused", RBF expected only) or plain jnp.
+One entry point, `suff_stats(kernel, params, batch, backend=..., chunk=...)`,
+replaces the RBF-only free functions (`psi_stats.exact_stats_rbf` /
+`expected_stats_rbf`) at every call site: the batch type selects exact
+(deterministic X) vs expected (Gaussian q(X)) statistics, the kernel object
+supplies the math, and `backend` routes the hot path through Pallas kernels
+("pallas"), the fused suffstats op ("fused", RBF expected only) or plain jnp.
+
+`chunk=` turns every path into a streaming reduction: the N datapoints are
+scanned in chunks of that size and the per-chunk `SuffStats` are combined
+through the monoid, so peak live memory is O(chunk * M + M^2) regardless of
+N — training included, because the scan body is rematerialized
+(`jax.checkpoint`) and the accumulator is linear in the carry, which lets
+reverse-mode recompute each chunk instead of stacking residuals. This is
+what makes the paper's "millions of datapoints" literal on one host; it
+composes with the mesh path (per-shard scan, then one psum).
 
 The returned `SuffStats` is the same commutative monoid as before — callers
-psum/combine it identically regardless of kernel or backend.
+psum/combine it identically regardless of kernel, backend or chunking.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Union
+from typing import NamedTuple, Optional, Union
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.psi_stats import SuffStats
 from repro.gp.kernels import Kernel, Params
@@ -40,9 +50,7 @@ class ExpectedBatch(NamedTuple):
 Batch = Union[ExactBatch, ExpectedBatch]
 
 
-def suff_stats(kernel: Kernel, params: Params, batch: Batch, *,
-               backend: str = "jnp") -> SuffStats:
-    """Sufficient statistics of `batch` under `kernel`, kernel-dispatched."""
+def _dispatch(kernel: Kernel, params: Params, batch: Batch, backend: str) -> SuffStats:
     if isinstance(batch, ExactBatch):
         return kernel.exact_suff_stats(params, batch.X, batch.Y, batch.Z, backend=backend)
     if isinstance(batch, ExpectedBatch):
@@ -50,3 +58,80 @@ def suff_stats(kernel: Kernel, params: Params, batch: Batch, *,
             params, batch.mu, batch.S, batch.Y, batch.Z, backend=backend
         )
     raise TypeError(f"expected ExactBatch or ExpectedBatch, got {type(batch).__name__}")
+
+
+def streaming_suff_stats(kernel: Kernel, params: Params, batch: Batch, *,
+                         backend: str = "jnp", chunk: int = 4096) -> SuffStats:
+    """`suff_stats` as a chunked lax.scan over N: O(chunk * M + M^2) live.
+
+    Works for any kernel and either batch type — the per-chunk statistics go
+    through the normal kernel dispatch, the chunks combine through the
+    `SuffStats` monoid. A non-dividing N is handled by an explicit tail
+    chunk outside the scan (no padding/masking, so kernels need no weight
+    plumbing). The scan body is rematerialized so the backward pass
+    recomputes chunks instead of saving per-chunk intermediates.
+    """
+    if chunk <= 0:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+    if not isinstance(batch, (ExactBatch, ExpectedBatch)):
+        raise TypeError(f"expected ExactBatch or ExpectedBatch, got {type(batch).__name__}")
+    per_point = [a for name, a in zip(batch._fields, batch) if name != "Z"]
+    N = per_point[0].shape[0]
+    rebuild = type(batch)
+
+    def one(*parts) -> SuffStats:
+        return _dispatch(kernel, params, rebuild(*parts, batch.Z), backend)
+
+    n_full, rem = divmod(N, chunk)
+    stats: Optional[SuffStats] = None
+    if n_full:
+        stacked = tuple(
+            a[: n_full * chunk].reshape(n_full, chunk, *a.shape[1:])
+            for a in per_point
+        )
+        shapes = jax.eval_shape(one, *(a[0] for a in stacked))
+
+        # rank-0 scan carries break this jax version's shard_map transpose
+        # (its spec check rejects scalar cotangents), so scalar statistics
+        # ride the carry as (1,) and drop back to () after the scan
+        def lift(s: SuffStats) -> SuffStats:
+            return jax.tree.map(lambda x: x[None] if x.ndim == 0 else x, s)
+
+        # `+ 0 * x[0...]` inherits the data's varying-manual-axes type so the
+        # carry is well-typed when this runs inside shard_map.
+        vma = 0.0 * per_point[0][(0,) * per_point[0].ndim]
+        init = jax.tree.map(
+            lambda s: (jnp.zeros((1, *s.shape) if s.ndim == 0 else s.shape,
+                                 s.dtype) + vma).astype(s.dtype),
+            shapes,
+        )
+
+        @jax.checkpoint
+        def body(acc, xs):
+            return SuffStats.combine(acc, lift(one(*xs))), None
+
+        lifted, _ = jax.lax.scan(body, init, stacked)
+        stats = SuffStats(*(
+            x[0] if ref.ndim == 0 else x for x, ref in zip(lifted, shapes)
+        ))
+    if rem:
+        tail = one(*(a[n_full * chunk:] for a in per_point))
+        stats = tail if stats is None else SuffStats.combine(stats, tail)
+    if stats is None:  # N == 0: defer to the one-shot path's zero statistics
+        return one(*per_point)
+    return stats
+
+
+def suff_stats(kernel: Kernel, params: Params, batch: Batch, *,
+               backend: str = "jnp", chunk: Optional[int] = None) -> SuffStats:
+    """Sufficient statistics of `batch` under `kernel`, kernel-dispatched.
+
+    `chunk=None` evaluates the statistics in one shot (full-batch
+    workspaces); an integer streams the datapoints in chunks of that size.
+    The "fused" backend is exempt: its op already streams internally (jnp
+    twin / Pallas grid over N) with a streaming hand-derived VJP.
+    """
+    if chunk is not None and backend != "fused":
+        return streaming_suff_stats(kernel, params, batch,
+                                    backend=backend, chunk=chunk)
+    return _dispatch(kernel, params, batch, backend)

@@ -1,13 +1,17 @@
 """Differentiable jit'd wrappers around the Pallas psi-statistic kernels.
 
 Forward = Pallas kernel (interpret-mode on CPU, compiled on TPU).
-Backward = memory-lean jnp (chunked where needed) via jax.vjp of the ref
-formulas — the paper's Table-2 gradient loops expressed as closed-form
-reverse rules. A Pallas backward for psi2 is a recorded perf-iteration item
-(EXPERIMENTS.md §Perf).
+Backward = memory-lean jnp (chunked where needed): jax.vjp of the ref
+formulas for the single-statistic kernels, and the HAND-DERIVED streaming
+reverse pass (kernels/suffstats.py) for the fused suffstats kernel — the
+paper's Table-2 gradient loops expressed as closed-form reverse rules.
 
 `INTERPRET` flips automatically: True off-TPU so the whole test/bench suite
-exercises the real kernel bodies on CPU.
+exercises the real kernel bodies on CPU. Because interpret mode pays a
+Python-level cost per grid point, the fused `suffstats` op only runs the
+kernel body off-TPU up to `FUSED_INTERPRET_MAX_N` datapoints; beyond that it
+switches to the numerically-identical streaming-jnp twin (the grad path is
+the same hand-derived VJP either way).
 """
 from __future__ import annotations
 
@@ -18,8 +22,17 @@ from repro.kernels import ref
 from repro.kernels.kfu import kfu_pallas
 from repro.kernels.psi1 import psi1_pallas
 from repro.kernels.psi2 import psi2_pallas
+from repro.kernels.suffstats import (
+    suffstats_fused_jnp,
+    suffstats_pallas,
+    suffstats_vjp_jnp,
+)
 
 INTERPRET = jax.default_backend() != "tpu"
+
+# off-TPU, run the real fused kernel body (interpret mode) only for problems
+# small enough that per-grid-point interpretation stays cheap
+FUSED_INTERPRET_MAX_N = 1024
 
 
 # ---------------------------------------------------------------------------
@@ -91,3 +104,37 @@ def _psi2_bwd(res, g):
 
 
 psi2.defvjp(_psi2_fwd, _psi2_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fused suffstats (psi2 + psiY in one pass over N)
+# ---------------------------------------------------------------------------
+
+def _suffstats_impl(mu, S, Y, Z, variance, lengthscale):
+    if not INTERPRET:
+        return suffstats_pallas(mu, S, Y, Z, variance, lengthscale,
+                                interpret=False)
+    if mu.shape[0] <= FUSED_INTERPRET_MAX_N:
+        return suffstats_pallas(mu, S, Y, Z, variance, lengthscale,
+                                interpret=True)
+    return suffstats_fused_jnp(mu, S, Y, Z, variance, lengthscale)
+
+
+@jax.custom_vjp
+def suffstats(mu, S, Y, Z, variance, lengthscale):
+    """Fused (psi2 (M, M), psiY (M, D)) with a streaming O(chunk * M^2)
+    reverse pass — usable under jax.grad inside training steps."""
+    return _suffstats_impl(mu, S, Y, Z, variance, lengthscale)
+
+
+def _suffstats_fwd(mu, S, Y, Z, variance, lengthscale):
+    out = suffstats(mu, S, Y, Z, variance, lengthscale)
+    return out, (mu, S, Y, Z, variance, lengthscale)
+
+
+def _suffstats_bwd(res, g):
+    g2, gY = g
+    return suffstats_vjp_jnp(*res, g2, gY)
+
+
+suffstats.defvjp(_suffstats_fwd, _suffstats_bwd)

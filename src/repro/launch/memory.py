@@ -1,0 +1,61 @@
+"""Trace-level peak-memory estimation for the streaming statistics engine.
+
+XLA's per-backend memory analysis is unavailable on CPU, but the question
+the streaming engine has to answer — "does any intermediate scale with N?"
+— is visible in the jaxpr: every equation output is an intermediate buffer
+the program materializes at some point. `peak_intermediate_bytes` walks the
+(closed) jaxpr of a function, recursing into sub-jaxprs (scan/cond/pjit/
+remat bodies), and returns the size of the single largest intermediate.
+
+This is what the chunked-training tests assert on (a chunked million-point
+loss must have no intermediate anywhere near N * M) and what the benchmark
+harness reports as its peak-memory estimate. It is an estimate of the
+dominating buffer, not a liveness analysis — good for catching O(N * M)
+materialization, not for byte-exact accounting.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Tuple
+
+
+def _walk_jaxpr(jaxpr, seen: List[Tuple[Tuple[int, ...], str, int]]) -> None:
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape") and hasattr(aval, "dtype"):
+                nbytes = int(aval.size) * aval.dtype.itemsize
+                seen.append((tuple(aval.shape), str(aval.dtype), nbytes))
+        for val in eqn.params.values():
+            for sub in _sub_jaxprs(val):
+                _walk_jaxpr(sub, seen)
+
+
+def _sub_jaxprs(val: Any):
+    if hasattr(val, "jaxpr"):  # ClosedJaxpr
+        yield val.jaxpr
+    elif hasattr(val, "eqns"):  # raw Jaxpr
+        yield val
+    elif isinstance(val, (list, tuple)):
+        for item in val:
+            yield from _sub_jaxprs(item)
+
+
+def intermediate_report(fn: Callable, *args, top: int = 8, **kwargs):
+    """The `top` largest intermediates of `fn(*args)` as
+    [(shape, dtype, bytes)], largest first. Traces only — never executes."""
+    import jax
+
+    closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    seen: List[Tuple[Tuple[int, ...], str, int]] = []
+    _walk_jaxpr(closed.jaxpr, seen)
+    best = {}
+    for shape, dtype, nbytes in seen:
+        best[(shape, dtype)] = nbytes
+    rows = sorted(((s, d, b) for (s, d), b in best.items()), key=lambda r: -r[2])
+    return rows[:top]
+
+
+def peak_intermediate_bytes(fn: Callable, *args, **kwargs) -> int:
+    """Size in bytes of the largest single intermediate `fn(*args)` creates."""
+    rows = intermediate_report(fn, *args, top=1, **kwargs)
+    return rows[0][2] if rows else 0

@@ -1,0 +1,387 @@
+"""Streaming sufficient-statistics engine: chunked == unchunked (values and
+grads), the fused-suffstats hand-derived VJP vs jax.grad of the jnp
+reference, the million-point no-(N, M)-materialization guarantee, the
+donation-honoring Adam driver, composite init kwargs, and benchmark input
+validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributed, gplvm, inference, psi_stats
+from repro.gp import BayesianGPLVM, SparseGPRegression, get, suff_stats
+from repro.gp.stats import ExactBatch, ExpectedBatch
+from repro.kernels import ops, ref
+from repro.launch.memory import peak_intermediate_bytes
+
+
+def _f64(tree):
+    return jax.tree.map(lambda x: x.astype(jnp.float64), tree)
+
+
+def _qx(key, N, Q):
+    k1, k2 = jax.random.split(key)
+    mu = jax.random.normal(k1, (N, Q), jnp.float64)
+    S = 0.05 + 0.2 * jax.random.uniform(k2, (N, Q), jnp.float64)
+    return mu, S
+
+
+def _data(key, N=137, Q=2, D=3, M=9):
+    X = jax.random.normal(key, (N, Q), jnp.float64)
+    Y = jax.random.normal(jax.random.fold_in(key, 1), (N, D), jnp.float64)
+    Z = jax.random.normal(jax.random.fold_in(key, 2), (M, Q), jnp.float64)
+    return X, Y, Z
+
+
+# chunk sizes: non-dividing, dividing prefix, == N, > N
+CHUNKS = (32, 50, 137, 200)
+
+
+def _assert_stats_close(a, b, rtol=1e-9):
+    for x, y, name in zip(a, b, a._fields):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=rtol,
+                                   atol=1e-12, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# chunked == unchunked: values
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ("rbf", "matern32", "sum"))
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_streaming_exact_stats_match_full(name, chunk):
+    key = jax.random.PRNGKey(0)
+    X, Y, Z = _data(key)
+    kern = get(name)(2) if name != "sum" else get(name)(get("rbf")(2), get("linear")(2))
+    p = _f64(kern.init())
+    full = suff_stats(kern, p, ExactBatch(X, Y, Z))
+    chunked = suff_stats(kern, p, ExactBatch(X, Y, Z), chunk=chunk)
+    _assert_stats_close(full, chunked)
+
+
+@pytest.mark.parametrize("name", ("rbf", "linear"))
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_streaming_expected_stats_match_full(name, chunk):
+    key = jax.random.PRNGKey(1)
+    _, Y, Z = _data(key)
+    mu, S = _qx(key, 137, 2)
+    kern = get(name)(2)
+    p = _f64(kern.init())
+    full = suff_stats(kern, p, ExpectedBatch(mu, S, Y, Z))
+    chunked = suff_stats(kern, p, ExpectedBatch(mu, S, Y, Z), chunk=chunk)
+    _assert_stats_close(full, chunked)
+
+
+# ---------------------------------------------------------------------------
+# chunked == unchunked: grads
+# ---------------------------------------------------------------------------
+
+def _weighted_scalar(stats):
+    """A generic non-trivial functional of the statistics (fixed weights)."""
+    M = stats.psi2.shape[0]
+    w2 = jnp.cos(0.1 * jnp.arange(M * M, dtype=stats.psi2.dtype)).reshape(M, M)
+    wY = jnp.sin(0.1 * jnp.arange(stats.psiY.size, dtype=stats.psiY.dtype)
+                 ).reshape(stats.psiY.shape)
+    return (stats.psi0 + jnp.sum(stats.psi2 * w2) + jnp.sum(stats.psiY * wY)
+            + stats.yy)
+
+
+@pytest.mark.parametrize("chunk", (32, 137))
+def test_streaming_exact_grads_match_full(chunk):
+    key = jax.random.PRNGKey(2)
+    X, Y, Z = _data(key)
+    kern = get("rbf")(2)
+    p = _f64(kern.init(1.3, 0.8))
+
+    def scalar(p, Z, c):
+        return _weighted_scalar(suff_stats(kern, p, ExactBatch(X, Y, Z), chunk=c))
+
+    ga = jax.grad(scalar, argnums=(0, 1))(p, Z, None)
+    gb = jax.grad(scalar, argnums=(0, 1))(p, Z, chunk)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-9, atol=1e-12), ga, gb)
+
+
+@pytest.mark.parametrize("chunk", (32, 137))
+def test_streaming_expected_grads_match_full(chunk):
+    key = jax.random.PRNGKey(3)
+    _, Y, Z = _data(key)
+    mu, S = _qx(key, 137, 2)
+    kern = get("rbf")(2)
+    p = _f64(kern.init())
+
+    def scalar(p, mu, S, Z, c):
+        return _weighted_scalar(
+            suff_stats(kern, p, ExpectedBatch(mu, S, Y, Z), chunk=c))
+
+    ga = jax.grad(scalar, argnums=(0, 1, 2, 3))(p, mu, S, Z, None)
+    gb = jax.grad(scalar, argnums=(0, 1, 2, 3))(p, mu, S, Z, chunk)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-9, atol=1e-12), ga, gb)
+
+
+def test_streaming_under_mesh_matches_unchunked():
+    """chunk= composes with shard_map: same distributed loss and grads."""
+    key = jax.random.PRNGKey(4)
+    N = 256
+    X = jax.random.uniform(key, (N, 1), jnp.float64, -3.0, 3.0)
+    Y = jnp.sin(2.0 * X)
+    mesh = distributed.make_gp_mesh()
+    params = {"kern": _f64(get("rbf")(1).init()), "Z": X[:16],
+              "log_beta": jnp.asarray(2.0, jnp.float64)}
+    base = distributed.sgpr_loss_dist(mesh, kernel=get("rbf")(1))
+    chunked = distributed.sgpr_loss_dist(mesh, kernel=get("rbf")(1), chunk=100)
+    va, ga = jax.value_and_grad(base)(params, X, Y)
+    vb, gb = jax.value_and_grad(chunked)(params, X, Y)
+    # summation order differs; the bound epilogue amplifies f64 roundoff
+    np.testing.assert_allclose(float(va), float(vb), rtol=1e-6)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-6,
+        atol=1e-6 * max(1e-2, float(np.max(np.abs(np.asarray(a)))))), ga, gb)
+
+
+# ---------------------------------------------------------------------------
+# fused suffstats op: hand-derived VJP vs jax.grad of the jnp reference
+# ---------------------------------------------------------------------------
+
+def _fused_case(key, N, M=11, Q=2, D=3):
+    ks = jax.random.split(key, 6)
+    mu = jax.random.normal(ks[0], (N, Q), jnp.float64)
+    S = 0.05 + jax.random.uniform(ks[1], (N, Q), jnp.float64)
+    Y = jax.random.normal(ks[2], (N, D), jnp.float64)
+    Z = jax.random.normal(ks[3], (M, Q), jnp.float64)
+    var = jnp.asarray(1.3, jnp.float64)
+    ls = 0.6 + jax.random.uniform(ks[4], (Q,), jnp.float64)
+    g2 = jax.random.normal(ks[5], (M, M), jnp.float64)
+    gY = jax.random.normal(jax.random.fold_in(key, 7), (M, D), jnp.float64)
+    return mu, S, Y, Z, var, ls, g2, gY
+
+
+@pytest.mark.parametrize("N", (200, 1500))
+def test_fused_suffstats_vjp_matches_reference_grad(N):
+    """N=200 exercises the Pallas forward (interpret mode); N=1500 the
+    streaming jnp twin. Both use the hand-derived streaming VJP, compared
+    against jax.grad of the dense jnp reference formulas."""
+    mu, S, Y, Z, var, ls, g2, gY = _fused_case(jax.random.PRNGKey(5), N)
+
+    def via_op(mu, S, Y, Z, var, ls):
+        p2, pY = ops.suffstats(mu, S, Y, Z, var, ls)
+        return jnp.sum(g2 * p2) + jnp.sum(gY * pY)
+
+    def via_ref(mu, S, Y, Z, var, ls):
+        p2 = ref.psi2_rbf(mu, S, Z, var, ls)
+        pY = ref.psi1_rbf(mu, S, Z, var, ls).T @ Y
+        return jnp.sum(g2 * p2) + jnp.sum(gY * pY)
+
+    args = (mu, S, Y, Z, var, ls)
+    np.testing.assert_allclose(float(via_op(*args)), float(via_ref(*args)),
+                               rtol=1e-10)
+    g_op = jax.grad(via_op, argnums=tuple(range(6)))(*args)
+    g_ref = jax.grad(via_ref, argnums=tuple(range(6)))(*args)
+    for a, b, name in zip(g_op, g_ref, ("mu", "S", "Y", "Z", "var", "ls")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-8,
+                                   atol=1e-10, err_msg=name)
+
+
+def test_gplvm_fused_grad_matches_jnp_reference():
+    """Acceptance bar: jax.grad of the GP-LVM loss with backend="fused"
+    (Pallas forward in interpret mode) matches the jnp reference to <= 1e-4
+    relative error, per parameter leaf."""
+    key = jax.random.PRNGKey(6)
+    Y = jax.random.normal(jax.random.fold_in(key, 1), (300, 3), jnp.float64)
+    params = _f64(gplvm.init_params(key, np.asarray(Y), Q=1, M=12))
+    assert 300 <= ops.FUSED_INTERPRET_MAX_N  # really the interpret path
+    g_ref = jax.grad(gplvm.loss)(params, Y, backend="jnp")
+    g_fused = jax.grad(gplvm.loss)(params, Y, backend="fused")
+    ref_leaves, _ = jax.tree_util.tree_flatten_with_path(g_ref)
+    fused_leaves, _ = jax.tree_util.tree_flatten_with_path(g_fused)
+    for (path, a), (_, b) in zip(ref_leaves, fused_leaves):
+        a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+        rel = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-12)
+        assert rel <= 1e-4, (jax.tree_util.keystr(path), rel)
+
+
+def test_fused_backend_trains_under_fit():
+    """backend="fused" is no longer inference-only: fit() runs jax.grad
+    through the fused op and the bound improves."""
+    key = jax.random.PRNGKey(7)
+    from repro.data.synthetic import gplvm_synthetic
+
+    _, Y = gplvm_synthetic(key, N=192, D=3, Q=1)
+    Y = Y.astype(jnp.float64)
+    lvm = BayesianGPLVM(kernel=get("rbf")(1), M=12, backend="fused")
+    l0 = None
+    for steps in (1, 40):
+        lvm.fit(Y, steps=steps, lr=5e-2, key=key)
+        if l0 is None:
+            l0 = lvm.history[-1]
+    assert lvm.history[-1] < l0 - 0.1, (l0, lvm.history[-1])
+
+
+# ---------------------------------------------------------------------------
+# million-point scale: nothing materializes an (N, M) array
+# ---------------------------------------------------------------------------
+
+def _no_nm_intermediate(fn, *args, N, M, itemsize=8, budget=64e6):
+    peak = peak_intermediate_bytes(fn, *args)
+    nm_bytes = N * M * itemsize
+    assert peak < budget, f"peak intermediate {peak/1e6:.1f} MB over budget"
+    assert peak < nm_bytes / 4, (
+        f"peak intermediate {peak/1e6:.1f} MB is within 4x of an (N, M) "
+        f"array ({nm_bytes/1e6:.0f} MB) — streaming is broken")
+
+
+def test_million_point_chunked_training_has_no_nm_workspace():
+    """Trace-level guarantee at N=1e6, M=100: the largest intermediate
+    anywhere in value_and_grad of both chunked losses stays chunk-sized."""
+    N, M, chunk = 1_000_000, 100, 8192
+    key = jax.random.PRNGKey(8)
+    X = jax.random.uniform(key, (N, 1), jnp.float32, -3.0, 3.0)
+    Y = jnp.sin(2.0 * X)
+    gp = SparseGPRegression(kernel=get("rbf")(1), M=M, chunk=chunk)
+    p = gp.init_params(X, Y)
+    _no_nm_intermediate(jax.value_and_grad(gp._loss_fn()), p, X, Y,
+                        N=N, M=M, itemsize=4)
+    # posterior/predict statistics pass too
+    _no_nm_intermediate(gp._build_stats(), p, X, Y, N=N, M=M, itemsize=4)
+
+    # GP-LVM: same engine, expected statistics
+    params = {
+        "kern": get("rbf")(1).init(),
+        "Z": jax.random.normal(key, (M, 1), jnp.float32),
+        "log_beta": jnp.asarray(2.0, jnp.float32),
+        "q_mu": jax.random.normal(key, (N, 1), jnp.float32),
+        "q_logS": jnp.full((N, 1), -2.0, jnp.float32),
+    }
+    Yl = jnp.ones((N, 2), jnp.float32)
+
+    def lvm_loss(params, Y):
+        return gplvm.loss(params, Y, kernel=get("rbf")(1), chunk=chunk)
+
+    _no_nm_intermediate(jax.value_and_grad(lvm_loss), params, Yl,
+                        N=N, M=M, itemsize=4)
+
+
+@pytest.mark.slow
+def test_million_point_sgpr_fit_and_predict_executes():
+    """The acceptance scenario, actually executed on this box: fit and
+    predict at N = 1,000,000 (M = 100) through the streaming engine."""
+    N, M = 1_000_000, 100
+    key = jax.random.PRNGKey(9)
+    X = jax.random.uniform(key, (N, 1), jnp.float32, -3.0, 3.0)
+    f = jnp.sin(2.0 * X[:, 0])
+    Y = (f + 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (N,)))[:, None]
+    gp = SparseGPRegression(kernel=get("rbf")(1), M=M, chunk=8192)
+    gp.fit(X, Y, steps=2, lr=3e-2)
+    mean, var = gp.predict(X[:512])
+    rmse = float(jnp.sqrt(jnp.mean((mean[:, 0] - f[:512]) ** 2)))
+    assert np.isfinite(gp.history[-1])
+    assert np.all(np.asarray(var) > 0)
+    assert rmse < 0.5, rmse  # 2 steps: sanity, not convergence
+
+
+# ---------------------------------------------------------------------------
+# distributed posterior (ROADMAP item)
+# ---------------------------------------------------------------------------
+
+def test_posterior_statistics_distribute_over_mesh():
+    key = jax.random.PRNGKey(10)
+    N = 400
+    X = jnp.sort(jax.random.uniform(key, (N, 1), jnp.float64, -3.0, 3.0), axis=0)
+    Y = jnp.sin(2.0 * X)
+    mesh = distributed.make_gp_mesh()
+    gp_mesh = SparseGPRegression(kernel=get("rbf")(1), M=16, mesh=mesh,
+                                 chunk=128).fit(X, Y, steps=40)
+    gp_local = SparseGPRegression(kernel=get("rbf")(1), M=16)
+    gp_local.fit(X, Y, steps=0, params=gp_mesh.params)
+    gp_local.params = gp_mesh.params
+    a, b = gp_mesh.posterior(), gp_local.posterior()
+    np.testing.assert_allclose(np.asarray(a.mean_u), np.asarray(b.mean_u),
+                               rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(a.cov_u), np.asarray(b.cov_u),
+                               rtol=1e-8, atol=1e-10)
+
+    from repro.data.synthetic import gplvm_synthetic
+
+    _, Yl = gplvm_synthetic(key, N=128, D=3, Q=1)
+    Yl = Yl.astype(jnp.float64)
+    lvm_mesh = BayesianGPLVM(kernel=get("rbf")(1), M=12, mesh=mesh, chunk=48)
+    lvm_mesh.fit(Yl, steps=30, lr=5e-2, key=key)
+    lvm_local = BayesianGPLVM(kernel=get("rbf")(1), M=12)
+    lvm_local.fit(Yl, steps=0, params=lvm_mesh.params, key=key)
+    lvm_local.params = lvm_mesh.params
+    a, b = lvm_mesh.posterior(), lvm_local.posterior()
+    np.testing.assert_allclose(np.asarray(a.mean_u), np.asarray(b.mean_u),
+                               rtol=1e-8, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# fit_adam: donation honored, no wasted final statistics pass
+# ---------------------------------------------------------------------------
+
+def test_fit_adam_history_and_donate_paths_agree():
+    key = jax.random.PRNGKey(11)
+    X = jax.random.normal(key, (64, 2), jnp.float64)
+    w0 = {"w": jnp.zeros((2,), jnp.float64)}
+    target = jnp.asarray([1.0, -2.0], jnp.float64)
+
+    def loss(p, X):
+        return jnp.mean((X @ (p["w"] - target)) ** 2)
+
+    pa, ha = inference.fit_adam(loss, w0, (X,), steps=50, lr=0.1, donate=True)
+    pb, hb = inference.fit_adam(loss, w0, (X,), steps=50, lr=0.1, donate=False)
+    np.testing.assert_allclose(np.asarray(pa["w"]), np.asarray(pb["w"]), rtol=1e-12)
+    # history ends with the final step's loss; no extra evaluation happens
+    assert ha and hb and np.isfinite(ha[-1]) and ha[-1] == hb[-1]
+    # zero steps -> empty history, params untouched
+    p0, h0 = inference.fit_adam(loss, w0, (X,), steps=0)
+    assert h0 == [] and np.all(np.asarray(p0["w"]) == 0)
+    # when log_every already captured the final step, it is not re-appended
+    _, h = inference.fit_adam(loss, w0, (X,), steps=3, log_every=1)
+    assert len(h) == 3 and h[0] > h[-1]
+    _, h = inference.fit_adam(loss, w0, (X,), steps=4, log_every=2)
+    assert len(h) == 3  # logged at i=0, 2; final step (i=3) appended once
+
+
+# ---------------------------------------------------------------------------
+# composite kernel init kwargs (ROADMAP item)
+# ---------------------------------------------------------------------------
+
+def test_composite_init_forwards_per_part_kwargs():
+    from repro.gp.kernels import Linear, Product, RBF, Sum
+
+    kern = Sum(RBF(2), Linear(2))
+    p = kern.init(k0={"variance": 2.0, "lengthscale": 0.5}, k1={"variance": 3.0})
+    np.testing.assert_allclose(float(p["k0"]["log_variance"]), np.log(2.0),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(p["k0"]["log_lengthscale"]),
+                               np.log(0.5), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(p["k1"]["log_ard"]), np.log(3.0),
+                               rtol=1e-6)
+    prod = Product(RBF(2), RBF(2))
+    p = prod.init(k1={"lengthscale": 2.0})
+    np.testing.assert_allclose(np.asarray(p["k1"]["log_lengthscale"]),
+                               np.log(2.0), rtol=1e-6)
+
+    with pytest.raises(TypeError, match="k0, k1"):
+        kern.init(variance=2.0)
+    with pytest.raises(TypeError, match="dict"):
+        kern.init(k0=2.0)
+
+
+# ---------------------------------------------------------------------------
+# benchmark kernel-name validation (ROADMAP item)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", ("matern32", "sum", "product"))
+def test_benchmarks_validate_kernel_names(bad):
+    from benchmarks import gp_scaling, gp_stream, indistributable
+
+    for mod in (gp_scaling, indistributable, gp_stream):
+        with pytest.raises(ValueError, match="closed-form psi"):
+            mod.run(kernel_name=bad)
+    # the supported names pass validation (probe without running the bench)
+    from benchmarks.common import validate_psi_kernel
+
+    validate_psi_kernel("rbf")
+    validate_psi_kernel("linear")
