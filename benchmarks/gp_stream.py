@@ -11,6 +11,11 @@ statistics cost) and its value_and_grad (pass="step", the training step
 cost, timed at the smaller sizes so the full sweep stays minutes-scale),
 plus the exact-path SGPR loss — all chunked, so nothing materializes an
 (N, M) workspace (the peak_intermediate_bytes column is the proof).
+
+Fused "step" rows carry a `bwd_backend` field: the reverse pass of the
+fused op is itself dispatched (Pallas reverse kernel vs streaming jnp scan,
+see repro.kernels.ops), and the pallas-interpret rows time BOTH kernel
+bodies end-to-end through jax.value_and_grad.
 """
 from __future__ import annotations
 
@@ -33,13 +38,15 @@ CHUNK = 4096
 BACKENDS = ("jnp", "fused")
 
 
-def _json_row(model, backend, pass_, N, seconds, peak_bytes):
+def _json_row(model, backend, pass_, N, seconds, peak_bytes, bwd_backend=None):
     # the engine chunk only steers the jnp path; the fused/pallas ops stream
-    # at their own internal granularity, so their rows must not claim it
+    # at their own internal granularity, so their rows must not claim it.
+    # bwd_backend is only meaningful for fused "step" rows (grad dispatch).
     return {
         "section": "gp_stream", "model": model, "backend": backend,
         "pass": pass_, "N": int(N), "M": M,
         "chunk": CHUNK if backend == "jnp" else None,
+        "bwd_backend": bwd_backend if pass_ == "step" else None,
         "seconds": float(seconds),
         "us_per_point": float(seconds / N * 1e6),
         "peak_intermediate_bytes": int(peak_bytes),
@@ -77,7 +84,9 @@ def run(sizes=SIZES, kernel_name: str = "rbf", *, smoke: bool = False):
             if N <= GRAD_MAX_N:
                 vg = jax.value_and_grad(loss)
                 t, peak = _bench(vg, params, Y, N=N)
-                rows.append(_json_row("gplvm", backend, "step", N, t, peak))
+                bwd = "auto" if backend == "fused" else None
+                rows.append(_json_row("gplvm", backend, "step", N, t, peak,
+                                      bwd_backend=bwd))
                 csv.append(row(f"gp_stream_gplvm_{backend}_step_N{N}", t,
                                f"per_point_us={t/N*1e6:.3f},peak_mb={peak/1e6:.1f}"))
 
@@ -96,19 +105,28 @@ def run(sizes=SIZES, kernel_name: str = "rbf", *, smoke: bool = False):
         csv.append(row(f"gp_stream_sgpr_jnp_loss_N{N}", t,
                        f"per_point_us={t/N*1e6:.3f},peak_mb={peak/1e6:.1f}"))
 
-    # fused Pallas kernel body in interpret mode (small-N: per-grid-point
-    # interpretation is Python-priced; the TPU perf story is the roofline)
+    # fused Pallas kernel bodies in interpret mode (small-N: per-grid-point
+    # interpretation is Python-priced; the TPU perf story is the roofline).
+    # The "step" row drives value_and_grad through BOTH kernels — forward
+    # grid (i, j, kn) and the reverse kernel's grid (kn, i, j).
     from repro.kernels import ops
 
     n_int = min(1024, ops.FUSED_INTERPRET_MAX_N)
     if not smoke and kernel_name == "rbf":  # smoke's fused N=1024 row is interpret already
         _, Y = gplvm_synthetic(key, N=n_int, D=D, Q=Q)
         params = gplvm.init_params(key, np.asarray(Y), Q=Q, M=M, kernel=kern)
+        label = "pallas-interpret" if ops.INTERPRET else "pallas"
         loss = functools.partial(gplvm.loss, kernel=kern, backend="fused")
         t, peak = _bench(loss, params, Y, N=n_int)
-        label = "pallas-interpret" if ops.INTERPRET else "pallas"
         rows.append(_json_row("gplvm", label, "loss", n_int, t, peak))
         csv.append(row(f"gp_stream_gplvm_{label}_loss_N{n_int}", t,
+                       f"per_point_us={t/n_int*1e6:.3f},peak_mb={peak/1e6:.1f}"))
+        step = jax.value_and_grad(functools.partial(
+            gplvm.loss, kernel=kern, backend="fused", bwd_backend="pallas"))
+        t, peak = _bench(step, params, Y, N=n_int)
+        rows.append(_json_row("gplvm", label, "step", n_int, t, peak,
+                              bwd_backend="pallas"))
+        csv.append(row(f"gp_stream_gplvm_{label}_step_N{n_int}", t,
                        f"per_point_us={t/n_int*1e6:.3f},peak_mb={peak/1e6:.1f}"))
     return csv, rows
 

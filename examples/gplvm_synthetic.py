@@ -30,7 +30,12 @@ def main() -> None:
     ap.add_argument("--m", type=int, default=100)
     ap.add_argument("--steps", type=int, default=400)
     ap.add_argument("--lbfgs", action="store_true", help="paper's optimizer")
-    ap.add_argument("--pallas", action="store_true", help="psi-stats via Pallas kernels")
+    ap.add_argument("--backend", choices=("jnp", "pallas", "fused"),
+                    default="jnp",
+                    help="psi-stats path; 'fused' trains through the fused "
+                         "suffstats kernel pair (fwd + hand-derived reverse)")
+    ap.add_argument("--pallas", action="store_true",
+                    help="deprecated alias for --backend pallas")
     ap.add_argument("--min-corr", type=float, default=0.95,
                     help="latent-recovery bar (smoke-mode CI relaxes it: the "
                          "recovery quality depends on the data draw and N)")
@@ -40,8 +45,11 @@ def main() -> None:
     X_true, Y = gplvm_synthetic(key, N=args.n, D=3, Q=1)
     print(f"data: N={args.n} 3-D points from a 1-D latent (paper §4)")
 
+    if args.pallas and args.backend != "jnp":
+        ap.error("--pallas is an alias for --backend pallas; don't pass both")
+    backend = "pallas" if args.pallas else args.backend
     lvm = BayesianGPLVM(kernel=get("rbf")(1), M=args.m, mesh=make_gp_mesh(),
-                        backend="pallas" if args.pallas else "jnp")
+                        backend=backend)
 
     t0 = time.time()
     lvm.fit(Y, optimizer="lbfgs" if args.lbfgs else "adam", steps=args.steps,

@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""Docs checks, run by scripts/ci.sh:
+
+1. every relative markdown link in README.md and docs/**/*.md resolves to a
+   real file;
+2. every backtick-quoted dotted `repro.*` symbol named anywhere in docs/
+   actually imports (modules import, attributes getattr) — so the API
+   reference cannot drift from the code.
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+?)(?:#[^)]*)?\)")
+SYMBOL = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
+
+failures: list[str] = []
+md_files = [ROOT / "README.md", *sorted((ROOT / "docs").rglob("*.md"))]
+
+for md in md_files:
+    text = md.read_text()
+    for target in LINK.findall(text):
+        if "://" in target or target.startswith(("mailto:", "#")):
+            continue
+        if not (md.parent / target).exists():
+            failures.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+
+symbols = sorted({s for md in md_files if md.is_relative_to(ROOT / "docs")
+                  for s in SYMBOL.findall(md.read_text())})
+for dotted in symbols:
+    parts = dotted.split(".")
+    # longest importable module prefix, then getattr the rest
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+            break
+        except ImportError:
+            continue
+    else:
+        failures.append(f"docs: {dotted} — no importable module prefix")
+        continue
+    try:
+        for attr in parts[cut:]:
+            obj = getattr(obj, attr)
+    except AttributeError as e:
+        failures.append(f"docs: {dotted} does not resolve ({e})")
+
+if failures:
+    print("\n".join(failures))
+    sys.exit(1)
+print(f"docs OK: {len(md_files)} markdown files, {len(symbols)} "
+      f"import-checked symbols")

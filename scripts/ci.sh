@@ -7,16 +7,28 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
+# includes the Pallas reverse-kernel parity tests (tests/test_suffstats_bwd.py)
 python -m pytest -x -q
+
+echo "== docs check (links resolve, docs/api.md symbols import) =="
+python scripts/check_docs.py
 
 echo "== quickstart (sparse GP regression, facade) =="
 python examples/quickstart.py --steps 150
 
+echo "== quickstart, fused backend (Pallas fwd + bwd kernels, interpret) =="
+# small N so the interpret-mode kernel bodies (not the jnp twins) run the
+# training step end-to-end; smoke bar loosened accordingly
+python examples/quickstart.py --n 512 --steps 60 --backend fused --max-rmse 0.35
+
 echo "== gplvm_synthetic (Bayesian GP-LVM, facade, smoke size) =="
 # smoke bar: at N=512 the latent-recovery correlation is draw-limited (~0.7
 # even for the pre-facade code); the 0.95 bar is the full-size (default-args)
-# target. Smoke mode checks the whole facade path runs and learns.
-python examples/gplvm_synthetic.py --n 512 --m 32 --steps 150 --min-corr 0.55
+# target. Smoke mode checks the whole facade path runs and learns — on the
+# fused backend, so the GP-LVM training step exercises the fused kernel's
+# custom VJP under the mesh.
+python examples/gplvm_synthetic.py --n 512 --m 32 --steps 150 --min-corr 0.55 \
+    --backend fused
 
 echo "== benchmark harness (streaming engine, smoke mode) =="
 # smoke output goes to a scratch path: the repo-root BENCH_gp.json is the
@@ -30,10 +42,12 @@ import os
 doc = json.load(open(os.environ["SMOKE_BENCH"]))
 rows = doc["rows"]
 required = {"model", "backend", "pass", "N", "seconds", "us_per_point",
-            "peak_intermediate_bytes"}
+            "peak_intermediate_bytes", "bwd_backend"}
 assert rows, "BENCH_gp.json has no rows"
 assert all(required <= set(r) for r in rows), "BENCH_gp.json rows malformed"
 assert {r["backend"] for r in rows} >= {"jnp", "fused"}, "missing backend rows"
+assert any(r["backend"] == "fused" and r["pass"] == "step" for r in rows), \
+    "missing fused grad-step rows"
 print(f"benchmark smoke JSON OK ({len(rows)} rows)")
 PY
 

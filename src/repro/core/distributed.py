@@ -95,7 +95,8 @@ shard_gplvm_params = shard_gp_params
 
 
 def gplvm_loss_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
-                    backend: str = "jnp", chunk: Optional[int] = None):
+                    backend: str = "jnp", chunk: Optional[int] = None,
+                    bwd_backend: str = "auto"):
     """Distributed GP-LVM negative-ELBO: shard_map over the data axes.
 
     Returns loss(params, Y) with Y and q(X) sharded over the data axes and a
@@ -116,7 +117,8 @@ def gplvm_loss_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
     def loss(params: Params, Y_local: jax.Array) -> jax.Array:
         D = Y_local.shape[1]
         stats = gplvm.local_stats(params, Y_local, kernel=kernel,
-                                  backend=backend, chunk=chunk)
+                                  backend=backend, chunk=chunk,
+                                  bwd_backend=bwd_backend)
         kl = gplvm.kl_qp(params["q_mu"], params["q_logS"])
         # --- the paper's single collective: combine sufficient statistics ---
         stats = jax.tree.map(lambda x: jax.lax.psum(x, axes), stats)
@@ -129,7 +131,8 @@ def gplvm_loss_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
 
 
 def sgpr_loss_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
-                   backend: str = "jnp", chunk: Optional[int] = None):
+                   backend: str = "jnp", chunk: Optional[int] = None,
+                   bwd_backend: str = "auto"):
     """Distributed sparse-GP-regression negative log-bound (deterministic X)."""
     axes = _data_axes(mesh)
     local_spec = P(axes)
@@ -146,7 +149,8 @@ def sgpr_loss_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
         kern = default_rbf(kernel, params["Z"].shape[1])
         stats = suff_stats(kern, params["kern"],
                            ExactBatch(X_local, Y_local, params["Z"]),
-                           backend=backend, chunk=chunk)
+                           backend=backend, chunk=chunk,
+                           bwd_backend=bwd_backend)
         stats = jax.tree.map(lambda x: jax.lax.psum(x, axes), stats)
         Kuu = kern.K(params["kern"], params["Z"])
         terms = svgp.collapsed_bound(Kuu, stats, jnp.exp(params["log_beta"]), D)
@@ -160,7 +164,8 @@ def sgpr_loss_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
 # ---------------------------------------------------------------------------
 
 def sgpr_stats_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
-                    backend: str = "jnp", chunk: Optional[int] = None):
+                    backend: str = "jnp", chunk: Optional[int] = None,
+                    bwd_backend: str = "auto"):
     """Distributed O(N M^2) statistics pass for SGPR posterior/prediction.
 
     `posterior()` needs the same psum'd `SuffStats` the training loss
@@ -181,14 +186,16 @@ def sgpr_stats_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
         kern = default_rbf(kernel, params["Z"].shape[1])
         stats = suff_stats(kern, params["kern"],
                            ExactBatch(X_local, Y_local, params["Z"]),
-                           backend=backend, chunk=chunk)
+                           backend=backend, chunk=chunk,
+                           bwd_backend=bwd_backend)
         return jax.tree.map(lambda x: jax.lax.psum(x, axes), stats)
 
     return stats_fn
 
 
 def gplvm_stats_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
-                     backend: str = "jnp", chunk: Optional[int] = None):
+                     backend: str = "jnp", chunk: Optional[int] = None,
+                     bwd_backend: str = "auto"):
     """Distributed statistics pass for the GP-LVM posterior (see above)."""
     axes = _data_axes(mesh)
     local_spec = P(axes)
@@ -202,7 +209,8 @@ def gplvm_stats_dist(mesh: Mesh, *, kernel: Optional[Kernel] = None,
     )
     def stats_fn(params: Params, Y_local: jax.Array):
         stats = gplvm.local_stats(params, Y_local, kernel=kernel,
-                                  backend=backend, chunk=chunk)
+                                  backend=backend, chunk=chunk,
+                                  bwd_backend=bwd_backend)
         return jax.tree.map(lambda x: jax.lax.psum(x, axes), stats)
 
     return stats_fn

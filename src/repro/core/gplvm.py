@@ -66,20 +66,24 @@ def kl_qp(q_mu: jax.Array, q_logS: jax.Array) -> jax.Array:
 def local_stats(params: Params, Y_local: jax.Array, *,
                 kernel: Optional[Kernel] = None,
                 backend: str = "jnp",
-                chunk: Optional[int] = None) -> psi_stats.SuffStats:
+                chunk: Optional[int] = None,
+                bwd_backend: str = "auto") -> psi_stats.SuffStats:
     """Sufficient statistics for the local data shard, kernel-dispatched.
-    `chunk=` streams the shard's datapoints (O(chunk * M) live memory)."""
+    `chunk=` streams the shard's datapoints (O(chunk * M) live memory);
+    `bwd_backend` picks the fused backend's reverse-pass implementation."""
     kern = default_rbf(kernel, params["q_mu"].shape[1])
     S = jnp.exp(params["q_logS"])
     return suff_stats(kern, params["kern"],
                       ExpectedBatch(params["q_mu"], S, Y_local, params["Z"]),
-                      backend=backend, chunk=chunk)
+                      backend=backend, chunk=chunk, bwd_backend=bwd_backend)
 
 
 def bound(params: Params, Y: jax.Array, *, kernel: Optional[Kernel] = None,
-          backend: str = "jnp", chunk: Optional[int] = None) -> jax.Array:
+          backend: str = "jnp", chunk: Optional[int] = None,
+          bwd_backend: str = "auto") -> jax.Array:
     """Single-device (or per-shard-complete) GP-LVM evidence lower bound."""
-    stats = local_stats(params, Y, kernel=kernel, backend=backend, chunk=chunk)
+    stats = local_stats(params, Y, kernel=kernel, backend=backend, chunk=chunk,
+                        bwd_backend=bwd_backend)
     return bound_from_stats(params, stats, kl_qp(params["q_mu"], params["q_logS"]),
                             Y.shape[1], kernel=kernel)
 
@@ -97,6 +101,8 @@ def bound_from_stats(
 
 
 def loss(params: Params, Y: jax.Array, *, kernel: Optional[Kernel] = None,
-         backend: str = "jnp", chunk: Optional[int] = None) -> jax.Array:
+         backend: str = "jnp", chunk: Optional[int] = None,
+         bwd_backend: str = "auto") -> jax.Array:
     """Negative ELBO per datapoint (scale-stable objective for Adam)."""
-    return -bound(params, Y, kernel=kernel, backend=backend, chunk=chunk) / Y.shape[0]
+    return -bound(params, Y, kernel=kernel, backend=backend, chunk=chunk,
+                  bwd_backend=bwd_backend) / Y.shape[0]

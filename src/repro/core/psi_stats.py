@@ -20,10 +20,12 @@ Two computation modes:
 
 `backend="pallas"` routes the hot statistics through the Pallas TPU kernels
 (repro.kernels.ops); `backend="fused"` through the fused suffstats op (one
-pass over N for psi2 + psiY, differentiable via its hand-derived streaming
-VJP); `backend="jnp"` uses memory-lean jnp (scan over N chunks for Psi2 —
-never materializes (N, M, M)). O(chunk)-memory streaming over N for every
-backend lives one layer up, in `repro.gp.stats.suff_stats(chunk=...)`.
+pass over N for psi2 + psiY, exact path included via S -> 0, differentiable
+through its hand-derived reverse pass whose implementation `bwd_backend`
+selects — Pallas reverse kernel or streaming jnp); `backend="jnp"` uses
+memory-lean jnp (scan over N chunks for Psi2 — never materializes
+(N, M, M)). O(chunk)-memory streaming over N for every backend lives one
+layer up, in `repro.gp.stats.suff_stats(chunk=...)`.
 """
 from __future__ import annotations
 
@@ -60,10 +62,27 @@ class SuffStats(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def exact_stats_rbf(
-    kern_params, X: jax.Array, Y: jax.Array, Z: jax.Array, *, backend: str = "jnp"
+    kern_params, X: jax.Array, Y: jax.Array, Z: jax.Array, *,
+    backend: str = "jnp", bwd_backend: str = "auto"
 ) -> SuffStats:
     variance = _rbf_variance(kern_params)
     lengthscale = _rbf_lengthscale(kern_params)
+    if backend == "fused":
+        # S -> 0 collapses the expected statistics to the exact ones
+        # (psi1 -> K_fu, per-point psi2 -> k_fu k_fu^T; see
+        # docs/derivations/suffstats_vjp.md §"Exact statistics"), so the
+        # supervised path rides the same fused kernel + hand-derived VJP.
+        from repro.kernels import ops
+
+        psi2, psiY = ops.suffstats(X, jnp.zeros_like(X), Y, Z, variance,
+                                   lengthscale, bwd_backend=bwd_backend)
+        return SuffStats(
+            psi0=X.shape[0] * variance,
+            psi2=psi2,
+            psiY=psiY,
+            yy=jnp.sum(Y * Y),
+            n=jnp.asarray(X.shape[0], X.dtype),
+        )
     if backend == "pallas":
         from repro.kernels import ops
 
@@ -136,6 +155,7 @@ def expected_stats_rbf(
     Z: jax.Array,
     *,
     backend: str = "jnp",
+    bwd_backend: str = "auto",
     psi2_chunk: int = 256,
 ) -> SuffStats:
     variance = _rbf_variance(kern_params)
@@ -149,10 +169,12 @@ def expected_stats_rbf(
         # single pass over N producing (psi2, psiY) together — the
         # beyond-paper fusion (§Perf C2): one read of (mu, S, Y) per
         # datapoint instead of two. Differentiable: the op carries the
-        # hand-derived streaming VJP (kernels/ops.py).
+        # hand-derived reverse pass, itself kernelized (kernels/ops.py;
+        # `bwd_backend` picks the Pallas reverse kernel vs the jnp scan).
         from repro.kernels import ops
 
-        psi2, psiY = ops.suffstats(mu, S, Y, Z, variance, lengthscale)
+        psi2, psiY = ops.suffstats(mu, S, Y, Z, variance, lengthscale,
+                                   bwd_backend=bwd_backend)
         return SuffStats(
             psi0=mu.shape[0] * variance,
             psi2=psi2,

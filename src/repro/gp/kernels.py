@@ -107,9 +107,10 @@ class Kernel:
     # -- exact statistics (deterministic X) ---------------------------------
     def exact_suff_stats(
         self, params: Params, X: jax.Array, Y: jax.Array, Z: jax.Array,
-        *, backend: str = "jnp",
+        *, backend: str = "jnp", bwd_backend: str = "auto",
     ) -> SuffStats:
         self._check_backend(backend)
+        del bwd_backend  # only the fused backend has a kernelized reverse pass
         Kfu = self.K(params, X, Z)
         return SuffStats(
             psi0=jnp.sum(self.Kdiag(params, X)),
@@ -131,9 +132,10 @@ class Kernel:
 
     def expected_suff_stats(
         self, params: Params, mu: jax.Array, S: jax.Array, Y: jax.Array,
-        Z: jax.Array, *, backend: str = "jnp",
+        Z: jax.Array, *, backend: str = "jnp", bwd_backend: str = "auto",
     ) -> SuffStats:
         self._check_backend(backend)
+        del bwd_backend  # only the fused backend has a kernelized reverse pass
         psi1 = self.psi1(params, mu, S, Z)
         return SuffStats(
             psi0=self.psi0(params, mu, S),
@@ -170,8 +172,10 @@ class RBF(Kernel):
     here, L-BFGS-B in the paper) work on R^n. Closed-form psi statistics
     under Gaussian q(X) exist, which is why the paper's GP-LVM experiments
     use it; its statistics also have Pallas TPU kernels (backend="pallas")
-    and the fused suffstats op (backend="fused": psi2 + psiY in one pass,
-    differentiable through its hand-derived streaming VJP).
+    and the fused suffstats op (backend="fused": psi2 + psiY in one pass —
+    expected statistics, and exact ones via S -> 0 — differentiable through
+    its hand-derived reverse pass, whose implementation the `bwd_backend`
+    knob selects: Pallas reverse kernel or streaming jnp).
     """
 
     input_dim: int
@@ -206,13 +210,15 @@ class RBF(Kernel):
     def Kdiag(self, params: Params, X: jax.Array) -> jax.Array:
         return jnp.full((X.shape[0],), self.variance(params))
 
-    def exact_suff_stats(self, params, X, Y, Z, *, backend: str = "jnp") -> SuffStats:
-        if backend not in ("jnp", "pallas"):
+    def exact_suff_stats(self, params, X, Y, Z, *, backend: str = "jnp",
+                         bwd_backend: str = "auto") -> SuffStats:
+        if backend not in ("jnp", "pallas", "fused"):
             raise ValueError(
-                f"RBF exact statistics support backend='jnp'|'pallas', got "
-                f"{backend!r} ('fused' is an expected-statistics/GP-LVM backend)"
+                f"RBF exact statistics support backend='jnp'|'pallas'|'fused', "
+                f"got {backend!r}"
             )
-        return psi_stats.exact_stats_rbf(params, X, Y, Z, backend=backend)
+        return psi_stats.exact_stats_rbf(params, X, Y, Z, backend=backend,
+                                         bwd_backend=bwd_backend)
 
     def psi0(self, params, mu, S) -> jax.Array:
         return ref.psi0_rbf(mu, S, self.variance(params), self.lengthscale(params))
@@ -225,13 +231,15 @@ class RBF(Kernel):
             mu, S, Z, self.variance(params), self.lengthscale(params)
         )
 
-    def expected_suff_stats(self, params, mu, S, Y, Z, *, backend: str = "jnp") -> SuffStats:
+    def expected_suff_stats(self, params, mu, S, Y, Z, *, backend: str = "jnp",
+                            bwd_backend: str = "auto") -> SuffStats:
         if backend not in ("jnp", "pallas", "fused"):
             raise ValueError(
                 f"RBF expected statistics support backend='jnp'|'pallas'|'fused', "
                 f"got {backend!r}"
             )
-        return psi_stats.expected_stats_rbf(params, mu, S, Y, Z, backend=backend)
+        return psi_stats.expected_stats_rbf(params, mu, S, Y, Z, backend=backend,
+                                            bwd_backend=bwd_backend)
 
 
 @register("linear")
@@ -524,6 +532,8 @@ class Product(_Composite):
         k, p = self._equivalent_rbf(params)
         return k.psi2(p, mu, S, Z)
 
-    def expected_suff_stats(self, params, mu, S, Y, Z, *, backend: str = "jnp") -> SuffStats:
+    def expected_suff_stats(self, params, mu, S, Y, Z, *, backend: str = "jnp",
+                            bwd_backend: str = "auto") -> SuffStats:
         k, p = self._equivalent_rbf(params)
-        return k.expected_suff_stats(p, mu, S, Y, Z, backend=backend)
+        return k.expected_suff_stats(p, mu, S, Y, Z, backend=backend,
+                                     bwd_backend=bwd_backend)

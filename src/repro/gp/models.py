@@ -13,11 +13,15 @@ produce bit-identical losses.
 
 `mesh=` selects the paper's data-parallel path (shard_map over the data axes,
 one psum of the sufficient statistics); `backend=` routes the statistics
-through Pallas TPU kernels ("pallas") or the fused suffstats op ("fused",
-GP-LVM only); `chunk=` streams the statistics over N in chunks of that size
-so training AND prediction peak at O(chunk * M + M^2) memory regardless of
-N. All three come from the constructor so serving/config code can pick them
-by string/int without touching model internals.
+through Pallas TPU kernels ("pallas") or the fused suffstats op ("fused" —
+expected statistics for the GP-LVM, exact ones for regression via S -> 0);
+`bwd_backend=` picks the fused op's reverse-pass implementation (the Pallas
+reverse kernel vs the streaming jnp scan; "auto" dispatches like the
+forward); `chunk=` streams the statistics over N in chunks of that size so
+training AND prediction peak at O(chunk * M + M^2) memory regardless of N.
+All of these come from the constructor so serving/config code can pick them
+by string/int without touching model internals. See docs/api.md for the
+full public surface and docs/architecture.md for how the layers fit.
 """
 from __future__ import annotations
 
@@ -57,11 +61,12 @@ class _CollapsedGPModel:
 
     def __init__(self, kernel: Optional[Kernel], M: int, *,
                  mesh: Optional[Mesh] = None, backend: str = "jnp",
-                 chunk: Optional[int] = None):
+                 chunk: Optional[int] = None, bwd_backend: str = "auto"):
         self.kernel = kernel
         self.M = int(M)
         self.mesh = mesh
         self.backend = backend
+        self.bwd_backend = bwd_backend
         self.chunk = None if chunk is None else int(chunk)
         self.params: Optional[Params] = None
         self.history: list = []
@@ -124,29 +129,36 @@ class SparseGPRegression(_CollapsedGPModel):
       M: number of inducing points (initialized as a subset of X).
       mesh: optional jax Mesh — statistics shard over its data axes and merge
         with one psum (the paper's MPI scheme); None = single-device math.
-      backend: "jnp" | "pallas" statistics path.
+      backend: "jnp" | "pallas" | "fused" statistics path ("fused" rides the
+        fused suffstats kernel with S -> 0, so the supervised hot path is
+        one kernelized pass over N in both directions of differentiation).
       chunk: stream the O(N) statistics in chunks of this size (training and
         prediction both peak at O(chunk * M + M^2) memory); None = one shot.
+      bwd_backend: "auto" | "pallas" | "jnp" — reverse-pass implementation
+        of the fused op (ignored by the other backends).
     """
 
     def __init__(self, kernel: Optional[Kernel] = None, M: int = 32, *,
                  mesh: Optional[Mesh] = None, backend: str = "jnp",
-                 chunk: Optional[int] = None):
-        super().__init__(kernel, M, mesh=mesh, backend=backend, chunk=chunk)
+                 chunk: Optional[int] = None, bwd_backend: str = "auto"):
+        super().__init__(kernel, M, mesh=mesh, backend=backend, chunk=chunk,
+                         bwd_backend=bwd_backend)
         self._data: Optional[Tuple[jax.Array, jax.Array]] = None
 
     def _build_loss(self):
         if self.mesh is not None:
             return distributed.sgpr_loss_dist(self.mesh, kernel=self.kernel,
                                               backend=self.backend,
-                                              chunk=self.chunk)
+                                              chunk=self.chunk,
+                                              bwd_backend=self.bwd_backend)
         kernel, backend, chunk = self.kernel, self.backend, self.chunk
+        bwd_backend = self.bwd_backend
 
         def loss(params: Params, X: jax.Array, Y: jax.Array) -> jax.Array:
             kern = default_rbf(kernel, params["Z"].shape[1])
             stats = suff_stats(kern, params["kern"],
                                ExactBatch(X, Y, params["Z"]), backend=backend,
-                               chunk=chunk)
+                               chunk=chunk, bwd_backend=bwd_backend)
             Kuu = kern.K(params["kern"], params["Z"])
             terms = svgp.collapsed_bound(Kuu, stats, jnp.exp(params["log_beta"]),
                                          Y.shape[1])
@@ -158,14 +170,16 @@ class SparseGPRegression(_CollapsedGPModel):
         if self.mesh is not None:
             return distributed.sgpr_stats_dist(self.mesh, kernel=self.kernel,
                                                backend=self.backend,
-                                               chunk=self.chunk)
+                                               chunk=self.chunk,
+                                               bwd_backend=self.bwd_backend)
         kernel, backend, chunk = self.kernel, self.backend, self.chunk
+        bwd_backend = self.bwd_backend
 
         def stats_fn(params: Params, X: jax.Array, Y: jax.Array):
             kern = default_rbf(kernel, params["Z"].shape[1])
             return suff_stats(kern, params["kern"],
                               ExactBatch(X, Y, params["Z"]), backend=backend,
-                              chunk=chunk)
+                              chunk=chunk, bwd_backend=bwd_backend)
 
         return stats_fn
 
@@ -227,17 +241,18 @@ class BayesianGPLVM(_CollapsedGPModel):
         Sum/Product composites); default RBF(Q).
       Q: latent dimensionality.
       M: number of inducing points.
-      mesh / backend / chunk: as for SparseGPRegression; backend additionally
-        accepts "fused" (the fused suffstats op: one pass over N producing
-        psi2/psiY together, differentiable via its hand-derived streaming
-        VJP).
+      mesh / backend / chunk / bwd_backend: as for SparseGPRegression;
+        backend="fused" is the fused suffstats op (one pass over N producing
+        psi2/psiY together, differentiable via its hand-derived reverse
+        pass, kernelized when bwd_backend is "auto"/"pallas").
     """
 
     def __init__(self, kernel: Optional[Kernel] = None, M: int = 100,
                  Q: Optional[int] = None, *,
                  mesh: Optional[Mesh] = None, backend: str = "jnp",
-                 chunk: Optional[int] = None):
-        super().__init__(kernel, M, mesh=mesh, backend=backend, chunk=chunk)
+                 chunk: Optional[int] = None, bwd_backend: str = "auto"):
+        super().__init__(kernel, M, mesh=mesh, backend=backend, chunk=chunk,
+                         bwd_backend=bwd_backend)
         if kernel is not None and Q is not None and Q != kernel.input_dim:
             raise ValueError(
                 f"Q={Q} conflicts with kernel.input_dim={kernel.input_dim}; "
@@ -250,17 +265,21 @@ class BayesianGPLVM(_CollapsedGPModel):
         if self.mesh is not None:
             return distributed.gplvm_loss_dist(self.mesh, kernel=self.kernel,
                                                backend=self.backend,
-                                               chunk=self.chunk)
+                                               chunk=self.chunk,
+                                               bwd_backend=self.bwd_backend)
         return functools.partial(gplvm.loss, kernel=self.kernel,
-                                 backend=self.backend, chunk=self.chunk)
+                                 backend=self.backend, chunk=self.chunk,
+                                 bwd_backend=self.bwd_backend)
 
     def _build_stats(self):
         if self.mesh is not None:
             return distributed.gplvm_stats_dist(self.mesh, kernel=self.kernel,
                                                 backend=self.backend,
-                                                chunk=self.chunk)
+                                                chunk=self.chunk,
+                                                bwd_backend=self.bwd_backend)
         return functools.partial(gplvm.local_stats, kernel=self.kernel,
-                                 backend=self.backend, chunk=self.chunk)
+                                 backend=self.backend, chunk=self.chunk,
+                                 bwd_backend=self.bwd_backend)
 
     def fit(self, Y: jax.Array, *, optimizer: str = "adam", steps: int = 400,
             lr: float = 2e-2, log_every: int = 0,

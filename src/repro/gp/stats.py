@@ -50,12 +50,15 @@ class ExpectedBatch(NamedTuple):
 Batch = Union[ExactBatch, ExpectedBatch]
 
 
-def _dispatch(kernel: Kernel, params: Params, batch: Batch, backend: str) -> SuffStats:
+def _dispatch(kernel: Kernel, params: Params, batch: Batch, backend: str,
+              bwd_backend: str = "auto") -> SuffStats:
     if isinstance(batch, ExactBatch):
-        return kernel.exact_suff_stats(params, batch.X, batch.Y, batch.Z, backend=backend)
+        return kernel.exact_suff_stats(params, batch.X, batch.Y, batch.Z,
+                                       backend=backend, bwd_backend=bwd_backend)
     if isinstance(batch, ExpectedBatch):
         return kernel.expected_suff_stats(
-            params, batch.mu, batch.S, batch.Y, batch.Z, backend=backend
+            params, batch.mu, batch.S, batch.Y, batch.Z, backend=backend,
+            bwd_backend=bwd_backend
         )
     raise TypeError(f"expected ExactBatch or ExpectedBatch, got {type(batch).__name__}")
 
@@ -123,15 +126,18 @@ def streaming_suff_stats(kernel: Kernel, params: Params, batch: Batch, *,
 
 
 def suff_stats(kernel: Kernel, params: Params, batch: Batch, *,
-               backend: str = "jnp", chunk: Optional[int] = None) -> SuffStats:
+               backend: str = "jnp", chunk: Optional[int] = None,
+               bwd_backend: str = "auto") -> SuffStats:
     """Sufficient statistics of `batch` under `kernel`, kernel-dispatched.
 
     `chunk=None` evaluates the statistics in one shot (full-batch
     workspaces); an integer streams the datapoints in chunks of that size.
     The "fused" backend is exempt: its op already streams internally (jnp
-    twin / Pallas grid over N) with a streaming hand-derived VJP.
+    twin / Pallas grid over N) with a streaming hand-derived VJP, whose
+    implementation `bwd_backend` selects (Pallas reverse kernel vs jnp scan;
+    ignored by the other backends).
     """
     if chunk is not None and backend != "fused":
         return streaming_suff_stats(kernel, params, batch,
                                     backend=backend, chunk=chunk)
-    return _dispatch(kernel, params, batch, backend)
+    return _dispatch(kernel, params, batch, backend, bwd_backend)

@@ -1,19 +1,29 @@
 """Differentiable jit'd wrappers around the Pallas psi-statistic kernels.
 
 Forward = Pallas kernel (interpret-mode on CPU, compiled on TPU).
-Backward = memory-lean jnp (chunked where needed): jax.vjp of the ref
-formulas for the single-statistic kernels, and the HAND-DERIVED streaming
-reverse pass (kernels/suffstats.py) for the fused suffstats kernel — the
-paper's Table-2 gradient loops expressed as closed-form reverse rules.
+Backward of the single-statistic kernels = memory-lean jnp (jax.vjp of the
+ref formulas, chunked where needed). Backward of the fused `suffstats` op =
+the HAND-DERIVED reverse pass (kernels/suffstats.py, the paper's Table-2
+gradient loops expressed as closed-form reverse rules), dispatched by a
+`bwd_backend` knob:
+
+  * ``"auto"``   (default) — mirror the forward's three-way dispatch: the
+    Pallas reverse kernel compiled on TPU, the same kernel body in interpret
+    mode off-TPU for small N, and the streaming-jnp reverse scan off-TPU for
+    large N. This is the only knob value callers normally need.
+  * ``"pallas"`` — force the Pallas reverse kernel (interpret off-TPU even
+    at large N: slow, for validation).
+  * ``"jnp"``    — force the streaming-jnp reverse scan everywhere.
 
 `INTERPRET` flips automatically: True off-TPU so the whole test/bench suite
 exercises the real kernel bodies on CPU. Because interpret mode pays a
 Python-level cost per grid point, the fused `suffstats` op only runs the
-kernel body off-TPU up to `FUSED_INTERPRET_MAX_N` datapoints; beyond that it
-switches to the numerically-identical streaming-jnp twin (the grad path is
-the same hand-derived VJP either way).
+kernel bodies off-TPU up to `FUSED_INTERPRET_MAX_N` datapoints; beyond that
+it switches to the numerically-matching streaming-jnp twins.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +33,7 @@ from repro.kernels.kfu import kfu_pallas
 from repro.kernels.psi1 import psi1_pallas
 from repro.kernels.psi2 import psi2_pallas
 from repro.kernels.suffstats import (
+    suffstats_bwd_pallas,
     suffstats_fused_jnp,
     suffstats_pallas,
     suffstats_vjp_jnp,
@@ -110,6 +121,9 @@ psi2.defvjp(_psi2_fwd, _psi2_bwd)
 # fused suffstats (psi2 + psiY in one pass over N)
 # ---------------------------------------------------------------------------
 
+BWD_BACKENDS = ("auto", "pallas", "jnp")
+
+
 def _suffstats_impl(mu, S, Y, Z, variance, lengthscale):
     if not INTERPRET:
         return suffstats_pallas(mu, S, Y, Z, variance, lengthscale,
@@ -120,21 +134,49 @@ def _suffstats_impl(mu, S, Y, Z, variance, lengthscale):
     return suffstats_fused_jnp(mu, S, Y, Z, variance, lengthscale)
 
 
-@jax.custom_vjp
-def suffstats(mu, S, Y, Z, variance, lengthscale):
-    """Fused (psi2 (M, M), psiY (M, D)) with a streaming O(chunk * M^2)
-    reverse pass — usable under jax.grad inside training steps."""
-    return _suffstats_impl(mu, S, Y, Z, variance, lengthscale)
-
-
-def _suffstats_fwd(mu, S, Y, Z, variance, lengthscale):
-    out = suffstats(mu, S, Y, Z, variance, lengthscale)
-    return out, (mu, S, Y, Z, variance, lengthscale)
-
-
-def _suffstats_bwd(res, g):
-    g2, gY = g
+def _suffstats_bwd_dispatch(bwd_backend, res, g2, gY):
+    """Reverse-pass dispatch, mirroring the forward's three-way split."""
+    if bwd_backend == "jnp":
+        return suffstats_vjp_jnp(*res, g2, gY)
+    if bwd_backend == "pallas":
+        return suffstats_bwd_pallas(*res, g2, gY, interpret=INTERPRET)
+    if not INTERPRET:
+        return suffstats_bwd_pallas(*res, g2, gY, interpret=False)
+    if res[0].shape[0] <= FUSED_INTERPRET_MAX_N:
+        return suffstats_bwd_pallas(*res, g2, gY, interpret=True)
     return suffstats_vjp_jnp(*res, g2, gY)
 
 
-suffstats.defvjp(_suffstats_fwd, _suffstats_bwd)
+@functools.lru_cache(maxsize=None)
+def _make_suffstats_op(bwd_backend: str):
+    """One custom_vjp op per bwd_backend value (the knob must be static at
+    trace time, so it selects among cached op instances rather than riding
+    the traced arguments)."""
+
+    @jax.custom_vjp
+    def op(mu, S, Y, Z, variance, lengthscale):
+        return _suffstats_impl(mu, S, Y, Z, variance, lengthscale)
+
+    def fwd(mu, S, Y, Z, variance, lengthscale):
+        out = op(mu, S, Y, Z, variance, lengthscale)
+        return out, (mu, S, Y, Z, variance, lengthscale)
+
+    def bwd(res, g):
+        g2, gY = g
+        return _suffstats_bwd_dispatch(bwd_backend, res, g2, gY)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def suffstats(mu, S, Y, Z, variance, lengthscale, *, bwd_backend: str = "auto"):
+    """Fused (psi2 (M, M), psiY (M, D)) with a hand-derived O(chunk * M^2)
+    reverse pass — usable under jax.grad inside training steps.
+
+    `bwd_backend` selects the reverse-pass implementation ("auto" | "pallas"
+    | "jnp", see module docstring); the forward dispatch is unaffected.
+    """
+    if bwd_backend not in BWD_BACKENDS:
+        raise ValueError(
+            f"bwd_backend must be one of {BWD_BACKENDS}, got {bwd_backend!r}")
+    return _make_suffstats_op(bwd_backend)(mu, S, Y, Z, variance, lengthscale)

@@ -1,6 +1,7 @@
 """Fused suffstats kernel: ALL sufficient statistics in one pass over N
-(beyond-paper optimization C3, EXPERIMENTS.md §Perf) — forward Pallas TPU
-kernel, streaming jnp twin, and the hand-derived streaming reverse pass.
+(beyond-paper optimization C3, EXPERIMENTS.md §Perf) — forward AND reverse
+Pallas TPU kernels, streaming jnp twins of both, and the hand-derived
+reverse-pass algebra they all implement.
 
 The paper computes Psi1 and Psi2 in separate GPU kernels (Table 1); the
 bound only ever consumes psiY = Psi1^T Y and Psi2, so this kernel streams
@@ -10,23 +11,39 @@ each datapoint once and accumulates BOTH:
     acc2[m, m']  += exp(lognorm2_n + muterm_n,m,m')
 
 Removing the second pass halves HBM reads of (mu, S) and never materializes
-the (N, M) Psi1 matrix. Grid = (M/TM, M/TM, N/TN) with the N axis innermost
-(sequential accumulation); psiY accumulates only on the j == 0 column of the
-grid so it is added exactly once per (m-tile, n-tile).
+the (N, M) Psi1 matrix.
 
-Three entry points (wired into a differentiable op by `repro.kernels.ops`):
+The REVERSE pass has the same structure (paper Table 2 generalized to the
+fused outputs): given cotangents (g2, gY) of (psi2, psiY), every input
+cotangent is a weighted streaming reduction over the same per-point factors
+the forward computes — so the backward reuses the forward's tile scheme.
+The full algebra, with the equation numbers cited throughout this file,
+lives in docs/derivations/suffstats_vjp.md.
 
-  * `suffstats_pallas`     — the Pallas kernel (compiled on TPU, interpret
-                             elsewhere).
-  * `suffstats_fused_jnp`  — numerically-identical streaming `lax.scan` over
-                             N chunks; the off-TPU large-N forward.
-  * `suffstats_vjp_jnp`    — HAND-DERIVED reverse pass (paper Table 2
-                             generalized to the fused outputs), itself a
-                             second streaming kernel over N: per-datapoint
-                             cotangents (dmu, dS, dY) leave chunk by chunk,
-                             global cotangents (dZ, dvariance, dlengthscale)
-                             ride the scan carry. Peak live memory is
-                             O(chunk * M^2), matching the forward.
+Four entry points (wired into a differentiable op by `repro.kernels.ops`):
+
+  * `suffstats_pallas`      — forward Pallas kernel (compiled on TPU,
+                              interpret elsewhere). Grid (i, j, kn) with the
+                              N axis innermost: each (M-tile, M-tile) output
+                              block accumulates datapoint tiles in place.
+  * `suffstats_bwd_pallas`  — reverse Pallas kernel. Grid (kn, i, j) with
+                              the N axis OUTERMOST: the per-datapoint
+                              cotangent blocks (dmu, dS, dY) accumulate the
+                              (i, j) inducing tiles in place, while the
+                              global cotangents (dZ, dvariance,
+                              dlengthscale) live in whole-array output
+                              blocks whose index never changes (they stay
+                              resident in VMEM for the entire grid).
+  * `suffstats_fused_jnp`   — numerically-matching streaming `lax.scan`
+                              over N chunks; the off-TPU large-N forward.
+  * `suffstats_vjp_jnp`     — the same reverse algebra as a streaming jnp
+                              scan; the off-TPU large-N backward.
+
+The Pallas forward and reverse kernels share the `_psi1_tile` / `_psi2_tile`
+block helpers below, so the exponential the reverse pass differentiates is
+the exponential the forward evaluates — the two cannot drift. The jnp pair
+shares `_psi1_weighted` / `_psi2_weighted` the same way (and
+`_psi1_weighted` is itself a wrapper over `_psi1_tile`).
 """
 from __future__ import annotations
 
@@ -39,6 +56,68 @@ from jax.experimental import pallas as pl
 TILE_N = 32
 TILE_M = 128
 
+
+# ---------------------------------------------------------------------------
+# shared tile helpers (used by BOTH the forward and reverse Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def _dot(a, b, dims, ct):
+    return jax.lax.dot_general(a, b, (dims, ((), ())),
+                               preferred_element_type=ct)
+
+
+def _psi1_tile(mu, S, z, l2, *, ct):
+    """psi1 block / (v * w) for one (TN, TM) tile via the MXU factorization
+    (suffstats_vjp.md eq. (1)-(2)): returns (b (TN, Q), blk (TN, TM)).
+
+    Shared by the forward kernel, the reverse kernel, and (through
+    `_psi1_weighted`) the streaming jnp twin + hand-derived VJP — every
+    consumer evaluates the identical expression.
+    """
+    b = 1.0 / (l2 + S)
+    lognorm1 = -0.5 * jnp.sum(jnp.log1p(S / l2), axis=-1, keepdims=True)
+    c1 = jnp.sum(mu * mu * b, axis=-1, keepdims=True)
+    mub_zt = _dot(mu * b, z, ((1,), (1,)), ct)
+    b_z2t = _dot(b, z * z, ((1,), (1,)), ct)
+    return b, jnp.exp(lognorm1 - 0.5 * (c1 - 2.0 * mub_zt + b_z2t))
+
+
+def _psi2_tile(mu, S, z1, z2, l2, *, ct):
+    """Per-point psi2 factor E (without the v^2 exp(zterm) prefactor or pad
+    weight) for one (TN, TM, TM) tile (suffstats_vjp.md eq. (4)-(6)):
+    returns (r (TN, Q), E (TN, TM, TM)).
+
+    The (mu - zbar)^2 exponent is expanded so the n<->m coupling becomes two
+    MXU matmuls (A1, A2) plus a rank-Q cross term accumulated per q on the
+    VPU — same math as kernels/psi2.py. Shared by the forward and reverse
+    kernels (see `_psi1_tile`).
+    """
+    tn, q_dim = mu.shape
+    tm = z1.shape[0]
+    r = 1.0 / (l2 + 2.0 * S)
+    lognorm2 = -0.5 * jnp.sum(jnp.log1p(2.0 * S / l2), axis=-1, keepdims=True)
+    c2 = jnp.sum(mu * mu * r, axis=-1, keepdims=True)
+    mur = mu * r
+
+    def halfterm(z):
+        a = _dot(mur, z, ((1,), (1,)), ct)
+        b = _dot(r, z * z, ((1,), (1,)), ct)
+        return a - 0.25 * b
+
+    A1 = halfterm(z1)
+    A2 = halfterm(z2)
+    cross = jnp.zeros((tn, tm, tm), ct)
+    for q in range(q_dim):
+        cross = cross + (r[:, q][:, None, None] * z1[:, q][None, :, None]
+                         * z2[:, q][None, None, :])
+    E = jnp.exp((lognorm2 - c2)[:, :, None] + A1[:, :, None] + A2[:, None, :]
+                - 0.5 * cross)
+    return r, E
+
+
+# ---------------------------------------------------------------------------
+# forward kernel
+# ---------------------------------------------------------------------------
 
 def _suffstats_kernel(mu_ref, s_ref, y_ref, w_ref, z1_ref, z2_ref, l2_ref,
                       psi2_ref, psiy_ref, *, ct=jnp.float32):
@@ -53,33 +132,14 @@ def _suffstats_kernel(mu_ref, s_ref, y_ref, w_ref, z1_ref, z2_ref, l2_ref,
     z2 = z2_ref[...].astype(ct)
     l2 = l2_ref[...].astype(ct)  # (1, Q)
 
-    tn, q_dim = mu.shape
+    tn = mu.shape[0]
     tm = z1.shape[0]
 
-    # ---------------- psi2 tile (same math as kernels/psi2.py) ----------
-    r = 1.0 / (l2 + 2.0 * S)
-    lognorm2 = -0.5 * jnp.sum(jnp.log1p(2.0 * S / l2), axis=-1, keepdims=True)
-    c2 = jnp.sum(mu * mu * r, axis=-1, keepdims=True)
-    mur = mu * r
-
-    def halfterm(z):
-        a = jax.lax.dot_general(mur, z, (((1,), (1,)), ((), ())),
-                                preferred_element_type=ct)
-        b = jax.lax.dot_general(r, z * z, (((1,), (1,)), ((), ())),
-                                preferred_element_type=ct)
-        return a - 0.25 * b
-
-    A1 = halfterm(z1)
-    A2 = halfterm(z2)
-    cross = jnp.zeros((tn, tm, tm), ct)
-    for q in range(q_dim):
-        cross = cross + (r[:, q][:, None, None] * z1[:, q][None, :, None]
-                         * z2[:, q][None, None, :])
-    E = jnp.exp((lognorm2 - c2)[:, :, None] + A1[:, :, None] + A2[:, None, :]
-                - 0.5 * cross)
-    contrib2 = jax.lax.dot_general(
-        w.T, E.reshape(tn, tm * tm), (((1,), (0,)), ((), ())),
-        preferred_element_type=ct).reshape(tm, tm)
+    # ---------------- psi2 tile (shared helper; eq. (6)-(7)) -------------
+    _, E = _psi2_tile(mu, S, z1, z2, l2, ct=ct)
+    # weighted datapoint reduction on the MXU: (1, TN) @ (TN, TM*TM)
+    contrib2 = _dot(w.T, E.reshape(tn, tm * tm), ((1,), (0,)), ct
+                    ).reshape(tm, tm)
 
     @pl.when(kn == 0)
     def _():
@@ -89,19 +149,12 @@ def _suffstats_kernel(mu_ref, s_ref, y_ref, w_ref, z1_ref, z2_ref, l2_ref,
     def _():
         psi2_ref[...] += contrib2
 
-    # ---------------- psiY tile (psi1 MXU factorization) ----------------
+    # ---------------- psiY tile (shared helper; eq. (2)-(3)) -------------
     @pl.when(j == 0)
     def _():
-        b = 1.0 / (l2 + S)
-        lognorm1 = -0.5 * jnp.sum(jnp.log1p(S / l2), axis=-1, keepdims=True)
-        c1 = jnp.sum(mu * mu * b, axis=-1, keepdims=True)
-        mub_zt = jax.lax.dot_general(mu * b, z1, (((1,), (1,)), ((), ())),
-                                     preferred_element_type=ct)
-        b_z2t = jax.lax.dot_general(b, z1 * z1, (((1,), (1,)), ((), ())),
-                                    preferred_element_type=ct)
-        psi1_blk = jnp.exp(lognorm1 - 0.5 * (c1 - 2.0 * mub_zt + b_z2t)) * w  # (TN, TM)
-        contribY = jax.lax.dot_general(psi1_blk, y, (((0,), (0,)), ((), ())),
-                                       preferred_element_type=ct)  # (TM, D)
+        _, blk = _psi1_tile(mu, S, z1, l2, ct=ct)
+        psi1_blk = blk * w  # (TN, TM)
+        contribY = _dot(psi1_blk, y, ((0,), (0,)), ct)  # (TM, D)
 
         @pl.when(kn == 0)
         def _():
@@ -169,6 +222,220 @@ def suffstats_pallas(mu, S, Y, Z, variance, lengthscale, *, interpret: bool = Fa
 
 
 # ---------------------------------------------------------------------------
+# reverse kernel: same tile structure, N axis outermost
+# ---------------------------------------------------------------------------
+#
+# Grid (kn, i, j). For a fixed datapoint tile kn, the kernel sweeps every
+# (i, j) pair of inducing tiles and accumulates the per-datapoint cotangent
+# blocks (dmu, dS, dY — out index kn) in place; the global cotangents
+# (dZ, dvariance, dlengthscale) are single whole-array output blocks (index
+# constant across the grid) updated every iteration — the grid is sequential
+# per core, so no synchronization exists or is needed (same argument as the
+# forward's in-place psi2 accumulation).
+#
+# Equation numbers reference docs/derivations/suffstats_vjp.md. The branch
+# weights are W1 (eq. (8), psi1/psiY branch) and T (eq. (9), psi2 branch);
+# every cotangent is linear in them, so per-tile contributions simply add.
+
+def _suffstats_bwd_kernel(mu_ref, s_ref, y_ref, w_ref, z1_ref, z2_ref,
+                          l2_ref, g2p_ref, gyv_ref,
+                          dmu_ref, ds_ref, dy_ref, dz_ref, dvraw_ref, dl_ref,
+                          *, tile_m, ct=jnp.float32):
+    kn = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    first_mm = jnp.logical_and(i == 0, j == 0)
+
+    mu = mu_ref[...].astype(ct)  # (TN, Q)
+    S = s_ref[...].astype(ct)
+    w = w_ref[...].astype(ct)  # (TN, 1)
+    z1 = z1_ref[...].astype(ct)  # (TM, Q)
+    z2 = z2_ref[...].astype(ct)
+    l2 = l2_ref[...].astype(ct)  # (1, Q)
+    g2p = g2p_ref[...].astype(ct)  # (TM, TM) = g2 * v^2 exp(zterm), padded 0
+
+    tn, q_dim = mu.shape
+    tm = z1.shape[0]
+    ls = jnp.sqrt(l2)
+    z1sq = z1 * z1
+    z2sq = z2 * z2
+
+    # ---------------- psi2 branch: T = g2p . E . w  (eq. (9)) ------------
+    r, E = _psi2_tile(mu, S, z1, z2, l2, ct=ct)
+    T = g2p[None, :, :] * E * w[:, :, None]  # (TN, TM, TM)
+    row = jnp.sum(T, axis=2)  # (TN, TM)  sum over m' (slot b)
+    col = jnp.sum(T, axis=1)  # (TN, TM)  sum over m  (slot a)
+    t = jnp.sum(row, axis=1, keepdims=True)  # (TN, 1)
+    # zbar moments (eq. (15)): u = sum_ab T zbar, w2 = sum_ab T zbar^2
+    TZ2 = _dot(T.reshape(tn * tm, tm), z2, ((1,), (0,)), ct
+               ).reshape(tn, tm, q_dim)
+    TtZ1 = _dot(jnp.swapaxes(T, 1, 2).reshape(tn * tm, tm), z1,
+                ((1,), (0,)), ct).reshape(tn, tm, q_dim)
+    u = 0.5 * (_dot(row, z1, ((1,), (0,)), ct) + _dot(col, z2, ((1,), (0,)), ct))
+    B = jnp.sum(z1[None, :, :] * TZ2, axis=1)  # (TN, Q) bilinear z^T T z
+    w2 = 0.25 * (_dot(row, z1sq, ((1,), (0,)), ct)
+                 + _dot(col, z2sq, ((1,), (0,)), ct)) + 0.5 * B
+    V = mu * mu * t - 2.0 * mu * u + w2  # sum_ab T (mu - zbar)^2
+    dmu_c = -2.0 * r * (mu * t - u)  # eq. (16)
+    ds_c = -r * t + 2.0 * r * r * V  # eq. (17)
+    dvraw_c = 2.0 * jnp.sum(t)  # eq. (19); the 1/v rides outside the kernel
+    # eq. (20): dlengthscale — lognorm2 + exponent-r terms + the zterm term
+    P = jnp.sum(T, axis=0)  # (TM, TM)
+    Pr = jnp.sum(P, axis=1, keepdims=True)  # (TM, 1) row sums
+    Pc = jnp.sum(P, axis=0, keepdims=True).T  # (TM, 1) column sums
+    PZ2 = _dot(P, z2, ((1,), (0,)), ct)  # (TM, Q)
+    PtZ1 = _dot(P, z1, ((0,), (0,)), ct)  # (TM, Q)
+    # sum_ab P (z1_a - z2_b)^2 per q, factored through the P moments
+    zd2 = (jnp.sum(Pr * z1sq, axis=0, keepdims=True)
+           + jnp.sum(Pc * z2sq, axis=0, keepdims=True)
+           - 2.0 * jnp.sum(z1 * PZ2, axis=0, keepdims=True))  # (1, Q)
+    dl_c = ((2.0 / ls) * jnp.sum(S * r * t, axis=0, keepdims=True)
+            + 2.0 * ls * jnp.sum(r * r * V, axis=0, keepdims=True)
+            + zd2 / (2.0 * ls * l2))
+    # eq. (18): dZ — slot-a rows (tile i) and slot-b rows (tile j)
+    r_mu = r * mu
+    dz_i = (_dot(row, r_mu, ((0,), (0,)), ct)
+            - 0.5 * z1 * _dot(row, r, ((0,), (0,)), ct)
+            - 0.5 * jnp.sum(r[:, None, :] * TZ2, axis=0)
+            + (PZ2 - z1 * Pr) / (2.0 * l2))
+    dz_j = (_dot(col, r_mu, ((0,), (0,)), ct)
+            - 0.5 * z2 * _dot(col, r, ((0,), (0,)), ct)
+            - 0.5 * jnp.sum(r[:, None, :] * TtZ1, axis=0)
+            + (PtZ1 - z2 * Pc) / (2.0 * l2))
+
+    # ---------------- accumulate: per-datapoint blocks -------------------
+    @pl.when(first_mm)
+    def _():
+        dmu_ref[...] = dmu_c
+        ds_ref[...] = ds_c
+
+    @pl.when(jnp.logical_not(first_mm))
+    def _():
+        dmu_ref[...] += dmu_c
+        ds_ref[...] += ds_c
+
+    # ---------------- accumulate: global blocks --------------------------
+    @pl.when(jnp.logical_and(kn == 0, first_mm))
+    def _():
+        dz_ref[...] = jnp.zeros(dz_ref.shape, ct)
+        dvraw_ref[...] = jnp.zeros(dvraw_ref.shape, ct)
+        dl_ref[...] = jnp.zeros(dl_ref.shape, ct)
+
+    dz_ref[pl.dslice(i * tile_m, tile_m), :] += dz_i
+    dz_ref[pl.dslice(j * tile_m, tile_m), :] += dz_j
+    dvraw_ref[...] += dvraw_c
+    dl_ref[...] += dl_c
+
+    # ---------------- psi1/psiY branch (once per (kn, i); eq. (10)-(14)) -
+    @pl.when(j == 0)
+    def _():
+        y = y_ref[...].astype(ct)  # (TN, D)
+        gyv = gyv_ref[...].astype(ct)  # (TM, D) = v * gY, padded 0
+        b, blk = _psi1_tile(mu, S, z1, l2, ct=ct)
+        blk = blk * w  # psi1 / v, pad-masked
+        W1 = _dot(y, gyv, ((1,), (1,)), ct) * blk  # (TN, TM)  eq. (8)
+        s1 = jnp.sum(W1, axis=1, keepdims=True)  # (TN, 1)
+        W1Z = _dot(W1, z1, ((1,), (0,)), ct)  # (TN, Q)
+        sq1 = mu * mu * s1 - 2.0 * mu * W1Z + _dot(W1, z1sq, ((1,), (0,)), ct)
+        dmu_ref[...] += -b * (mu * s1 - W1Z)  # eq. (10)
+        ds_ref[...] += -0.5 * b * s1 + 0.5 * b * b * sq1  # eq. (11)
+        dvraw_ref[...] += jnp.sum(s1)  # eq. (13); 1/v outside
+        dl_ref[...] += jnp.sum((S * b / ls) * s1 + ls * b * b * sq1,
+                               axis=0, keepdims=True)  # eq. (14)
+        dz_ref[pl.dslice(i * tile_m, tile_m), :] += (
+            _dot(W1, mu * b, ((0,), (0,)), ct)
+            - z1 * _dot(W1, b, ((0,), (0,)), ct))  # eq. (12)
+        dy_c = _dot(blk, gyv, ((1,), (0,)), ct)  # (TN, D)
+
+        @pl.when(i == 0)
+        def _():
+            dy_ref[...] = dy_c
+
+        @pl.when(i > 0)
+        def _():
+            dy_ref[...] += dy_c
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def suffstats_bwd_pallas(mu, S, Y, Z, variance, lengthscale, g2, gY, *,
+                         interpret: bool = False):
+    """Pallas reverse pass of ``(psi2, psiY) = suffstats(...)``.
+
+    Returns cotangents ``(dmu, dS, dY, dZ, dvariance, dlengthscale)`` given
+    output cotangents ``g2 (M, M)`` and ``gY (M, D)``. Same dtype policy as
+    the forward: compiled TPU execution computes in float32, interpret mode
+    keeps the input dtype so f64 parity tests check the kernel body itself.
+
+    The (m, m')-only psi2 prefactor v^2 exp(zterm) is folded into the
+    cotangent outside the kernel (eq. (9)): the kernel sees
+    G2p = g2 * v^2 exp(zterm), padded with zeros so padded inducing rows
+    contribute nothing; gY is pre-scaled by v the same way. The variance
+    cotangent leaves the kernel as the raw branch weight total
+    sum W1 + 2 sum T (eq. (13)+(19)) and is divided by v here.
+    """
+    N, Q = mu.shape
+    M = Z.shape[0]
+    D = Y.shape[1]
+    ct = mu.dtype if interpret else jnp.float32
+    pad_n = (-N) % TILE_N
+    pad_m = (-M) % TILE_M
+    mu_p = jnp.pad(mu.astype(ct), ((0, pad_n), (0, 0)))
+    S_p = jnp.pad(S.astype(ct), ((0, pad_n), (0, 0)), constant_values=1.0)
+    Y_p = jnp.pad(Y.astype(ct), ((0, pad_n), (0, 0)))
+    w = jnp.pad(jnp.ones((N, 1), ct), ((0, pad_n), (0, 0)))
+    Z_p = jnp.pad(Z.astype(ct), ((0, pad_m), (0, 0)))
+    l2 = (lengthscale.astype(ct) ** 2)[None, :]
+    v = variance.astype(ct)
+
+    zs = Z.astype(ct) / lengthscale.astype(ct)
+    zn = jnp.sum(zs * zs, -1)
+    d2 = jnp.maximum(zn[:, None] + zn[None, :] - 2.0 * zs @ zs.T, 0.0)
+    g2p = jnp.pad(g2.astype(ct) * v**2 * jnp.exp(-0.25 * d2),
+                  ((0, pad_m), (0, pad_m)))
+    gyv = jnp.pad(v * gY.astype(ct), ((0, pad_m), (0, 0)))
+
+    Np = mu_p.shape[0]
+    Mp = Z_p.shape[0]
+    grid = (Np // TILE_N, Mp // TILE_M, Mp // TILE_M)
+    dmu, dS, dY, dZ, dvraw, dl = pl.pallas_call(
+        functools.partial(_suffstats_bwd_kernel, tile_m=TILE_M, ct=ct),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # mu
+            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # S
+            pl.BlockSpec((TILE_N, D), lambda kn, i, j: (kn, 0)),  # Y
+            pl.BlockSpec((TILE_N, 1), lambda kn, i, j: (kn, 0)),  # w
+            pl.BlockSpec((TILE_M, Q), lambda kn, i, j: (i, 0)),  # Z (slot a)
+            pl.BlockSpec((TILE_M, Q), lambda kn, i, j: (j, 0)),  # Z (slot b)
+            pl.BlockSpec((1, Q), lambda kn, i, j: (0, 0)),  # l^2
+            pl.BlockSpec((TILE_M, TILE_M), lambda kn, i, j: (i, j)),  # G2p
+            pl.BlockSpec((TILE_M, D), lambda kn, i, j: (i, 0)),  # v * gY
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # dmu
+            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # dS
+            pl.BlockSpec((TILE_N, D), lambda kn, i, j: (kn, 0)),  # dY
+            pl.BlockSpec((Mp, Q), lambda kn, i, j: (0, 0)),  # dZ (resident)
+            pl.BlockSpec((1, 1), lambda kn, i, j: (0, 0)),  # dv_raw
+            pl.BlockSpec((1, Q), lambda kn, i, j: (0, 0)),  # dl
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, Q), ct),
+            jax.ShapeDtypeStruct((Np, Q), ct),
+            jax.ShapeDtypeStruct((Np, D), ct),
+            jax.ShapeDtypeStruct((Mp, Q), ct),
+            jax.ShapeDtypeStruct((1, 1), ct),
+            jax.ShapeDtypeStruct((1, Q), ct),
+        ],
+        interpret=interpret,
+    )(mu_p, S_p, Y_p, w, Z_p, Z_p, l2, g2p, gyv)
+    return (dmu[:N].astype(mu.dtype), dS[:N].astype(S.dtype),
+            dY[:N].astype(Y.dtype), dZ[:M].astype(Z.dtype),
+            (dvraw[0, 0] / v).astype(variance.dtype),
+            dl[0].astype(lengthscale.dtype))
+
+
+# ---------------------------------------------------------------------------
 # streaming jnp twin of the forward kernel (off-TPU large-N path)
 # ---------------------------------------------------------------------------
 
@@ -188,17 +455,15 @@ def _pad_stream(mu, S, Y, chunk):
 
 
 def _psi1_weighted(mu_i, S_i, w_i, Z, l2):
-    """psi1 block / variance via the MXU factorization (see kernels/psi1.py),
-    pad weights folded in: returns (b (chunk, Q), blk (chunk, M)).
+    """psi1 block / variance with pad weights folded in: returns
+    (b (chunk, Q), blk (chunk, M)).
 
-    Shared by the streaming forward and the hand-derived VJP — the two MUST
-    evaluate the identical expression or the registered gradient is wrong.
+    A wrapper over the shared `_psi1_tile` — the streaming forward, the
+    hand-derived VJP, and the Pallas kernels all evaluate the identical
+    expression, or the registered gradient would be wrong.
     """
-    b = 1.0 / (l2[None, :] + S_i)
-    lognorm1 = -0.5 * jnp.sum(jnp.log1p(S_i / l2[None, :]), axis=-1)
-    c1 = jnp.sum(mu_i * mu_i * b, axis=-1)
-    expo1 = -0.5 * (c1[:, None] - 2.0 * (mu_i * b) @ Z.T + b @ (Z * Z).T)
-    return b, jnp.exp(lognorm1[:, None] + expo1) * w_i[:, None]
+    b, blk = _psi1_tile(mu_i, S_i, Z, l2[None, :], ct=mu_i.dtype)
+    return b, blk * w_i[:, None]
 
 
 def _psi2_weighted(mu_i, S_i, w_i, zbar, l2):
@@ -247,26 +512,16 @@ def suffstats_fused_jnp(mu, S, Y, Z, variance, lengthscale, *, chunk: int = 1024
 
 
 # ---------------------------------------------------------------------------
-# hand-derived reverse pass: a second streaming kernel over N
+# hand-derived reverse pass as a streaming jnp scan over N
 # ---------------------------------------------------------------------------
 #
-# Notation (everything per latent dim q unless noted; v = variance, l2 = l^2):
-#
-#   psi1[n,m]    = v * exp(-0.5 sum_q log(1+S/l2) - 0.5 sum_q (mu-z_m)^2 b),
-#                  b = 1/(l2+S)
-#   psiY[m,d]    = sum_n psi1[n,m] Y[n,d]
-#   psi2_n[m,m'] = v^2 * exp(-0.5 sum_q log(1+2S/l2) + zterm_mm'
-#                            - sum_q (mu - zbar)^2 r),
-#                  r = 1/(l2+2S), zbar = (z_m+z_m')/2,
-#                  zterm = -sum_q (z_m-z_m')^2/(4 l2)
-#
-# Given output cotangents g2 (M,M) and gY (M,D), define per chunk
-#   W1[n,m]    = (Y gY^T)[n,m] * psi1[n,m]          (psi1 branch weights)
-#   T[n,m,m']  = g2[m,m'] * psi2_n[m,m']            (psi2 branch weights)
-# and contract the analytic derivative of each exponent against W1 / T.
-# All (n,*) contractions reduce to chunk-local matmuls/einsums against Z, so
-# nothing larger than (chunk, M, M) is ever live — the reverse pass streams
-# exactly like the forward.
+# Same algebra as the Pallas reverse kernel above (equation numbers from
+# docs/derivations/suffstats_vjp.md), expressed as a second streaming kernel
+# over N: per-datapoint cotangents (dmu, dS, dY) leave chunk by chunk,
+# global cotangents (dZ, dvariance, dlengthscale) ride the scan carry. Peak
+# live memory is O(chunk * M^2), matching the forward. Since z1 == z2 == Z
+# here, the two dZ slot contributions of eq. (18) are evaluated in their
+# symmetrized form (T + T^T).
 
 def suffstats_vjp_jnp(mu, S, Y, Z, variance, lengthscale, g2, gY, *,
                       chunk: int = 512):
@@ -274,7 +529,7 @@ def suffstats_vjp_jnp(mu, S, Y, Z, variance, lengthscale, g2, gY, *,
 
     Returns cotangents ``(dmu, dS, dY, dZ, dvariance, dlengthscale)``.
     Validated against jax.grad of the jnp reference formulas in
-    tests/test_streaming.py.
+    tests/test_streaming.py and tests/test_suffstats_bwd.py.
     """
     N, Q = mu.shape
     M = Z.shape[0]
@@ -288,7 +543,7 @@ def suffstats_vjp_jnp(mu, S, Y, Z, variance, lengthscale, g2, gY, *,
     zterm = -jnp.sum(zdiff**2 / (4.0 * l2), axis=-1)
     zbar = 0.5 * (Z[:, None, :] + Z[None, :, :])
     # fold the (m, m')-only psi2 prefactor v^2 exp(zterm) into the cotangent
-    G2p = g2 * v**2 * jnp.exp(zterm)  # (M, M)
+    G2p = g2 * v**2 * jnp.exp(zterm)  # (M, M)  — eq. (9)
     Z2 = Z * Z
 
     xs = _pad_stream(mu, S, Y, chunk)
@@ -296,43 +551,46 @@ def suffstats_vjp_jnp(mu, S, Y, Z, variance, lengthscale, g2, gY, *,
     def body(carry, x):
         dZ_a, dv_a, dl_a = carry
         mu_i, S_i, Y_i, w_i = x
-        # ---------------- psi1 branch ----------------
+        # ---------------- psi1 branch (eq. (8), (10)-(14)) ----------------
         b, blk = _psi1_weighted(mu_i, S_i, w_i, Z, l2)  # (c, Q), (c, M)
         psi1w = v * blk  # (c, M)
-        W1 = (Y_i @ gY.T) * psi1w  # (c, M)
+        W1 = (Y_i @ gY.T) * psi1w  # (c, M)  — eq. (8)
         dY_i = psi1w @ gY  # (c, D)
         s1 = jnp.sum(W1, axis=1)  # (c,)
         W1Z = W1 @ Z  # (c, Q)
         # sum_m W1 (mu - z_m)^2, factored through Z moments
         sq1 = mu_i**2 * s1[:, None] - 2.0 * mu_i * W1Z + W1 @ Z2
-        dmu_i = -b * (mu_i * s1[:, None] - W1Z)
-        dS_i = -0.5 * b * s1[:, None] + 0.5 * b * b * sq1
-        dZ_c = W1.T @ (mu_i * b) - Z * (W1.T @ b)  # (M, Q)
-        dv_c = jnp.sum(s1) / v
-        dl_c = jnp.sum((S_i * b / ls) * s1[:, None] + ls * b * b * sq1, axis=0)
-        # ---------------- psi2 branch ----------------
+        dmu_i = -b * (mu_i * s1[:, None] - W1Z)  # eq. (10)
+        dS_i = -0.5 * b * s1[:, None] + 0.5 * b * b * sq1  # eq. (11)
+        dZ_c = W1.T @ (mu_i * b) - Z * (W1.T @ b)  # (M, Q)  — eq. (12)
+        dv_c = jnp.sum(s1) / v  # eq. (13)
+        dl_c = jnp.sum((S_i * b / ls) * s1[:, None] + ls * b * b * sq1,
+                       axis=0)  # eq. (14)
+        # ---------------- psi2 branch (eq. (9), (15)-(20)) ----------------
         r, E = _psi2_weighted(mu_i, S_i, w_i, zbar, l2)  # (c, Q), (c, M, M)
-        T = G2p[None, :, :] * E  # (c, M, M)
+        T = G2p[None, :, :] * E  # (c, M, M)  — eq. (9)
         t = jnp.sum(T, axis=(1, 2))  # (c,)
         rc = jnp.sum(T, axis=2) + jnp.sum(T, axis=1)  # (c, M) row + col sums
-        u = 0.5 * rc @ Z  # (c, Q): sum_mm' T zbar
+        u = 0.5 * rc @ Z  # (c, Q): sum_mm' T zbar        — eq. (15)
         B = jnp.einsum("nab,aq,bq->nq", T, Z, Z)  # (c, Q) bilinear z^T T z
         w2 = 0.25 * (rc @ Z2) + 0.5 * B  # sum_mm' T zbar^2
         V = mu_i**2 * t[:, None] - 2.0 * mu_i * u + w2  # sum_mm' T (mu-zbar)^2
-        dmu_i = dmu_i - 2.0 * r * (mu_i * t[:, None] - u)
-        dS_i = dS_i - r * t[:, None] + 2.0 * r * r * V
-        # dZ: zbar appears in both slots — symmetrize T once, then the two
-        # slot sums collapse to a single contraction (psi2_n is m<->m' even).
+        dmu_i = dmu_i - 2.0 * r * (mu_i * t[:, None] - u)  # eq. (16)
+        dS_i = dS_i - r * t[:, None] + 2.0 * r * r * V  # eq. (17)
+        # eq. (18), symmetrized: zbar appears in both slots — symmetrize T
+        # once, then the two slot sums collapse to a single contraction
+        # (psi2_n is m<->m' even).
         Ts = T + jnp.swapaxes(T, 1, 2)
         Ps = jnp.sum(Ts, axis=0)  # (M, M)
         dZ_c = dZ_c - (Z * jnp.sum(Ps, axis=1)[:, None] - Ps @ Z) / (2.0 * l2)
         dZ_c = dZ_c + jnp.einsum("nk,nq->kq", rc, r * mu_i) \
             - 0.5 * Z * jnp.einsum("nk,nq->kq", rc, r) \
             - 0.5 * jnp.einsum("nkm,mq,nq->kq", Ts, Z, r)
-        dv_c = dv_c + 2.0 * jnp.sum(t) / v
+        dv_c = dv_c + 2.0 * jnp.sum(t) / v  # eq. (19)
         dl_c = dl_c + (2.0 / ls) * jnp.sum((S_i * r) * t[:, None], axis=0) \
             + 2.0 * ls * jnp.sum(r * r * V, axis=0) \
-            + jnp.einsum("ab,abq->q", jnp.sum(T, axis=0), zdiff**2) / (2.0 * ls**3)
+            + jnp.einsum("ab,abq->q", jnp.sum(T, axis=0), zdiff**2) \
+            / (2.0 * ls**3)  # eq. (20)
         return (dZ_a + dZ_c, dv_a + dv_c, dl_a + dl_c), (dmu_i, dS_i, dY_i)
 
     vma = 0.0 * mu[0, 0]

@@ -1,0 +1,268 @@
+"""Pallas reverse-mode suffstats kernel: interpret-mode f64 parity against
+jax.grad of the jnp reference, agreement with the hand-derived streaming jnp
+VJP, the bwd_backend dispatch knob, the fused exact (S -> 0) path, and the
+trace-level guarantee that the fully-kernelized grad path materializes no
+(N, M) intermediate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gplvm
+from repro.gp import SparseGPRegression, get, suff_stats
+from repro.gp.stats import ExactBatch
+from repro.kernels import ops, ref
+from repro.kernels.suffstats import (
+    TILE_N,
+    suffstats_bwd_pallas,
+    suffstats_vjp_jnp,
+)
+from repro.launch.memory import peak_intermediate_bytes
+
+COTANGENT_NAMES = ("mu", "S", "Y", "Z", "variance", "lengthscale")
+
+
+def _case(key, N, M=11, Q=2, D=3):
+    ks = jax.random.split(key, 6)
+    mu = jax.random.normal(ks[0], (N, Q), jnp.float64)
+    S = 0.05 + jax.random.uniform(ks[1], (N, Q), jnp.float64)
+    Y = jax.random.normal(ks[2], (N, D), jnp.float64)
+    Z = jax.random.normal(ks[3], (M, Q), jnp.float64)
+    var = jnp.asarray(1.3, jnp.float64)
+    ls = 0.6 + jax.random.uniform(ks[4], (Q,), jnp.float64)
+    g2 = jax.random.normal(ks[5], (M, M), jnp.float64)
+    gY = jax.random.normal(jax.random.fold_in(key, 7), (M, D), jnp.float64)
+    return mu, S, Y, Z, var, ls, g2, gY
+
+
+def _ref_cotangents(mu, S, Y, Z, var, ls, g2, gY):
+    """jax.grad of the dense jnp reference formulas (the parity oracle)."""
+
+    def scalar(mu, S, Y, Z, var, ls):
+        p2 = ref.psi2_rbf(mu, S, Z, var, ls)
+        pY = ref.psi1_rbf(mu, S, Z, var, ls).T @ Y
+        return jnp.sum(g2 * p2) + jnp.sum(gY * pY)
+
+    return jax.grad(scalar, argnums=tuple(range(6)))(mu, S, Y, Z, var, ls)
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode parity: the acceptance bar (<= 1e-8 vs jax.grad at f64)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N", (64, 200))
+def test_bwd_kernel_matches_reference_grad_f64(N):
+    """The Pallas reverse kernel body (interpret mode, f64) reproduces
+    jax.grad of the reference to <= 1e-8. N=64 divides TILE_N exactly;
+    N=200 exercises the padded tail tile (pad weights must kill the padded
+    datapoints' contributions to every cotangent, global ones included)."""
+    assert (N % TILE_N == 0) == (N == 64)
+    args = _case(jax.random.PRNGKey(0), N)
+    got = suffstats_bwd_pallas(*args, interpret=True)
+    want = _ref_cotangents(*args)
+    for a, b, name in zip(got, want, COTANGENT_NAMES):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-8,
+                                   atol=1e-10, err_msg=name)
+
+
+def test_bwd_kernel_multi_tile_inducing_grid():
+    """M > TILE_M: the (i, j) inducing-tile loops, the off-diagonal tiles'
+    two distinct dZ slot updates, and the dynamic-slice accumulation into
+    the resident dZ block all agree with the streaming jnp reverse pass."""
+    args = _case(jax.random.PRNGKey(1), N=40, M=150, Q=1, D=2)
+    got = suffstats_bwd_pallas(*args, interpret=True)
+    want = suffstats_vjp_jnp(*args)
+    for a, b, name in zip(got, want, COTANGENT_NAMES):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-9,
+                                   atol=1e-11, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# the custom_vjp dispatch knob
+# ---------------------------------------------------------------------------
+
+def _grads_via_op(args, bwd_backend):
+    mu, S, Y, Z, var, ls, g2, gY = args
+
+    def scalar(mu, S, Y, Z, var, ls):
+        p2, pY = ops.suffstats(mu, S, Y, Z, var, ls, bwd_backend=bwd_backend)
+        return jnp.sum(g2 * p2) + jnp.sum(gY * pY)
+
+    return jax.grad(scalar, argnums=tuple(range(6)))(mu, S, Y, Z, var, ls)
+
+
+@pytest.mark.parametrize("bwd_backend", ("auto", "pallas", "jnp"))
+def test_op_bwd_backend_dispatch_parity(bwd_backend):
+    """Every knob value routes jax.grad through a reverse pass that matches
+    the reference oracle (off-TPU at N=200, "auto" and "pallas" both hit the
+    interpret-mode Pallas reverse kernel; "jnp" the streaming scan)."""
+    args = _case(jax.random.PRNGKey(2), N=200)
+    assert 200 <= ops.FUSED_INTERPRET_MAX_N
+    got = _grads_via_op(args, bwd_backend)
+    want = _ref_cotangents(*args)
+    for a, b, name in zip(got, want, COTANGENT_NAMES):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-8,
+                                   atol=1e-10, err_msg=name)
+
+
+def test_op_bwd_backend_validation():
+    args = _case(jax.random.PRNGKey(3), N=64)
+    with pytest.raises(ValueError, match="bwd_backend"):
+        ops.suffstats(*args[:6], bwd_backend="cuda")
+
+
+def test_auto_dispatch_streams_beyond_interpret_cap():
+    """"auto" above FUSED_INTERPRET_MAX_N (off-TPU) falls back to the
+    streaming jnp reverse scan and still matches the reference."""
+    N = ops.FUSED_INTERPRET_MAX_N + 476
+    args = _case(jax.random.PRNGKey(4), N)
+    got = _grads_via_op(args, "auto")
+    want = _ref_cotangents(*args)
+    for a, b, name in zip(got, want, COTANGENT_NAMES):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-8,
+                                   atol=1e-10, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# fused exact statistics (S -> 0): the supervised path on the same kernel
+# ---------------------------------------------------------------------------
+
+def test_exact_fused_backend_matches_jnp_values_and_grads():
+    key = jax.random.PRNGKey(5)
+    N, Q, M = 300, 2, 9
+    X = jax.random.normal(key, (N, Q), jnp.float64)
+    Y = jax.random.normal(jax.random.fold_in(key, 1), (N, 3), jnp.float64)
+    Z = jax.random.normal(jax.random.fold_in(key, 2), (M, Q), jnp.float64)
+    kern = get("rbf")(Q)
+    p = jax.tree.map(lambda x: x.astype(jnp.float64), kern.init(1.2, 0.7))
+
+    a = suff_stats(kern, p, ExactBatch(X, Y, Z), backend="jnp")
+    b = suff_stats(kern, p, ExactBatch(X, Y, Z), backend="fused")
+    for x, y, name in zip(a, b, a._fields):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-9,
+                                   atol=1e-11, err_msg=name)
+
+    def scalar(p, X, Z, backend):
+        s = suff_stats(kern, p, ExactBatch(X, Y, Z), backend=backend)
+        return s.psi0 + jnp.sum(jnp.cos(s.psi2)) + jnp.sum(jnp.sin(s.psiY))
+
+    ga = jax.grad(scalar, argnums=(0, 1, 2))(p, X, Z, "jnp")
+    gb = jax.grad(scalar, argnums=(0, 1, 2))(p, X, Z, "fused")
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(
+        np.asarray(x), np.asarray(y), rtol=1e-8, atol=1e-10), ga, gb)
+
+
+def test_sgpr_fused_backend_trains():
+    """SparseGPRegression(backend="fused") fits through the fused kernel's
+    custom VJP and the bound improves."""
+    key = jax.random.PRNGKey(6)
+    X = jnp.sort(jax.random.uniform(key, (256, 1), jnp.float64, -3.0, 3.0), axis=0)
+    Y = jnp.sin(2.0 * X)
+    gp = SparseGPRegression(kernel=get("rbf")(1), M=16, backend="fused")
+    gp.fit(X, Y, steps=1, lr=3e-2)
+    l0 = gp.history[-1]
+    gp.fit(X, Y, steps=40, lr=3e-2)
+    assert gp.history[-1] < l0 - 0.05, (l0, gp.history[-1])
+    mean, var = gp.predict(X[:64])
+    assert np.all(np.isfinite(np.asarray(mean)))
+    assert np.all(np.asarray(var) > 0)
+
+
+def test_matern_exact_stats_still_reject_fused():
+    """Only the RBF hot path has the fused kernel; other kernels stay loud."""
+    key = jax.random.PRNGKey(7)
+    X = jax.random.normal(key, (32, 2), jnp.float64)
+    Y = jax.random.normal(key, (32, 1), jnp.float64)
+    kern = get("matern32")(2)
+    with pytest.raises(ValueError, match="backend"):
+        kern.exact_suff_stats(kern.init(), X, Y, X[:4], backend="fused")
+
+
+# ---------------------------------------------------------------------------
+# trace-level memory guarantee for the kernelized grad path
+# ---------------------------------------------------------------------------
+
+def _assert_no_nm_intermediate(fn, *args, N, M, itemsize=8, budget=96e6):
+    peak = peak_intermediate_bytes(fn, *args)
+    nm_bytes = N * M * itemsize
+    assert peak < budget, f"peak intermediate {peak/1e6:.1f} MB over budget"
+    assert peak < nm_bytes / 4, (
+        f"peak intermediate {peak/1e6:.1f} MB is within 4x of an (N, M) "
+        f"array ({nm_bytes/1e6:.0f} MB) — the fused grad path is not "
+        f"streaming")
+
+
+def test_fused_grad_path_materializes_no_nm_intermediate():
+    """Traced (never executed) at N=1e6, M=128: value_and_grad through the
+    fused op with the Pallas reverse kernel registers no intermediate
+    anywhere near (N, M) — the backward tiles stream exactly like the
+    forward's. The same holds for the GP-LVM loss on the auto dispatch."""
+    N, M, Q, D = 1_000_000, 128, 2, 3
+    key = jax.random.PRNGKey(8)
+    mu = jax.random.normal(key, (N, Q), jnp.float32)
+    S = jnp.full((N, Q), 0.1, jnp.float32)
+    Y = jnp.ones((N, D), jnp.float32)
+    Z = jax.random.normal(key, (M, Q), jnp.float32)
+    var = jnp.asarray(1.0, jnp.float32)
+    ls = jnp.ones((Q,), jnp.float32)
+
+    def scalar(mu, S, Y, Z, var, ls):
+        p2, pY = ops.suffstats(mu, S, Y, Z, var, ls, bwd_backend="pallas")
+        return jnp.sum(p2) + jnp.sum(pY)
+
+    _assert_no_nm_intermediate(jax.value_and_grad(scalar), mu, S, Y, Z, var,
+                               ls, N=N, M=M, itemsize=4)
+
+    params = {
+        "kern": get("rbf")(Q).init(),
+        "Z": Z,
+        "log_beta": jnp.asarray(2.0, jnp.float32),
+        "q_mu": mu,
+        "q_logS": jnp.log(S),
+    }
+
+    def lvm_loss(params, Y):
+        return gplvm.loss(params, Y, kernel=get("rbf")(Q), backend="fused")
+
+    _assert_no_nm_intermediate(jax.value_and_grad(lvm_loss), params, Y,
+                               N=N, M=M, itemsize=4)
+
+
+# ---------------------------------------------------------------------------
+# model-level: GP-LVM grads through the kernelized reverse pass
+# ---------------------------------------------------------------------------
+
+def test_gplvm_fused_pallas_bwd_matches_jnp_reference():
+    """jax.grad of the GP-LVM loss with backend="fused", bwd_backend="pallas"
+    (both directions through the Pallas kernel bodies, interpret mode)
+    matches the jnp reference to <= 1e-4 per parameter leaf."""
+    key = jax.random.PRNGKey(9)
+    Y = jax.random.normal(jax.random.fold_in(key, 1), (300, 3), jnp.float64)
+    params = jax.tree.map(lambda x: x.astype(jnp.float64),
+                          gplvm.init_params(key, np.asarray(Y), Q=1, M=12))
+    g_ref = jax.grad(gplvm.loss)(params, Y, backend="jnp")
+    g_fused = jax.grad(gplvm.loss)(params, Y, backend="fused",
+                                   bwd_backend="pallas")
+    ref_leaves, _ = jax.tree_util.tree_flatten_with_path(g_ref)
+    fused_leaves, _ = jax.tree_util.tree_flatten_with_path(g_fused)
+    for (path, a), (_, b) in zip(ref_leaves, fused_leaves):
+        a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+        rel = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-12)
+        assert rel <= 1e-4, (jax.tree_util.keystr(path), rel)
+
+
+def test_suffstats_monoid_consistency_exact_vs_expected():
+    """S -> 0 really is the exact path: the fused expected statistics with
+    zero variances equal the exact K_fu statistics (paper_map.md row 5)."""
+    key = jax.random.PRNGKey(10)
+    X = jax.random.normal(key, (100, 2), jnp.float64)
+    Y = jax.random.normal(jax.random.fold_in(key, 1), (100, 2), jnp.float64)
+    Z = jax.random.normal(jax.random.fold_in(key, 2), (7, 2), jnp.float64)
+    var = jnp.asarray(0.9, jnp.float64)
+    ls = jnp.asarray([0.8, 1.1], jnp.float64)
+    p2, pY = ops.suffstats(X, jnp.zeros_like(X), Y, Z, var, ls)
+    Kfu = ref.kfu_rbf(X, Z, var, ls)
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(Kfu.T @ Kfu),
+                               rtol=1e-9)
+    np.testing.assert_allclose(np.asarray(pY), np.asarray(Kfu.T @ Y),
+                               rtol=1e-9)
