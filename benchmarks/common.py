@@ -5,6 +5,13 @@ import time
 
 import jax
 
+# Version stamp every committed BENCH_*.json carries in meta.schema_version.
+# `benchmarks.run.validate_bench_files` rejects files that miss or mismatch
+# it, so a row-format change forces regenerating the committed trajectories
+# instead of silently mixing incompatible rows. Bump when row/meta fields
+# change meaning.
+SCHEMA_VERSION = 1
+
 # The GP-LVM benchmarks evaluate the *expected* (psi) statistics, which only
 # exist in closed form for these registry names. The registry also holds
 # Materns (exact path only) and composites (need part kernels, not a bare
@@ -42,3 +49,17 @@ def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def row(name: str, seconds: float, derived: str = "") -> str:
     return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def latency_percentiles(fn, *args, warmup: int = 3, iters: int = 100):
+    """(p50, p95) wall seconds per call — per-REQUEST latency, not the
+    median-of-medians `time_call` reports for throughput benches."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], times[min(int(len(times) * 0.95), len(times) - 1)]

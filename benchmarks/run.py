@@ -1,23 +1,60 @@
 """Benchmark driver: one section per paper table/figure + the roofline table
-+ the streaming-engine sweep (BENCH_gp.json).
++ the streaming-engine sweep (BENCH_gp.json) + the serving-latency sweep
+(BENCH_serve.json).
 
     PYTHONPATH=src python -m benchmarks.run [--fast|--smoke] [--only SECTION] \
-        [--out BENCH_gp.json]
+        [--out BENCH_gp.json] [--serve-out BENCH_serve.json]
 
 Prints ``name,us_per_call,derived`` CSV rows to stdout. Whenever the
-gp_stream section runs (the default; excluded only by ``--only`` with
-another section), the machine-readable streaming-engine results (time/point
-+ peak-memory estimate vs N for the jnp and fused backends) are written to
-``--out`` so perf PRs have a trajectory to diff against.
+gp_stream / serve sections run (both default; excluded only by ``--only``
+with another section), the machine-readable results are written to
+``--out`` / ``--serve-out`` so perf PRs have a trajectory to diff against.
+
+Before running anything, every committed BENCH_*.json at the repo root is
+validated: it must parse and its meta.schema_version must match
+`benchmarks.common.SCHEMA_VERSION` — a row-format change therefore forces
+regenerating the committed trajectories.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import sys
 
 SECTIONS = ("gp_scaling", "indistributable", "psi_kernels", "gp_stream",
-            "lm_step", "roofline")
+            "serve", "lm_step", "roofline")
+
+
+def validate_bench_files(root=None, *, exclude=()) -> list:
+    """Check every BENCH_*.json under `root` (default: the repo root)
+    parses and carries the current schema version; returns the file names.
+    Raises ValueError with the offending file on any mismatch. `exclude`
+    names files to skip — the driver passes the outputs the current run is
+    about to overwrite, so bumping SCHEMA_VERSION never deadlocks the
+    regeneration command on its own stale outputs."""
+    from benchmarks.common import SCHEMA_VERSION
+
+    root = pathlib.Path(root) if root is not None else \
+        pathlib.Path(__file__).resolve().parents[1]
+    names = []
+    for path in sorted(root.glob("BENCH_*.json")):
+        if path.name in exclude:
+            continue
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except Exception as e:
+            raise ValueError(f"{path.name}: does not parse as JSON ({e})") from None
+        version = (doc.get("meta") or {}).get("schema_version")
+        if version != SCHEMA_VERSION:
+            raise ValueError(
+                f"{path.name}: meta.schema_version is {version!r}, current is "
+                f"{SCHEMA_VERSION} — regenerate with `python -m benchmarks.run`")
+        if not isinstance(doc.get("rows"), list) or not doc["rows"]:
+            raise ValueError(f"{path.name}: missing or empty rows list")
+        names.append(path.name)
+    return names
 
 
 def main() -> None:
@@ -31,9 +68,20 @@ def main() -> None:
                          "(default: BENCH_gp.json, or BENCH_gp.smoke.json "
                          "under --smoke so the committed full-sweep "
                          "trajectory is never clobbered by a smoke run)")
+    ap.add_argument("--serve-out", default=None,
+                    help="where to write the serving-latency JSON (default: "
+                         "BENCH_serve.json, or BENCH_serve.smoke.json under "
+                         "--smoke)")
     args = ap.parse_args()
     if args.out is None:
         args.out = "BENCH_gp.smoke.json" if args.fast else "BENCH_gp.json"
+    if args.serve_out is None:
+        args.serve_out = "BENCH_serve.smoke.json" if args.fast else "BENCH_serve.json"
+
+    overwriting = {pathlib.Path(args.out).name, pathlib.Path(args.serve_out).name}
+    committed = validate_bench_files(exclude=overwriting)
+    print(f"# committed bench files OK: {', '.join(committed) or '(none)'}",
+          file=sys.stderr)
 
     def wanted(name: str) -> bool:
         return args.only is None or args.only == name
@@ -58,6 +106,14 @@ def main() -> None:
               file=sys.stderr)
         csv, json_rows = gp_stream.run(smoke=args.fast)
         rows += csv
+    serve_doc = None
+    if wanted("serve"):
+        from benchmarks import serve_latency
+
+        print("# serving path - predict latency p50/p95 + update throughput",
+              file=sys.stderr)
+        csv, serve_doc = serve_latency.run(smoke=args.fast)
+        rows += csv
     if wanted("lm_step"):
         print("# LM smoke step bench", file=sys.stderr)
         rows += lm_step.run(archs=["smollm-360m", "rwkv6-7b"] if args.fast else ARCH_IDS)
@@ -69,9 +125,12 @@ def main() -> None:
     if wanted("gp_stream"):
         import jax
 
+        from benchmarks.common import SCHEMA_VERSION
+
         doc = {
             "meta": {
                 "bench": "gp_stream",
+                "schema_version": SCHEMA_VERSION,
                 "jax_backend": jax.default_backend(),
                 "device_count": jax.device_count(),
                 "smoke": bool(args.fast),
@@ -83,6 +142,11 @@ def main() -> None:
         with open(args.out, "w") as f:
             json.dump(doc, f, indent=1)
         print(f"# wrote {args.out} ({len(json_rows)} rows)", file=sys.stderr)
+    if serve_doc is not None:
+        with open(args.serve_out, "w") as f:
+            json.dump(serve_doc, f, indent=1)
+        print(f"# wrote {args.serve_out} ({len(serve_doc['rows'])} rows)",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

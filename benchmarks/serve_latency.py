@@ -1,0 +1,180 @@
+"""Serving-path latency benchmark (BENCH_serve.json at the repo root).
+
+Per-REQUEST p50/p95 predict latency at several batch sizes, for three paths
+over the same fitted model:
+
+  * facade           — `SparseGPRegression.predict()` as users call it
+                       (cached posterior, eager O(M B) epilogue per call);
+  * server_bucketed  — `GPServer.predict()`: cached `PosteriorState`, the
+                       request padded to a bucket shape so one jitted
+                       executable serves every batch size;
+  * server_nobucket  — same server with `use_buckets=False` (every shape
+                       compiles + dispatches its own executable) — isolates
+                       what the bucket cache buys.
+
+Plus `submit()` round-trip latency under thread concurrency (the
+micro-batching queue), and `update()` throughput versus batch size (points
+folded per second through the SuffStats monoid + O(M^3) refold).
+
+The headline row is `speedup_vs_facade` at B=16 — the acceptance bar is
+>= 10x for the bucketed cached-state path.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import SCHEMA_VERSION, latency_percentiles, row
+
+N_FIT, M, STEPS = 4096, 32, 30
+BATCHES = (1, 16, 64, 256)
+SMOKE_BATCHES = (1, 16)
+UPDATE_BATCHES = (256, 4096, 32768)
+SMOKE_UPDATE_BATCHES = (256, 1024)
+ITERS, SMOKE_ITERS = 300, 30
+SUBMIT_THREADS = 8
+
+
+def _fit_model(smoke: bool):
+    from repro.gp import SparseGPRegression, get
+
+    key = jax.random.PRNGKey(0)
+    X = jnp.sort(jax.random.uniform(key, (N_FIT, 1), minval=-3.0, maxval=3.0),
+                 axis=0)
+    Y = jnp.sin(2.0 * X) + 0.1 * jax.random.normal(
+        jax.random.fold_in(key, 1), (N_FIT, 1))
+    gp = SparseGPRegression(kernel=get("rbf")(1), M=M).fit(
+        X, Y, steps=5 if smoke else STEPS)
+    return gp, X, Y
+
+
+def _predict_row(path, B, p50, p95, iters):
+    return {
+        "section": "serve", "op": "predict", "path": path, "B": int(B),
+        "M": M, "p50_us": float(p50 * 1e6), "p95_us": float(p95 * 1e6),
+        "iters": int(iters),
+    }
+
+
+def _submit_latency(srv, name, Xt, iters):
+    """p50/p95 of the full submit()->result() round trip with
+    SUBMIT_THREADS concurrent clients per wave (the worker coalesces each
+    wave into shared device calls)."""
+    import threading
+
+    times = []
+    lock = threading.Lock()
+
+    def client():
+        t0 = time.perf_counter()
+        srv.submit(name, Xt).result(timeout=60)
+        dt = time.perf_counter() - t0
+        with lock:
+            times.append(dt)
+
+    def wave():
+        threads = [threading.Thread(target=client) for _ in range(SUBMIT_THREADS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    # warmup waves: the worker coalesces a VARIABLE number of requests per
+    # device call (1..SUBMIT_THREADS, depending on thread timing), and each
+    # distinct coalesced arity/bucket compiles once — run enough waves to
+    # see them all before measuring
+    for _ in range(12):
+        wave()
+    times.clear()
+    for _ in range(iters):
+        wave()
+    times.sort()
+    return times[len(times) // 2], times[min(int(len(times) * 0.95), len(times) - 1)]
+
+
+def run(*, smoke: bool = False):
+    """Returns (csv_rows, json_doc). The doc goes to BENCH_serve.json."""
+    from repro.serve import GPServer
+
+    batches = SMOKE_BATCHES if smoke else BATCHES
+    update_batches = SMOKE_UPDATE_BATCHES if smoke else UPDATE_BATCHES
+    iters = SMOKE_ITERS if smoke else ITERS
+
+    gp, X, Y = _fit_model(smoke)
+    srv = GPServer()
+    srv.register("gp", gp)
+    srv_nb = GPServer(use_buckets=False)
+    srv_nb.register("gp", kernel=gp.kernel, state=srv.state("gp"))
+
+    csv, rows = [], []
+    p50_by_path = {}
+    for B in batches:
+        Xt = X[:B]
+        paths = (
+            ("facade", lambda: gp.predict(Xt)),
+            ("server_bucketed", lambda: srv.predict("gp", Xt)),
+            ("server_nobucket", lambda: srv_nb.predict("gp", Xt)),
+        )
+        for path, fn in paths:
+            p50, p95 = latency_percentiles(fn, iters=iters)
+            p50_by_path[(path, B)] = p50
+            rows.append(_predict_row(path, B, p50, p95, iters))
+            csv.append(row(f"serve_predict_{path}_B{B}", p50,
+                           f"p95_us={p95 * 1e6:.1f}"))
+
+    # the acceptance headline: bucketed cached-state vs the facade path
+    B_ref = 16
+    speedup = p50_by_path[("facade", B_ref)] / p50_by_path[("server_bucketed", B_ref)]
+    rows.append({"section": "serve", "op": "derived",
+                 "name": "speedup_vs_facade", "B": B_ref, "M": M,
+                 "value": float(speedup)})
+    csv.append(row(f"serve_speedup_vs_facade_B{B_ref}",
+                   p50_by_path[("server_bucketed", B_ref)],
+                   f"speedup={speedup:.1f}x"))
+
+    # micro-batched submit round trip under concurrency
+    p50, p95 = _submit_latency(srv, "gp", X[:B_ref], max(iters // 10, 5))
+    rows.append({"section": "serve", "op": "submit", "path": "server_bucketed",
+                 "B": B_ref, "M": M, "threads": SUBMIT_THREADS,
+                 "p50_us": float(p50 * 1e6), "p95_us": float(p95 * 1e6),
+                 "iters": max(iters // 10, 5)})
+    csv.append(row(f"serve_submit_B{B_ref}_threads{SUBMIT_THREADS}", p50,
+                   f"p95_us={p95 * 1e6:.1f}"))
+
+    # online update throughput vs batch size (fold + O(M^3) refold)
+    key = jax.random.PRNGKey(1)
+    for Bu in update_batches:
+        Xu = jax.random.uniform(key, (Bu, 1), minval=-3.0, maxval=3.0)
+        Yu = jnp.sin(2.0 * Xu)
+        p50, p95 = latency_percentiles(
+            lambda: srv.update("gp", Xu, Yu), warmup=1,
+            iters=max(iters // 30, 3))
+        rows.append({"section": "serve", "op": "update", "B": int(Bu), "M": M,
+                     "p50_us": float(p50 * 1e6), "p95_us": float(p95 * 1e6),
+                     "points_per_sec": float(Bu / p50),
+                     "iters": max(iters // 30, 3)})
+        csv.append(row(f"serve_update_B{Bu}", p50,
+                       f"points_per_sec={Bu / p50:.0f}"))
+    srv.close()
+    srv_nb.close()
+
+    doc = {
+        "meta": {
+            "bench": "serve_latency",
+            "schema_version": SCHEMA_VERSION,
+            "jax_backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "smoke": bool(smoke),
+            "N_fit": N_FIT,
+            "M": M,
+        },
+        "rows": rows,
+    }
+    return csv, doc
+
+
+if __name__ == "__main__":
+    csv, _ = run(smoke=True)
+    print("\n".join(csv))

@@ -21,6 +21,9 @@ echo "== quickstart, fused backend (Pallas fwd + bwd kernels, interpret) =="
 # training step end-to-end; smoke bar loosened accordingly
 python examples/quickstart.py --n 512 --steps 60 --backend fused --max-rmse 0.35
 
+echo "== serve quickstart (online serving: export + submit + update) =="
+python examples/serve_quickstart.py --steps 120 --n 1024
+
 echo "== gplvm_synthetic (Bayesian GP-LVM, facade, smoke size) =="
 # smoke bar: at N=512 the latent-recovery correlation is draw-limited (~0.7
 # even for the pre-facade code); the 0.95 bar is the full-size (default-args)
@@ -49,6 +52,24 @@ assert {r["backend"] for r in rows} >= {"jnp", "fused"}, "missing backend rows"
 assert any(r["backend"] == "fused" and r["pass"] == "step" for r in rows), \
     "missing fused grad-step rows"
 print(f"benchmark smoke JSON OK ({len(rows)} rows)")
+PY
+
+echo "== benchmark harness (serving latency, smoke mode) =="
+SERVE_BENCH="$(mktemp -t BENCH_serve_smoke.XXXXXX.json)"
+python -m benchmarks.run --smoke --only serve --serve-out "$SERVE_BENCH" > /dev/null
+SERVE_BENCH="$SERVE_BENCH" python - <<'PY'
+import json
+import os
+
+doc = json.load(open(os.environ["SERVE_BENCH"]))
+rows = doc["rows"]
+paths = {r.get("path") for r in rows if r.get("op") == "predict"}
+assert paths >= {"facade", "server_bucketed", "server_nobucket"}, paths
+assert any(r.get("op") == "derived" and r.get("name") == "speedup_vs_facade"
+           for r in rows), "missing speedup row"
+assert any(r.get("op") == "update" for r in rows), "missing update rows"
+assert any(r.get("op") == "submit" for r in rows), "missing submit rows"
+print(f"serve smoke JSON OK ({len(rows)} rows)")
 PY
 
 echo "CI OK"

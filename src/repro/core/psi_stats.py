@@ -56,6 +56,15 @@ class SuffStats(NamedTuple):
     def combine(a: "SuffStats", b: "SuffStats") -> "SuffStats":
         return SuffStats(*(x + y for x, y in zip(a, b)))
 
+    @staticmethod
+    def subtract(a: "SuffStats", b: "SuffStats") -> "SuffStats":
+        """Monoid inverse: remove `b`'s datapoints from `a`. Exact algebra —
+        every statistic is a plain sum over n — but floating cancellation can
+        leave `a - b` indefinite when b carries most of a's mass, which is
+        why the serving-layer downdate (repro.serve.online) re-factorizes
+        behind a condition guard."""
+        return SuffStats(*(x - y for x, y in zip(a, b)))
+
 
 # ---------------------------------------------------------------------------
 # exact statistics (deterministic X)

@@ -49,11 +49,53 @@ class BoundTerms(NamedTuple):
     c: jax.Array  # LA^-1 PsiY
 
 
+class PosteriorFactors(NamedTuple):
+    """The O(M^3) factorization epilogue on its own: everything prediction
+    (and the serving layer's cached `PosteriorState`) needs, without the
+    bound value. `collapsed_bound` builds on exactly these factors, so a
+    posterior refold after an online statistics update is the same code
+    path the training loss exercises."""
+
+    L: jax.Array  # chol(Kuu + jitter)
+    LA: jax.Array  # chol(Kuu + beta Psi2 + jitter)
+    c: jax.Array  # LA^-1 PsiY
+
+
 def _jitter_eff(Kuu: jax.Array, jitter: float) -> jax.Array:
     """Relative, dtype-aware jitter: f32 needs ~100x f64's."""
     scale = jnp.mean(jnp.diagonal(Kuu))
     boost = 1.0 if Kuu.dtype == jnp.float64 else 100.0
     return jitter * boost * jnp.maximum(scale, 1e-12)
+
+
+def posterior_factors(
+    Kuu: jax.Array,
+    stats: SuffStats,
+    beta: jax.Array,
+    *,
+    jitter: float = DEFAULT_JITTER,
+) -> PosteriorFactors:
+    """Factorize the posterior epilogue from sufficient statistics alone:
+    L = chol(Kuu + jit I), LA = chol(Kuu + beta Psi2 + jit I), c = LA^-1 PsiY.
+    O(M^3 + M^2 D); never sees the N datapoints."""
+    dtype = Kuu.dtype
+    M = Kuu.shape[0]
+    eye = jnp.eye(M, dtype=dtype)
+    jit_eff = _jitter_eff(Kuu, jitter)
+
+    # ONE consistent jittered model: every consumer below works on
+    # Kuu_j = Kuu + jit I (mixing different jitters across terms breaks the
+    # lower-bound property when Kuu is near-singular, e.g. Z = X).
+    Kuu_j = Kuu + jit_eff * eye
+    L = jnp.linalg.cholesky(Kuu_j)
+    psi2 = 0.5 * (stats.psi2 + stats.psi2.T)
+    Abig = Kuu_j + beta * psi2
+    # eps-scaled floor for Psi2's own roundoff (~eps * ||Psi2||): negligible
+    # in f64 (preserves the bound to ~1e-10), adequate in f32.
+    eps = jnp.finfo(dtype).eps
+    LA = jnp.linalg.cholesky(Abig + 100.0 * eps * jnp.mean(jnp.diagonal(Abig)) * eye)
+    c = jax.scipy.linalg.solve_triangular(LA, stats.psiY, lower=True)  # (M, D)
+    return PosteriorFactors(L, LA, c)
 
 
 def collapsed_bound(
@@ -72,25 +114,9 @@ def collapsed_bound(
       beta: noise precision (scalar).
       D: number of output dimensions.
     """
-    dtype = Kuu.dtype
-    M = Kuu.shape[0]
     N = stats.n
-    eye = jnp.eye(M, dtype=dtype)
-    jit_eff = _jitter_eff(Kuu, jitter)
-
-    # ONE consistent jittered model: every term below is exact algebra on
-    # Kuu_j = Kuu + jit I (mixing different jitters across terms breaks the
-    # lower-bound property when Kuu is near-singular, e.g. Z = X).
-    Kuu_j = Kuu + jit_eff * eye
-    L = jnp.linalg.cholesky(Kuu_j)
+    L, LA, c = posterior_factors(Kuu, stats, beta, jitter=jitter)
     psi2 = 0.5 * (stats.psi2 + stats.psi2.T)
-    Abig = Kuu_j + beta * psi2
-    # eps-scaled floor for Psi2's own roundoff (~eps * ||Psi2||): negligible
-    # in f64 (preserves the bound to ~1e-10), adequate in f32.
-    eps = jnp.finfo(dtype).eps
-    LA = jnp.linalg.cholesky(Abig + 100.0 * eps * jnp.mean(jnp.diagonal(Abig)) * eye)
-
-    c = jax.scipy.linalg.solve_triangular(LA, stats.psiY, lower=True)  # (M, D)
 
     # log|Kuu + beta Psi2| - log|Kuu| (== log|B| of the whitened form)
     logdetB = 2.0 * (jnp.sum(jnp.log(jnp.diagonal(LA)))
@@ -117,9 +143,12 @@ class Posterior(NamedTuple):
     LA: jax.Array
 
 
-def optimal_qu(terms: BoundTerms, beta: jax.Array) -> Posterior:
+def optimal_qu(terms: "BoundTerms | PosteriorFactors", beta: jax.Array) -> Posterior:
     """q(u): mean = beta Kuu (Kuu + beta Psi2)^-1 PsiY,
-    cov = Kuu (Kuu + beta Psi2)^-1 Kuu — in Cholesky factors."""
+    cov = Kuu (Kuu + beta Psi2)^-1 Kuu — in Cholesky factors.
+
+    Accepts either the full `BoundTerms` (training path) or the bare
+    `PosteriorFactors` (serving path) — both carry (L, LA, c)."""
     L, LA, c = terms.L, terms.LA, terms.c
     # Kuu^-1 mean_u = beta (Kuu + beta Psi2)^-1 PsiY = beta LA^-T c
     Kuu_inv_mean = beta * jax.scipy.linalg.solve_triangular(LA, c, lower=True, trans=1)
@@ -146,6 +175,26 @@ def predict_f(
     v2 = jax.scipy.linalg.solve_triangular(post.LA, Ksu.T, lower=True)
     var = Kss_diag - jnp.sum(v1 * v1, axis=0) + jnp.sum(v2 * v2, axis=0)
     return mean, var
+
+
+def predict_f_full(
+    post: Posterior,
+    Ksu: jax.Array,
+    Kss: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Posterior p(f*) with the FULL (N*, N*) covariance:
+
+    mean = Ksu Kuu^-1 mean_u
+    cov  = Kss - Ksu [Kuu^-1 - (Kuu + beta Psi2)^-1] Kus
+
+    Same triangular-solve structure as `predict_f` (no new factorization);
+    the serving layer uses this for `diag=False` requests.
+    """
+    mean = Ksu @ post.Kuu_inv_mean
+    v1 = jax.scipy.linalg.solve_triangular(post.L, Ksu.T, lower=True)
+    v2 = jax.scipy.linalg.solve_triangular(post.LA, Ksu.T, lower=True)
+    cov = Kss - v1.T @ v1 + v2.T @ v2
+    return mean, cov
 
 
 def exact_gp_log_marginal(

@@ -73,6 +73,7 @@ class _CollapsedGPModel:
         self._loss_cache = None  # (kernel, built_loss): rebuilt if kernel changes
         self._stats_cache = None  # (kernel, built_stats_fn)
         self._posterior_cache: Optional[svgp.Posterior] = None  # cleared by fit
+        self._stats_value_cache = None  # fitted-data SuffStats, cleared by fit
 
     # -- subclass hooks ----------------------------------------------------
     def _build_loss(self):
@@ -103,6 +104,7 @@ class _CollapsedGPModel:
     def _optimize(self, loss_fn, params: Params, data: tuple, *, optimizer: str,
                   steps: int, lr: float, log_every: int) -> Params:
         self._posterior_cache = None
+        self._stats_value_cache = None
         if optimizer == "adam":
             params, self.history = inference.fit_adam(
                 loss_fn, params, data, steps=steps, lr=lr, log_every=log_every)
@@ -112,6 +114,40 @@ class _CollapsedGPModel:
         else:
             raise ValueError(f"optimizer must be one of {_OPTIMIZERS}, got {optimizer!r}")
         return params
+
+    def _fitted_stats(self):
+        """SuffStats of the fitted data at the fitted params, computed once
+        per fit (the O(N M^2) pass) and shared by `posterior()` and
+        `export_state()`. Invalidated by `fit()`."""
+        self._require_fitted()
+        if self._stats_value_cache is None:
+            self._stats_value_cache = self._stats_fn()(self.params, *self._data)
+        return self._stats_value_cache
+
+    def posterior(self) -> svgp.Posterior:
+        """Optimal q(u) implied by the collapsed bound at the fitted params.
+        Cached: the O(N M^2) statistics pass and the O(M^3) factorization
+        run once per fit, not per predict call — sharded over the mesh
+        and/or streamed by `chunk=`, exactly like the training losses."""
+        self._require_fitted()
+        if self._posterior_cache is not None:
+            return self._posterior_cache
+        p = self.params
+        beta = jnp.exp(p["log_beta"])
+        factors = svgp.posterior_factors(self.kernel.K(p["kern"], p["Z"]),
+                                         self._fitted_stats(), beta)
+        self._posterior_cache = svgp.optimal_qu(factors, beta)
+        return self._posterior_cache
+
+    def export_state(self):
+        """Freeze the fitted model into a `repro.serve.PosteriorState`: the
+        Cholesky factors, woodbury vector, hyperparameters, and the raw
+        `SuffStats` monoid — everything `repro.serve` needs to predict in
+        O(M B + M^2 B) and to absorb new data without the training set."""
+        from repro.serve.state import build_state
+
+        self._require_fitted()
+        return build_state(self.kernel, self.params, self._fitted_stats())
 
     def elbo(self) -> float:
         """Evidence lower bound (total, not per-datapoint) on the training data."""
@@ -207,23 +243,6 @@ class SparseGPRegression(_CollapsedGPModel):
                                      log_every=log_every)
         return self
 
-    def posterior(self) -> svgp.Posterior:
-        """Optimal q(u) implied by the collapsed bound at the fitted params.
-        Cached: the O(N M^2) statistics pass runs once per fit, not per
-        predict call — sharded over the mesh and/or streamed by `chunk=`,
-        exactly like the training losses."""
-        self._require_fitted()
-        if self._posterior_cache is not None:
-            return self._posterior_cache
-        X, Y = self._data
-        p = self.params
-        stats = self._stats_fn()(p, X, Y)
-        beta = jnp.exp(p["log_beta"])
-        terms = svgp.collapsed_bound(self.kernel.K(p["kern"], p["Z"]), stats,
-                                     beta, Y.shape[1])
-        self._posterior_cache = svgp.optimal_qu(terms, beta)
-        return self._posterior_cache
-
     def predict(self, Xt: jax.Array) -> Tuple[jax.Array, jax.Array]:
         """Posterior mean (N*, D) and marginal variance (N*,) of f at Xt."""
         self._require_fitted()
@@ -305,19 +324,6 @@ class BayesianGPLVM(_CollapsedGPModel):
         """Variational posterior over the latents: (q_mu, q_S)."""
         self._require_fitted()
         return self.params["q_mu"], jnp.exp(self.params["q_logS"])
-
-    def posterior(self) -> svgp.Posterior:
-        self._require_fitted()
-        if self._posterior_cache is not None:
-            return self._posterior_cache
-        (Y,) = self._data
-        p = self.params
-        stats = self._stats_fn()(p, Y)
-        beta = jnp.exp(p["log_beta"])
-        terms = svgp.collapsed_bound(self.kernel.K(p["kern"], p["Z"]), stats,
-                                     beta, Y.shape[1])
-        self._posterior_cache = svgp.optimal_qu(terms, beta)
-        return self._posterior_cache
 
     def predict(self, Xstar: jax.Array) -> Tuple[jax.Array, jax.Array]:
         """Decode latent coordinates Xstar to data space: mean (N*, D), var (N*,)."""

@@ -23,15 +23,15 @@ TILE_N = 256
 TILE_M = 128
 
 
-def _kfu_kernel(xs_ref, zs_ref, o_ref):
+def _kfu_kernel(xs_ref, zs_ref, o_ref, *, ct=jnp.float32):
     """xs/zs are pre-scaled by 1/lengthscale in the wrapper (one pass,
     instead of once per tile)."""
-    xs = xs_ref[...].astype(jnp.float32)  # (TILE_N, Q)
-    zs = zs_ref[...].astype(jnp.float32)  # (TILE_M, Q)
+    xs = xs_ref[...].astype(ct)  # (TILE_N, Q)
+    zs = zs_ref[...].astype(ct)  # (TILE_M, Q)
     xn = jnp.sum(xs * xs, axis=-1, keepdims=True)  # (TILE_N, 1)
     zn = jnp.sum(zs * zs, axis=-1)[None, :]  # (1, TILE_M)
     cross = jax.lax.dot_general(
-        xs, zs, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        xs, zs, (((1,), (1,)), ((), ())), preferred_element_type=ct
     )  # MXU: (TILE_N, TILE_M)
     d2 = jnp.maximum(xn + zn - 2.0 * cross, 0.0)
     o_ref[...] = jnp.exp(-0.5 * d2).astype(o_ref.dtype)
@@ -46,25 +46,33 @@ def kfu_pallas(
     *,
     interpret: bool = False,
 ) -> jax.Array:
-    """K_fu = variance * exp(-0.5 ||(x-z)/l||^2), tiled (TILE_N, TILE_M)."""
+    """K_fu = variance * exp(-0.5 ||(x-z)/l||^2), tiled (TILE_N, TILE_M).
+
+    Compiled (TPU) execution computes in float32 — the hardware dtype the
+    tiles are chosen for. Interpret mode computes in the input dtype promoted
+    to at least f32 (same policy as the fused suffstats kernel): it exists to
+    validate the kernel body, and under x64 that makes f64 parity checks
+    meaningful.
+    """
     N, Q = X.shape
     M = Z.shape[0]
     dtype = X.dtype
+    ct = jnp.promote_types(dtype, jnp.float32) if interpret else jnp.float32
     pad_n = (-N) % TILE_N
     pad_m = (-M) % TILE_M
-    Xs = jnp.pad((X / lengthscale).astype(jnp.float32), ((0, pad_n), (0, 0)))
-    Zs = jnp.pad((Z / lengthscale).astype(jnp.float32), ((0, pad_m), (0, 0)))
+    Xs = jnp.pad((X / lengthscale).astype(ct), ((0, pad_n), (0, 0)))
+    Zs = jnp.pad((Z / lengthscale).astype(ct), ((0, pad_m), (0, 0)))
 
     grid = (Xs.shape[0] // TILE_N, Zs.shape[0] // TILE_M)
     out = pl.pallas_call(
-        _kfu_kernel,
+        functools.partial(_kfu_kernel, ct=ct),
         grid=grid,
         in_specs=[
             pl.BlockSpec((TILE_N, Q), lambda i, j: (i, 0)),
             pl.BlockSpec((TILE_M, Q), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((TILE_N, TILE_M), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Xs.shape[0], Zs.shape[0]), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Xs.shape[0], Zs.shape[0]), ct),
         interpret=interpret,
     )(Xs, Zs)
     return (variance * out[:N, :M]).astype(dtype)

@@ -22,27 +22,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.suffstats import _psi1_tile
+
 TILE_N = 256
 TILE_M = 128
 
 
-def _psi1_kernel(mu_ref, s_ref, z_ref, l2_ref, o_ref):
-    mu = mu_ref[...].astype(jnp.float32)  # (TILE_N, Q)
-    S = s_ref[...].astype(jnp.float32)  # (TILE_N, Q)
-    Z = z_ref[...].astype(jnp.float32)  # (TILE_M, Q)
-    l2 = l2_ref[...].astype(jnp.float32)  # (1, Q)
+def _psi1_kernel(mu_ref, s_ref, z_ref, l2_ref, o_ref, *, ct=jnp.float32):
+    mu = mu_ref[...].astype(ct)  # (TILE_N, Q)
+    S = s_ref[...].astype(ct)  # (TILE_N, Q)
+    Z = z_ref[...].astype(ct)  # (TILE_M, Q)
+    l2 = l2_ref[...].astype(ct)  # (1, Q)
 
-    b = 1.0 / (l2 + S)  # (TILE_N, Q)
-    lognorm = -0.5 * jnp.sum(jnp.log1p(S / l2), axis=-1, keepdims=True)  # (TILE_N, 1)
-    c = jnp.sum(mu * mu * b, axis=-1, keepdims=True)  # (TILE_N, 1)
-    mub_zt = jax.lax.dot_general(
-        mu * b, Z, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (TILE_N, TILE_M)  MXU
-    b_z2t = jax.lax.dot_general(
-        b, Z * Z, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (TILE_N, TILE_M)  MXU
-    expo = -0.5 * (c - 2.0 * mub_zt + b_z2t)
-    o_ref[...] = jnp.exp(lognorm + expo).astype(o_ref.dtype)
+    # the shared tile helper of the fused forward/reverse kernels — the
+    # single-statistic op evaluates the identical expression, so the psi1
+    # formula exists in exactly one place
+    _, blk = _psi1_tile(mu, S, Z, l2, ct=ct)
+    o_ref[...] = blk.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -58,17 +54,21 @@ def psi1_pallas(
     N, Q = mu.shape
     M = Z.shape[0]
     dtype = mu.dtype
+    # compiled TPU execution computes in float32; interpret mode computes in
+    # the input dtype promoted to at least f32 (same policy as the fused
+    # suffstats kernel) so f64 parity tests exercise the kernel body itself
+    ct = jnp.promote_types(dtype, jnp.float32) if interpret else jnp.float32
     pad_n = (-N) % TILE_N
     pad_m = (-M) % TILE_M
-    mu_p = jnp.pad(mu.astype(jnp.float32), ((0, pad_n), (0, 0)))
+    mu_p = jnp.pad(mu.astype(ct), ((0, pad_n), (0, 0)))
     # pad S with 1.0: any positive value keeps log1p/division well-defined
-    S_p = jnp.pad(S.astype(jnp.float32), ((0, pad_n), (0, 0)), constant_values=1.0)
-    Z_p = jnp.pad(Z.astype(jnp.float32), ((0, pad_m), (0, 0)))
-    l2 = (lengthscale.astype(jnp.float32) ** 2)[None, :]  # (1, Q)
+    S_p = jnp.pad(S.astype(ct), ((0, pad_n), (0, 0)), constant_values=1.0)
+    Z_p = jnp.pad(Z.astype(ct), ((0, pad_m), (0, 0)))
+    l2 = (lengthscale.astype(ct) ** 2)[None, :]  # (1, Q)
 
     grid = (mu_p.shape[0] // TILE_N, Z_p.shape[0] // TILE_M)
     out = pl.pallas_call(
-        _psi1_kernel,
+        functools.partial(_psi1_kernel, ct=ct),
         grid=grid,
         in_specs=[
             pl.BlockSpec((TILE_N, Q), lambda i, j: (i, 0)),
@@ -77,7 +77,7 @@ def psi1_pallas(
             pl.BlockSpec((1, Q), lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((TILE_N, TILE_M), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mu_p.shape[0], Z_p.shape[0]), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mu_p.shape[0], Z_p.shape[0]), ct),
         interpret=interpret,
     )(mu_p, S_p, Z_p, l2)
     return (variance * out[:N, :M]).astype(dtype)

@@ -30,57 +30,35 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.suffstats import _psi2_tile
+
 TILE_N = 32
 TILE_M = 128
 
 
-def _psi2_kernel(mu_ref, s_ref, w_ref, z1_ref, z2_ref, l2_ref, o_ref):
+def _psi2_kernel(mu_ref, s_ref, w_ref, z1_ref, z2_ref, l2_ref, o_ref, *,
+                 ct=jnp.float32):
     k = pl.program_id(2)
 
-    mu = mu_ref[...].astype(jnp.float32)  # (TN, Q)
-    S = s_ref[...].astype(jnp.float32)  # (TN, Q)
-    w = w_ref[...].astype(jnp.float32)  # (TN, 1)
-    z1 = z1_ref[...].astype(jnp.float32)  # (TM, Q)
-    z2 = z2_ref[...].astype(jnp.float32)  # (TM, Q)
-    l2 = l2_ref[...].astype(jnp.float32)  # (1, Q)
+    mu = mu_ref[...].astype(ct)  # (TN, Q)
+    S = s_ref[...].astype(ct)  # (TN, Q)
+    w = w_ref[...].astype(ct)  # (TN, 1)
+    z1 = z1_ref[...].astype(ct)  # (TM, Q)
+    z2 = z2_ref[...].astype(ct)  # (TM, Q)
+    l2 = l2_ref[...].astype(ct)  # (1, Q)
 
-    tn, q_dim = mu.shape
+    tn = mu.shape[0]
     tm = z1.shape[0]
 
-    r = 1.0 / (l2 + 2.0 * S)  # (TN, Q)
-    lognorm = -0.5 * jnp.sum(jnp.log1p(2.0 * S / l2), axis=-1, keepdims=True)  # (TN,1)
-    c2 = jnp.sum(mu * mu * r, axis=-1, keepdims=True)  # (TN,1)
-    mur = mu * r
-
-    def halfterm(z):  # (TN, TM): (mu r) @ z^T - 0.25 r @ (z^2)^T
-        a = jax.lax.dot_general(mur, z, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-        b = jax.lax.dot_general(r, z * z, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-        return a - 0.25 * b
-
-    A1 = halfterm(z1)  # (TN, TM)
-    A2 = halfterm(z2)  # (TN, TM)
-
-    # cross[n, m1, m2] = 0.5 sum_q r_nq z1_m1q z2_m2q  — accumulated per q
-    cross = jnp.zeros((tn, tm, tm), jnp.float32)
-    for q in range(q_dim):  # Q is a compile-time constant (latent dim, small)
-        cross = cross + (
-            r[:, q][:, None, None] * z1[:, q][None, :, None] * z2[:, q][None, None, :]
-        )
-
-    expo = (
-        (lognorm - c2)[:, :, None]  # (TN,1,1)
-        + A1[:, :, None]
-        + A2[:, None, :]
-        - 0.5 * cross
-    )
-    E = jnp.exp(expo)  # (TN, TM, TM)
+    # the shared tile helper of the fused forward/reverse kernels: the
+    # per-point factor E (MXU halfterms + rank-Q cross term) is evaluated in
+    # exactly one place, so the single-statistic and fused formulas can't drift
+    _, E = _psi2_tile(mu, S, z1, z2, l2, ct=ct)  # (TN, TM, TM)
 
     # weighted datapoint reduction on the MXU: (1,TN) @ (TN, TM*TM)
     contrib = jax.lax.dot_general(
         w.T, E.reshape(tn, tm * tm), (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
+        preferred_element_type=ct,
     ).reshape(tm, tm)
 
     @pl.when(k == 0)
@@ -105,18 +83,22 @@ def psi2_pallas(
     N, Q = mu.shape
     M = Z.shape[0]
     dtype = mu.dtype
+    # compiled TPU execution computes in float32; interpret mode computes in
+    # the input dtype promoted to at least f32 (same policy as the fused
+    # suffstats kernel) so f64 parity tests exercise the kernel body itself
+    ct = jnp.promote_types(dtype, jnp.float32) if interpret else jnp.float32
     pad_n = (-N) % TILE_N
     pad_m = (-M) % TILE_M
-    mu_p = jnp.pad(mu.astype(jnp.float32), ((0, pad_n), (0, 0)))
-    S_p = jnp.pad(S.astype(jnp.float32), ((0, pad_n), (0, 0)), constant_values=1.0)
-    w = jnp.pad(jnp.ones((N, 1), jnp.float32), ((0, pad_n), (0, 0)))
-    Z_p = jnp.pad(Z.astype(jnp.float32), ((0, pad_m), (0, 0)))
-    l2 = (lengthscale.astype(jnp.float32) ** 2)[None, :]
+    mu_p = jnp.pad(mu.astype(ct), ((0, pad_n), (0, 0)))
+    S_p = jnp.pad(S.astype(ct), ((0, pad_n), (0, 0)), constant_values=1.0)
+    w = jnp.pad(jnp.ones((N, 1), ct), ((0, pad_n), (0, 0)))
+    Z_p = jnp.pad(Z.astype(ct), ((0, pad_m), (0, 0)))
+    l2 = (lengthscale.astype(ct) ** 2)[None, :]
 
     Mp = Z_p.shape[0]
     grid = (Mp // TILE_M, Mp // TILE_M, mu_p.shape[0] // TILE_N)
     acc = pl.pallas_call(
-        _psi2_kernel,
+        functools.partial(_psi2_kernel, ct=ct),
         grid=grid,
         in_specs=[
             pl.BlockSpec((TILE_N, Q), lambda i, j, k: (k, 0)),
@@ -127,13 +109,13 @@ def psi2_pallas(
             pl.BlockSpec((1, Q), lambda i, j, k: (0, 0)),
         ],
         out_specs=pl.BlockSpec((TILE_M, TILE_M), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Mp), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Mp, Mp), ct),
         interpret=interpret,
     )(mu_p, S_p, w, Z_p, Z_p, l2)
 
     # n-independent prefactor: sigma^4 exp(-(z - z')^2 / (4 l^2))
-    zs = Z.astype(jnp.float32) / lengthscale.astype(jnp.float32)
+    zs = Z.astype(ct) / lengthscale.astype(ct)
     zn = jnp.sum(zs * zs, -1)
     d2 = jnp.maximum(zn[:, None] + zn[None, :] - 2.0 * zs @ zs.T, 0.0)
-    pref = variance.astype(jnp.float32) ** 2 * jnp.exp(-0.25 * d2)
+    pref = variance.astype(ct) ** 2 * jnp.exp(-0.25 * d2)
     return (pref * acc[:M, :M]).astype(dtype)

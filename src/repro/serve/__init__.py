@@ -1,0 +1,23 @@
+"""Online prediction subsystem: cached posterior state, incremental
+sufficient-statistics updates, batched low-latency serving.
+
+    gp = SparseGPRegression(...).fit(X, Y)
+    server = GPServer()
+    server.register("demand", gp)            # exports + caches the state
+    mean, var = server.predict("demand", Xt) # bucket-padded, jit-cached
+    server.update("demand", X_new, Y_new)    # monoid fold + O(M^3) refold
+
+Layering: `state` (the cached-posterior pytree + jitted predict epilogue),
+`online` (update / downdate / refit on the SuffStats monoid), `server` (the
+named-model registry, bucket compile cache, and micro-batching queue). See
+docs/serving.md.
+"""
+from repro.serve.online import batch_stats, downdate, refit, refold, update
+from repro.serve.server import GPServer
+from repro.serve.state import PosteriorState, build_state, predict
+
+__all__ = [
+    "PosteriorState", "build_state", "predict",
+    "update", "downdate", "refit", "refold", "batch_stats",
+    "GPServer",
+]

@@ -1,0 +1,299 @@
+"""`GPServer`: named posterior states behind a low-latency predict front.
+
+Two serving problems the raw jitted predict does not solve:
+
+* **Variable batch sizes recompile.** jax caches executables per shape, so
+  traffic with B in {1..256} would compile hundreds of variants. The server
+  pads every request up to a small set of bucket shapes (powers of two by
+  default) and slices the answer back — the compile cache is keyed on
+  (model, bucket, diag) and tops out at len(buckets) entries per model.
+  Oversized requests are served in largest-bucket slices, so no request
+  size ever misses the cache.
+
+* **Concurrent callers serialize badly.** One device call per caller pays
+  dispatch overhead per request. `submit()` enqueues the request and
+  returns a `Future`; a single worker thread drains the queue, coalesces
+  every compatible pending request (same model, same diag, same feature
+  dim) into ONE padded device call, and distributes the row slices back to
+  the futures. Under concurrent load the device sees large batches; under
+  light load the added latency is one queue hop.
+
+State is swapped atomically under a per-model lock by `update()` /
+`downdate()`, so readers never see a half-written posterior — a predict
+either uses the old state or the new one, both self-consistent.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from concurrent.futures import Future
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.gp.kernels import Kernel
+from repro.serve import online
+from repro.serve.state import PosteriorState, _predict_closure
+
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+class _Entry:
+    """A registered model: kernel (static), state (swapped atomically), and
+    a per-entry dict of jitted predict closures keyed (diag,) — a plain
+    attribute lookup on the request hot path instead of hashing the kernel
+    through a global cache on every call. The jits are OWNED by the entry
+    (not the module-level lru cache), so re-registering a name drops the
+    old kernel's executables with the old entry instead of pinning them
+    for the life of the process."""
+
+    __slots__ = ("kernel", "state", "lock", "fns")
+
+    def __init__(self, kernel: Kernel, state: PosteriorState):
+        self.kernel = kernel
+        self.state = state
+        self.lock = threading.Lock()
+        self.fns = {True: jax.jit(_predict_closure(kernel, True)),
+                    False: jax.jit(_predict_closure(kernel, False))}
+
+
+class _Request:
+    __slots__ = ("name", "X", "diag", "future")
+
+    def __init__(self, name: str, X: jax.Array, diag: bool, future: Future):
+        self.name = name
+        self.X = X
+        self.diag = diag
+        self.future = future
+
+
+class GPServer:
+    """Register `PosteriorState`s by name; serve batched low-latency
+    predictions; fold new data in online.
+
+    Args:
+      buckets: allowed padded batch sizes, ascending. Each (model, bucket,
+        diag) combination compiles exactly once.
+      use_buckets: `False` disables padding (every distinct request shape
+        compiles its own executable) — exists for the latency benchmark's
+        buckets-on/off comparison, not for production use.
+    """
+
+    def __init__(self, *, buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 use_buckets: bool = True):
+        if not buckets or list(buckets) != sorted(set(int(b) for b in buckets)):
+            raise ValueError(f"buckets must be ascending and unique, got {buckets!r}")
+        self.buckets = tuple(int(b) for b in buckets)
+        self.use_buckets = bool(use_buckets)
+        self._models: Dict[str, _Entry] = {}
+        self._registry_lock = threading.Lock()
+        # micro-batching queue (worker started lazily on first submit)
+        self._queue: deque = deque()
+        self._cv = threading.Condition()
+        self._worker: Optional[threading.Thread] = None
+        self._closed = False
+
+    # ------------------------------------------------------------------ #
+    # registry
+    # ------------------------------------------------------------------ #
+
+    def register(self, name: str, model=None, *, kernel: Kernel | None = None,
+                 state: PosteriorState | None = None) -> None:
+        """Register a fitted model under `name`: either a facade exposing
+        `export_state()` (SparseGPRegression / BayesianGPLVM) or an explicit
+        (kernel, state) pair."""
+        if model is not None:
+            if kernel is not None or state is not None:
+                raise ValueError("pass either a fitted model or kernel=+state=, not both")
+            kernel, state = model.kernel, model.export_state()
+        if kernel is None or state is None:
+            raise ValueError("register needs a fitted model or both kernel= and state=")
+        with self._registry_lock:
+            self._models[name] = _Entry(kernel, state)
+
+    def state(self, name: str) -> PosteriorState:
+        return self._entry(name).state
+
+    def models(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._models))
+
+    def _entry(self, name: str) -> _Entry:
+        try:
+            return self._models[name]
+        except KeyError:
+            raise KeyError(
+                f"no model {name!r} registered; have {self.models()}") from None
+
+    # ------------------------------------------------------------------ #
+    # bucketed predict
+    # ------------------------------------------------------------------ #
+
+    def _bucket(self, B: int) -> int:
+        for b in self.buckets:
+            if B <= b:
+                return b
+        return self.buckets[-1]
+
+    @staticmethod
+    def _check_batch(X) -> jax.Array:
+        if not isinstance(X, jax.Array):
+            X = jnp.asarray(X)
+        if X.ndim != 2 or X.shape[0] == 0:
+            raise ValueError(
+                f"requests must be non-empty (B, Q) batches, got shape {X.shape}")
+        return X
+
+    def _predict_padded(self, entry: _Entry, X: jax.Array, diag: bool):
+        """One device call at a bucket shape; returns unpadded (mean, var).
+        Padding repeats the last row — benign values (no 0/0 in the kernel
+        math), and the padded rows are sliced away. Row results are
+        independent, so padding cannot perturb the real rows. The state is
+        read ONCE here: oversized requests served in slices all use the
+        same posterior even if a concurrent update() swaps it mid-request."""
+        state = entry.state  # one atomic read per request
+        fn = entry.fns[diag]
+        if not self.use_buckets:
+            return fn(state, X)
+        return self._call_bucketed(fn, state, X, diag)
+
+    def _call_bucketed(self, fn, state: PosteriorState, X: jax.Array, diag: bool):
+        B = X.shape[0]
+        bucket = self._bucket(B)
+        if B == bucket:  # the hot path: exact bucket shape, no padding
+            return fn(state, X)
+        if B > bucket:  # oversized: serve in largest-bucket slices
+            if not diag:
+                raise ValueError(
+                    f"diag=False requests must fit one bucket (B={B} > "
+                    f"max bucket {bucket}): a full covariance does not "
+                    f"concatenate across slices")
+            parts = [self._call_bucketed(fn, state, X[i:i + bucket], diag)
+                     for i in range(0, B, bucket)]
+            return (jnp.concatenate([p[0] for p in parts]),
+                    jnp.concatenate([p[1] for p in parts]))
+        X = jnp.concatenate([X, jnp.repeat(X[-1:], bucket - B, axis=0)])
+        mean, second = fn(state, X)
+        if diag:
+            return mean[:B], second[:B]
+        return mean[:B], second[:B, :B]
+
+    def predict(self, name: str, X, *, diag: bool = True):
+        """Synchronous predict through the bucket cache: mean (B, D) and
+        marginal variance (B,) (or (B, B) covariance with diag=False)."""
+        return self._predict_padded(self._entry(name), self._check_batch(X), diag)
+
+    # ------------------------------------------------------------------ #
+    # micro-batching submit
+    # ------------------------------------------------------------------ #
+
+    def submit(self, name: str, X, *, diag: bool = True) -> Future:
+        """Enqueue a predict; returns a Future of (mean, var). Concurrent
+        submissions against the same model coalesce into one device call."""
+        self._entry(name)  # fail fast on unknown names, in the caller
+        fut: Future = Future()
+        req = _Request(name, self._check_batch(X), bool(diag), fut)
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("GPServer is closed")
+            self._queue.append(req)
+            if self._worker is None:
+                self._worker = threading.Thread(
+                    target=self._serve_loop, name="gpserver-worker", daemon=True)
+                self._worker.start()
+            self._cv.notify()
+        return fut
+
+    def _serve_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._closed:
+                    self._cv.wait()
+                if self._closed and not self._queue:
+                    return
+                pending = list(self._queue)
+                self._queue.clear()
+            # coalesce by (model, diag, feature-dim, dtype) — mixing dtypes
+            # would silently promote the concatenated batch and hand some
+            # callers a different dtype than predict() returns; diag=False
+            # answers are per-request covariance blocks, so those run one
+            # by one.
+            # Defensive: nothing in this loop may escape and kill the worker
+            # — a dead worker would strand every pending and future Future
+            # (submit() only spawns it once). _check_batch makes a bad key
+            # unreachable, but a request must never take the server down.
+            groups: Dict[tuple, list] = {}
+            for r in pending:
+                try:
+                    key = (r.name, r.diag, r.X.shape[1], r.X.dtype)
+                except Exception as e:  # noqa: BLE001 — delivered to caller
+                    r.future.set_exception(e)
+                    continue
+                groups.setdefault(key, []).append(r)
+            for (name, diag, *_), reqs in groups.items():
+                try:
+                    entry = self._entry(name)
+                    if not diag or len(reqs) == 1:
+                        for r in reqs:
+                            r.future.set_result(
+                                self._predict_padded(entry, r.X, diag))
+                        continue
+                    X = jnp.concatenate([r.X for r in reqs])
+                    mean, var = self._predict_padded(entry, X, True)
+                    off = 0
+                    for r in reqs:
+                        b = r.X.shape[0]
+                        r.future.set_result((mean[off:off + b], var[off:off + b]))
+                        off += b
+                except Exception as e:  # noqa: BLE001 — delivered to callers
+                    for r in reqs:
+                        if not r.future.done():
+                            r.future.set_exception(e)
+
+    def close(self) -> None:
+        """Drain the queue and stop the worker thread."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout=5.0)
+            self._worker = None
+
+    def __enter__(self) -> "GPServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------ #
+    # online learning
+    # ------------------------------------------------------------------ #
+
+    def update(self, name: str, X_new, Y_new, *, backend: str = "jnp",
+               chunk: Optional[int] = None, bwd_backend: str = "auto") -> None:
+        """Fold new observations into the named state (monoid combine +
+        O(M^3) refold) and swap it in atomically."""
+        entry = self._entry(name)
+        with entry.lock:
+            entry.state = online.update(
+                entry.kernel, entry.state, jnp.asarray(X_new),
+                jnp.asarray(Y_new), backend=backend, chunk=chunk,
+                bwd_backend=bwd_backend)
+
+    def downdate(self, name: str, X_old, Y_old, *, backend: str = "jnp",
+                 chunk: Optional[int] = None) -> None:
+        """Subtract previously-absorbed observations (guarded refold)."""
+        entry = self._entry(name)
+        with entry.lock:
+            entry.state = online.downdate(
+                entry.kernel, entry.state, jnp.asarray(X_old),
+                jnp.asarray(Y_old), backend=backend, chunk=chunk)
+
+    def refit(self, name: str, *, steps: int = 50, lr: float = 5e-2) -> list:
+        """Noise-precision touch-up from the cached statistics (see
+        repro.serve.online.refit); returns the loss history."""
+        entry = self._entry(name)
+        with entry.lock:
+            entry.state, history = online.refit(entry.kernel, entry.state,
+                                                steps=steps, lr=lr)
+        return history
