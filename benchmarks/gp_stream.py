@@ -16,6 +16,11 @@ Fused "step" rows carry a `bwd_backend` field: the reverse pass of the
 fused op is itself dispatched (Pallas reverse kernel vs streaming jnp scan,
 see repro.kernels.ops), and the pallas-interpret rows time BOTH kernel
 bodies end-to-end through jax.value_and_grad.
+
+"singlestat-*" rows time the single-statistic ops (backend="pallas":
+kfu/psi1/psi2), whose reverse passes are now kernelized on the same tile
+scheme — their "step" rows drive jax.value_and_grad through the
+single-statistic forward AND reverse kernel bodies.
 """
 from __future__ import annotations
 
@@ -41,7 +46,8 @@ BACKENDS = ("jnp", "fused")
 def _json_row(model, backend, pass_, N, seconds, peak_bytes, bwd_backend=None):
     # the engine chunk only steers the jnp path; the fused/pallas ops stream
     # at their own internal granularity, so their rows must not claim it.
-    # bwd_backend is only meaningful for fused "step" rows (grad dispatch).
+    # bwd_backend is only meaningful for "step" rows of the kernelized
+    # backends (fused and singlestat-* alike: the grad dispatch knob).
     return {
         "section": "gp_stream", "model": model, "backend": backend,
         "pass": pass_, "N": int(N), "M": M,
@@ -115,7 +121,7 @@ def run(sizes=SIZES, kernel_name: str = "rbf", *, smoke: bool = False):
     if not smoke and kernel_name == "rbf":  # smoke's fused N=1024 row is interpret already
         _, Y = gplvm_synthetic(key, N=n_int, D=D, Q=Q)
         params = gplvm.init_params(key, np.asarray(Y), Q=Q, M=M, kernel=kern)
-        label = "pallas-interpret" if ops.INTERPRET else "pallas"
+        label = "pallas-interpret" if ops.interpret_mode() else "pallas"
         loss = functools.partial(gplvm.loss, kernel=kern, backend="fused")
         t, peak = _bench(loss, params, Y, N=n_int)
         rows.append(_json_row("gplvm", label, "loss", n_int, t, peak))
@@ -127,6 +133,42 @@ def run(sizes=SIZES, kernel_name: str = "rbf", *, smoke: bool = False):
         rows.append(_json_row("gplvm", label, "step", n_int, t, peak,
                               bwd_backend="pallas"))
         csv.append(row(f"gp_stream_gplvm_{label}_step_N{n_int}", t,
+                       f"per_point_us={t/n_int*1e6:.3f},peak_mb={peak/1e6:.1f}"))
+
+    # single-statistic ops (backend="pallas"): kfu/psi1/psi2 now backward
+    # through their own Pallas reverse kernels (bwd_backend dispatch in
+    # repro.kernels.ops) instead of jax.vjp of the reference formulas. The
+    # "step" rows time value_and_grad through both kernel bodies; runs in
+    # smoke mode too so CI asserts the rows exist.
+    if kernel_name == "rbf":
+        label = ("singlestat-pallas-interpret" if ops.interpret_mode()
+                 else "singlestat-pallas")
+        _, Y = gplvm_synthetic(key, N=n_int, D=D, Q=Q)
+        params = gplvm.init_params(key, np.asarray(Y), Q=Q, M=M, kernel=kern)
+        loss = functools.partial(gplvm.loss, kernel=kern, backend="pallas")
+        t, peak = _bench(loss, params, Y, N=n_int)
+        rows.append(_json_row("gplvm", label, "loss", n_int, t, peak))
+        csv.append(row(f"gp_stream_gplvm_{label}_loss_N{n_int}", t,
+                       f"per_point_us={t/n_int*1e6:.3f},peak_mb={peak/1e6:.1f}"))
+        step = jax.value_and_grad(functools.partial(
+            gplvm.loss, kernel=kern, backend="pallas", bwd_backend="pallas"))
+        t, peak = _bench(step, params, Y, N=n_int)
+        rows.append(_json_row("gplvm", label, "step", n_int, t, peak,
+                              bwd_backend="pallas"))
+        csv.append(row(f"gp_stream_gplvm_{label}_step_N{n_int}", t,
+                       f"per_point_us={t/n_int*1e6:.3f},peak_mb={peak/1e6:.1f}"))
+        # exact path: the SGPR training step through the kfu reverse kernel
+        kx, kn_ = jax.random.split(jax.random.fold_in(key, n_int))
+        X = jax.random.uniform(kx, (n_int, 1), jax.numpy.float32, -3.0, 3.0)
+        Ys = jax.numpy.sin(2.0 * X) + 0.1 * jax.random.normal(kn_, (n_int, 1))
+        gp = SparseGPRegression(kernel=get(kernel_name)(1), M=M,
+                                backend="pallas", bwd_backend="pallas")
+        p = gp.init_params(X, Ys)
+        step = jax.value_and_grad(gp._loss_fn())
+        t, peak = _bench(step, p, X, Ys, N=n_int)
+        rows.append(_json_row("sgpr", label, "step", n_int, t, peak,
+                              bwd_backend="pallas"))
+        csv.append(row(f"gp_stream_sgpr_{label}_step_N{n_int}", t,
                        f"per_point_us={t/n_int*1e6:.3f},peak_mb={peak/1e6:.1f}"))
     return csv, rows
 

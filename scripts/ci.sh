@@ -51,6 +51,11 @@ assert all(required <= set(r) for r in rows), "BENCH_gp.json rows malformed"
 assert {r["backend"] for r in rows} >= {"jnp", "fused"}, "missing backend rows"
 assert any(r["backend"] == "fused" and r["pass"] == "step" for r in rows), \
     "missing fused grad-step rows"
+assert any(r["backend"].startswith("singlestat") and r["pass"] == "step"
+           and r["bwd_backend"] == "pallas" for r in rows), \
+    "missing single-statistic grad-step rows (kfu/psi1/psi2 reverse kernels)"
+from benchmarks.common import SCHEMA_VERSION  # PYTHONPATH/cwd set above
+assert doc["meta"]["schema_version"] == SCHEMA_VERSION, doc["meta"]
 print(f"benchmark smoke JSON OK ({len(rows)} rows)")
 PY
 

@@ -19,7 +19,11 @@ No parameter server, no gradient gathering to rank 0: the optimizer step is
 SPMD too (the paper notes its rank-0 L-BFGS collector is a stopgap).
 
 Both losses are kernel-generic: pass any `repro.gp.kernels.Kernel` (default
-RBF, the paper's choice). Shard_map in/out specs derive from the declarative
+RBF, the paper's choice); `backend=` / `bwd_backend=` / `chunk=` thread
+through to the statistics engine unchanged, so each shard's kernelized
+statistics backward through their hand-derived reverse kernels (or the
+streaming jnp twins) under the shard_map transpose. Shard_map in/out specs
+derive from the declarative
 `PARAM_ROLES` table below instead of per-model hand-written spec dicts —
 kernel parameter trees of any shape ride on the `P()` pytree prefix.
 """

@@ -70,7 +70,8 @@ def local_stats(params: Params, Y_local: jax.Array, *,
                 bwd_backend: str = "auto") -> psi_stats.SuffStats:
     """Sufficient statistics for the local data shard, kernel-dispatched.
     `chunk=` streams the shard's datapoints (O(chunk * M) live memory);
-    `bwd_backend` picks the fused backend's reverse-pass implementation."""
+    `bwd_backend` picks the reverse-pass implementation of the kernelized
+    backends ("pallas" single-statistic ops and the "fused" op alike)."""
     kern = default_rbf(kernel, params["q_mu"].shape[1])
     S = jnp.exp(params["q_logS"])
     return suff_stats(kern, params["kern"],

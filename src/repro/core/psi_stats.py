@@ -18,14 +18,17 @@ Two computation modes:
   * expected   — Gaussian q(X) = prod_n N(mu_n, diag(S_n)) (Bayesian GP-LVM):
                  closed-form RBF/Linear expectations.
 
-`backend="pallas"` routes the hot statistics through the Pallas TPU kernels
-(repro.kernels.ops); `backend="fused"` through the fused suffstats op (one
-pass over N for psi2 + psiY, exact path included via S -> 0, differentiable
-through its hand-derived reverse pass whose implementation `bwd_backend`
-selects — Pallas reverse kernel or streaming jnp); `backend="jnp"` uses
-memory-lean jnp (scan over N chunks for Psi2 — never materializes
-(N, M, M)). O(chunk)-memory streaming over N for every backend lives one
-layer up, in `repro.gp.stats.suff_stats(chunk=...)`.
+`backend="pallas"` routes the hot statistics through the single-statistic
+Pallas TPU kernels (repro.kernels.ops — kernelized in both directions:
+their reverse passes specialize the fused op's hand-derived rules);
+`backend="fused"` through the fused suffstats op (one pass over N for
+psi2 + psiY, exact path included via S -> 0, differentiable through its
+hand-derived reverse pass); `backend="jnp"` uses memory-lean jnp (scan
+over N chunks for Psi2 — never materializes (N, M, M)). For both kernel
+backends `bwd_backend` selects the reverse-pass implementation (Pallas
+reverse kernel vs streaming jnp twin). O(chunk)-memory streaming over N
+for every backend lives one layer up, in
+`repro.gp.stats.suff_stats(chunk=...)`.
 """
 from __future__ import annotations
 
@@ -95,7 +98,9 @@ def exact_stats_rbf(
     if backend == "pallas":
         from repro.kernels import ops
 
-        Kfu = ops.kfu(X, Z, variance, lengthscale)
+        # differentiable through the kfu reverse kernel / jnp twin —
+        # `bwd_backend` dispatches exactly like the fused op's
+        Kfu = ops.kfu(X, Z, variance, lengthscale, bwd_backend=bwd_backend)
     else:
         Kfu = ref.kfu_rbf(X, Z, variance, lengthscale)
     return SuffStats(
@@ -172,8 +177,13 @@ def expected_stats_rbf(
     if backend == "pallas":
         from repro.kernels import ops
 
-        psi1 = ops.psi1(mu, S, Z, variance, lengthscale)
-        psi2 = ops.psi2(mu, S, Z, variance, lengthscale)
+        # single-statistic ops: kernelized in BOTH directions — the reverse
+        # passes specialize the fused rules (same tile helpers, same
+        # `bwd_backend` dispatch; docs/derivations/suffstats_vjp.md)
+        psi1 = ops.psi1(mu, S, Z, variance, lengthscale,
+                        bwd_backend=bwd_backend)
+        psi2 = ops.psi2(mu, S, Z, variance, lengthscale,
+                        bwd_backend=bwd_backend)
     elif backend == "fused":
         # single pass over N producing (psi2, psiY) together — the
         # beyond-paper fusion (§Perf C2): one read of (mu, S, Y) per

@@ -110,7 +110,8 @@ class Kernel:
         *, backend: str = "jnp", bwd_backend: str = "auto",
     ) -> SuffStats:
         self._check_backend(backend)
-        del bwd_backend  # only the fused backend has a kernelized reverse pass
+        del bwd_backend  # only the RBF kernel backends have kernelized
+        # reverse passes; the generic jnp path differentiates through XLA
         Kfu = self.K(params, X, Z)
         return SuffStats(
             psi0=jnp.sum(self.Kdiag(params, X)),
@@ -135,7 +136,7 @@ class Kernel:
         Z: jax.Array, *, backend: str = "jnp", bwd_backend: str = "auto",
     ) -> SuffStats:
         self._check_backend(backend)
-        del bwd_backend  # only the fused backend has a kernelized reverse pass
+        del bwd_backend  # see exact_suff_stats: jnp path = XLA autodiff
         psi1 = self.psi1(params, mu, S, Z)
         return SuffStats(
             psi0=self.psi0(params, mu, S),
@@ -171,11 +172,13 @@ class RBF(Kernel):
     stored as unconstrained log-values so gradient-based optimizers (Adam
     here, L-BFGS-B in the paper) work on R^n. Closed-form psi statistics
     under Gaussian q(X) exist, which is why the paper's GP-LVM experiments
-    use it; its statistics also have Pallas TPU kernels (backend="pallas")
-    and the fused suffstats op (backend="fused": psi2 + psiY in one pass —
-    expected statistics, and exact ones via S -> 0 — differentiable through
-    its hand-derived reverse pass, whose implementation the `bwd_backend`
-    knob selects: Pallas reverse kernel or streaming jnp).
+    use it; its statistics also have Pallas TPU kernels (backend="pallas":
+    kfu/psi1/psi2, each kernelized in BOTH directions — their reverse
+    passes specialize the fused op's hand-derived rules) and the fused
+    suffstats op (backend="fused": psi2 + psiY in one pass — expected
+    statistics, and exact ones via S -> 0). Both kernel backends dispatch
+    their reverse-pass implementation on the `bwd_backend` knob (Pallas
+    reverse kernel or streaming jnp twin).
     """
 
     input_dim: int

@@ -15,9 +15,11 @@ produce bit-identical losses.
 one psum of the sufficient statistics); `backend=` routes the statistics
 through Pallas TPU kernels ("pallas") or the fused suffstats op ("fused" —
 expected statistics for the GP-LVM, exact ones for regression via S -> 0);
-`bwd_backend=` picks the fused op's reverse-pass implementation (the Pallas
-reverse kernel vs the streaming jnp scan; "auto" dispatches like the
-forward); `chunk=` streams the statistics over N in chunks of that size so
+`bwd_backend=` picks the reverse-pass implementation of the kernelized
+backends — the fused op and the single-statistic pallas ops all backward
+through hand-derived Pallas reverse kernels or their streaming jnp twins
+("auto" dispatches like the forward); `chunk=` streams the statistics over
+N in chunks of that size so
 training AND prediction peak at O(chunk * M + M^2) memory regardless of N.
 All of these come from the constructor so serving/config code can pick them
 by string/int without touching model internals. See docs/api.md for the
@@ -171,7 +173,7 @@ class SparseGPRegression(_CollapsedGPModel):
       chunk: stream the O(N) statistics in chunks of this size (training and
         prediction both peak at O(chunk * M + M^2) memory); None = one shot.
       bwd_backend: "auto" | "pallas" | "jnp" — reverse-pass implementation
-        of the fused op (ignored by the other backends).
+        of the kernelized backends ("pallas" and "fused"; ignored by "jnp").
     """
 
     def __init__(self, kernel: Optional[Kernel] = None, M: int = 32, *,
@@ -262,8 +264,9 @@ class BayesianGPLVM(_CollapsedGPModel):
       M: number of inducing points.
       mesh / backend / chunk / bwd_backend: as for SparseGPRegression;
         backend="fused" is the fused suffstats op (one pass over N producing
-        psi2/psiY together, differentiable via its hand-derived reverse
-        pass, kernelized when bwd_backend is "auto"/"pallas").
+        psi2/psiY together), backend="pallas" the single-statistic
+        psi1/psi2 kernels — both differentiable via the hand-derived
+        reverse passes, kernelized when bwd_backend is "auto"/"pallas".
     """
 
     def __init__(self, kernel: Optional[Kernel] = None, M: int = 100,

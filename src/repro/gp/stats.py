@@ -4,8 +4,10 @@ One entry point, `suff_stats(kernel, params, batch, backend=..., chunk=...)`,
 replaces the RBF-only free functions (`psi_stats.exact_stats_rbf` /
 `expected_stats_rbf`) at every call site: the batch type selects exact
 (deterministic X) vs expected (Gaussian q(X)) statistics, the kernel object
-supplies the math, and `backend` routes the hot path through Pallas kernels
-("pallas"), the fused suffstats op ("fused", RBF expected only) or plain jnp.
+supplies the math, and `backend` routes the hot path through the
+single-statistic Pallas kernels ("pallas"), the fused suffstats op ("fused")
+or plain jnp — both kernel backends are differentiable through hand-derived
+reverse kernels selected by `bwd_backend`.
 
 `chunk=` turns every path into a streaming reduction: the N datapoints are
 scanned in chunks of that size and the per-chunk `SuffStats` are combined
@@ -64,7 +66,8 @@ def _dispatch(kernel: Kernel, params: Params, batch: Batch, backend: str,
 
 
 def streaming_suff_stats(kernel: Kernel, params: Params, batch: Batch, *,
-                         backend: str = "jnp", chunk: int = 4096) -> SuffStats:
+                         backend: str = "jnp", chunk: int = 4096,
+                         bwd_backend: str = "auto") -> SuffStats:
     """`suff_stats` as a chunked lax.scan over N: O(chunk * M + M^2) live.
 
     Works for any kernel and either batch type — the per-chunk statistics go
@@ -83,7 +86,8 @@ def streaming_suff_stats(kernel: Kernel, params: Params, batch: Batch, *,
     rebuild = type(batch)
 
     def one(*parts) -> SuffStats:
-        return _dispatch(kernel, params, rebuild(*parts, batch.Z), backend)
+        return _dispatch(kernel, params, rebuild(*parts, batch.Z), backend,
+                         bwd_backend)
 
     n_full, rem = divmod(N, chunk)
     stats: Optional[SuffStats] = None
@@ -133,11 +137,13 @@ def suff_stats(kernel: Kernel, params: Params, batch: Batch, *,
     `chunk=None` evaluates the statistics in one shot (full-batch
     workspaces); an integer streams the datapoints in chunks of that size.
     The "fused" backend is exempt: its op already streams internally (jnp
-    twin / Pallas grid over N) with a streaming hand-derived VJP, whose
-    implementation `bwd_backend` selects (Pallas reverse kernel vs jnp scan;
-    ignored by the other backends).
+    twin / Pallas grid over N) with a streaming hand-derived VJP.
+    `bwd_backend` selects the reverse-pass implementation of the kernelized
+    backends — the fused op and the single-statistic "pallas" ops both
+    dispatch on it (Pallas reverse kernel vs streaming jnp scan; ignored by
+    the "jnp" backend).
     """
     if chunk is not None and backend != "fused":
-        return streaming_suff_stats(kernel, params, batch,
-                                    backend=backend, chunk=chunk)
+        return streaming_suff_stats(kernel, params, batch, backend=backend,
+                                    chunk=chunk, bwd_backend=bwd_backend)
     return _dispatch(kernel, params, batch, backend, bwd_backend)

@@ -1,11 +1,11 @@
 """Differentiable jit'd wrappers around the Pallas psi-statistic kernels.
 
-Forward = Pallas kernel (interpret-mode on CPU, compiled on TPU).
-Backward of the single-statistic kernels = memory-lean jnp (jax.vjp of the
-ref formulas, chunked where needed). Backward of the fused `suffstats` op =
-the HAND-DERIVED reverse pass (kernels/suffstats.py, the paper's Table-2
-gradient loops expressed as closed-form reverse rules), dispatched by a
-`bwd_backend` knob:
+Forward = Pallas kernel (interpret-mode on CPU, compiled on TPU). Backward =
+the HAND-DERIVED reverse passes (kernels/suffstats.py, the paper's Table-2
+gradient loops expressed as closed-form reverse rules) for the fused
+`suffstats` op AND the single-statistic ops (`kfu`/`psi1`/`psi2` specialize
+the fused rules — see docs/derivations/suffstats_vjp.md). Every op's
+reverse-pass implementation is selected by a static `bwd_backend` knob:
 
   * ``"auto"``   (default) — mirror the forward's three-way dispatch: the
     Pallas reverse kernel compiled on TPU, the same kernel body in interpret
@@ -15,136 +15,202 @@ gradient loops expressed as closed-form reverse rules), dispatched by a
     at large N: slow, for validation).
   * ``"jnp"``    — force the streaming-jnp reverse scan everywhere.
 
-`INTERPRET` flips automatically: True off-TPU so the whole test/bench suite
-exercises the real kernel bodies on CPU. Because interpret mode pays a
-Python-level cost per grid point, the fused `suffstats` op only runs the
-kernel bodies off-TPU up to `FUSED_INTERPRET_MAX_N` datapoints; beyond that
-it switches to the numerically-matching streaming-jnp twins.
+`interpret_mode()` flips automatically: True off-TPU so the whole test/bench
+suite exercises the real kernel bodies on CPU. It reads the backend at call
+time (import-time freezing would mis-dispatch after a test fixture or
+`jax.config` forces a platform post-import); `_INTERPRET_OVERRIDE` is the
+test-visible override. Because interpret mode pays a Python-level cost per
+grid point, the reverse dispatch only runs the kernel bodies off-TPU up to
+`FUSED_INTERPRET_MAX_N` datapoints; beyond that it switches to the
+numerically-matching streaming-jnp twins.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import ref
 from repro.kernels.kfu import kfu_pallas
 from repro.kernels.psi1 import psi1_pallas
 from repro.kernels.psi2 import psi2_pallas
 from repro.kernels.suffstats import (
+    kfu_bwd_pallas,
+    kfu_vjp_jnp,
+    psi1_bwd_pallas,
+    psi1_vjp_jnp,
+    psi2_bwd_pallas,
+    psi2_vjp_jnp,
     suffstats_bwd_pallas,
     suffstats_fused_jnp,
     suffstats_pallas,
     suffstats_vjp_jnp,
 )
 
-INTERPRET = jax.default_backend() != "tpu"
+# Test-visible override for `interpret_mode()`: None = detect from the
+# backend at call time; True/False force a path (restore to None after).
+_INTERPRET_OVERRIDE: bool | None = None
 
-# off-TPU, run the real fused kernel body (interpret mode) only for problems
+
+def interpret_mode() -> bool:
+    """Whether the Pallas kernel bodies should run in interpret mode.
+
+    Read at CALL time, not import time: `jax.default_backend()` is itself
+    cached by jax and invalidated when the platform config changes, so a
+    test fixture (or `jax.config.update("jax_platform_name", ...)`) that
+    forces a backend after this module imports still dispatches the right
+    kernel path.
+    """
+    if _INTERPRET_OVERRIDE is not None:
+        return bool(_INTERPRET_OVERRIDE)
+    return jax.default_backend() != "tpu"
+
+
+def __getattr__(name: str):
+    # back-compat: `ops.INTERPRET` used to be an import-time constant; keep
+    # the attribute readable but always call-time fresh
+    if name == "INTERPRET":
+        return interpret_mode()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+# off-TPU, run the real kernel bodies (interpret mode) only for problems
 # small enough that per-grid-point interpretation stays cheap
 FUSED_INTERPRET_MAX_N = 1024
+
+BWD_BACKENDS = ("auto", "pallas", "jnp")
+
+
+def _check_bwd_backend(bwd_backend: str) -> None:
+    if bwd_backend not in BWD_BACKENDS:
+        raise ValueError(
+            f"bwd_backend must be one of {BWD_BACKENDS}, got {bwd_backend!r}")
+
+
+def _bwd_dispatch(bwd_backend, n, pallas_fn, jnp_fn):
+    """The shared three-way reverse dispatch (mirrors the forward's split):
+    `pallas_fn(interpret)` runs a Pallas reverse kernel, `jnp_fn()` the
+    streaming-jnp twin. Every op's custom_vjp backward routes through here.
+    """
+    if bwd_backend == "jnp":
+        return jnp_fn()
+    if bwd_backend == "pallas":
+        return pallas_fn(interpret_mode())
+    if not interpret_mode():
+        return pallas_fn(False)
+    if n <= FUSED_INTERPRET_MAX_N:
+        return pallas_fn(True)
+    return jnp_fn()
 
 
 # ---------------------------------------------------------------------------
 # kfu
 # ---------------------------------------------------------------------------
 
-@jax.custom_vjp
-def kfu(X, Z, variance, lengthscale):
-    return kfu_pallas(X, Z, variance, lengthscale, interpret=INTERPRET)
+@functools.lru_cache(maxsize=None)
+def _make_kfu_op(bwd_backend: str):
+    @jax.custom_vjp
+    def op(X, Z, variance, lengthscale):
+        return kfu_pallas(X, Z, variance, lengthscale,
+                          interpret=interpret_mode())
+
+    def fwd(X, Z, variance, lengthscale):
+        return op(X, Z, variance, lengthscale), (X, Z, variance, lengthscale)
+
+    def bwd(res, g):
+        X, Z, variance, lengthscale = res
+        return _bwd_dispatch(
+            bwd_backend, X.shape[0],
+            lambda interp: kfu_bwd_pallas(X, Z, variance, lengthscale, g,
+                                          interpret=interp),
+            lambda: kfu_vjp_jnp(X, Z, variance, lengthscale, g))
+
+    op.defvjp(fwd, bwd)
+    return op
 
 
-def _kfu_fwd(X, Z, variance, lengthscale):
-    return kfu(X, Z, variance, lengthscale), (X, Z, variance, lengthscale)
-
-
-def _kfu_bwd(res, g):
-    _, vjp = jax.vjp(ref.kfu_rbf, *res)
-    return vjp(g)
-
-
-kfu.defvjp(_kfu_fwd, _kfu_bwd)
+def kfu(X, Z, variance, lengthscale, *, bwd_backend: str = "auto"):
+    """RBF cross-covariance K_fu (N, M) with a hand-derived, kernelized
+    reverse pass (the S -> 0 specialization of the psi1 rules)."""
+    _check_bwd_backend(bwd_backend)
+    return _make_kfu_op(bwd_backend)(X, Z, variance, lengthscale)
 
 
 # ---------------------------------------------------------------------------
 # psi1
 # ---------------------------------------------------------------------------
 
-@jax.custom_vjp
-def psi1(mu, S, Z, variance, lengthscale):
-    return psi1_pallas(mu, S, Z, variance, lengthscale, interpret=INTERPRET)
+@functools.lru_cache(maxsize=None)
+def _make_psi1_op(bwd_backend: str):
+    @jax.custom_vjp
+    def op(mu, S, Z, variance, lengthscale):
+        return psi1_pallas(mu, S, Z, variance, lengthscale,
+                           interpret=interpret_mode())
+
+    def fwd(mu, S, Z, variance, lengthscale):
+        return op(mu, S, Z, variance, lengthscale), \
+            (mu, S, Z, variance, lengthscale)
+
+    def bwd(res, g):
+        return _bwd_dispatch(
+            bwd_backend, res[0].shape[0],
+            lambda interp: psi1_bwd_pallas(*res, g, interpret=interp),
+            lambda: psi1_vjp_jnp(*res, g))
+
+    op.defvjp(fwd, bwd)
+    return op
 
 
-def _psi1_fwd(mu, S, Z, variance, lengthscale):
-    return psi1(mu, S, Z, variance, lengthscale), (mu, S, Z, variance, lengthscale)
-
-
-def _psi1_bwd(res, g):
-    _, vjp = jax.vjp(ref.psi1_rbf, *res)
-    return vjp(g)
-
-
-psi1.defvjp(_psi1_fwd, _psi1_bwd)
+def psi1(mu, S, Z, variance, lengthscale, *, bwd_backend: str = "auto"):
+    """Psi1 statistic (N, M) with a hand-derived, kernelized reverse pass
+    (eq. (10)-(14) of the derivation, branch weight W1 = g . psi1)."""
+    _check_bwd_backend(bwd_backend)
+    return _make_psi1_op(bwd_backend)(mu, S, Z, variance, lengthscale)
 
 
 # ---------------------------------------------------------------------------
 # psi2
 # ---------------------------------------------------------------------------
 
-def _psi2_ref_chunked(mu, S, Z, variance, lengthscale):
-    # import here to avoid a core<->kernels import cycle at module load
-    from repro.core.psi_stats import _psi2_rbf_chunked
+@functools.lru_cache(maxsize=None)
+def _make_psi2_op(bwd_backend: str):
+    @jax.custom_vjp
+    def op(mu, S, Z, variance, lengthscale):
+        return psi2_pallas(mu, S, Z, variance, lengthscale,
+                           interpret=interpret_mode())
 
-    return _psi2_rbf_chunked(mu, S, Z, variance, lengthscale)
+    def fwd(mu, S, Z, variance, lengthscale):
+        return op(mu, S, Z, variance, lengthscale), \
+            (mu, S, Z, variance, lengthscale)
+
+    def bwd(res, g2):
+        return _bwd_dispatch(
+            bwd_backend, res[0].shape[0],
+            lambda interp: psi2_bwd_pallas(*res, g2, interpret=interp),
+            lambda: psi2_vjp_jnp(*res, g2))
+
+    op.defvjp(fwd, bwd)
+    return op
 
 
-@jax.custom_vjp
-def psi2(mu, S, Z, variance, lengthscale):
-    return psi2_pallas(mu, S, Z, variance, lengthscale, interpret=INTERPRET)
-
-
-def _psi2_fwd(mu, S, Z, variance, lengthscale):
-    return psi2(mu, S, Z, variance, lengthscale), (mu, S, Z, variance, lengthscale)
-
-
-def _psi2_bwd(res, g):
-    # chunked reverse pass: O(chunk * M^2) live memory, like the forward
-    _, vjp = jax.vjp(_psi2_ref_chunked, *res)
-    return vjp(g)
-
-
-psi2.defvjp(_psi2_fwd, _psi2_bwd)
+def psi2(mu, S, Z, variance, lengthscale, *, bwd_backend: str = "auto"):
+    """Psi2 statistic (M, M) with a hand-derived, kernelized reverse pass
+    (the fused op's psi2 branch alone: eq. (9), (15)-(20))."""
+    _check_bwd_backend(bwd_backend)
+    return _make_psi2_op(bwd_backend)(mu, S, Z, variance, lengthscale)
 
 
 # ---------------------------------------------------------------------------
 # fused suffstats (psi2 + psiY in one pass over N)
 # ---------------------------------------------------------------------------
 
-BWD_BACKENDS = ("auto", "pallas", "jnp")
-
-
 def _suffstats_impl(mu, S, Y, Z, variance, lengthscale):
-    if not INTERPRET:
+    if not interpret_mode():
         return suffstats_pallas(mu, S, Y, Z, variance, lengthscale,
                                 interpret=False)
     if mu.shape[0] <= FUSED_INTERPRET_MAX_N:
         return suffstats_pallas(mu, S, Y, Z, variance, lengthscale,
                                 interpret=True)
     return suffstats_fused_jnp(mu, S, Y, Z, variance, lengthscale)
-
-
-def _suffstats_bwd_dispatch(bwd_backend, res, g2, gY):
-    """Reverse-pass dispatch, mirroring the forward's three-way split."""
-    if bwd_backend == "jnp":
-        return suffstats_vjp_jnp(*res, g2, gY)
-    if bwd_backend == "pallas":
-        return suffstats_bwd_pallas(*res, g2, gY, interpret=INTERPRET)
-    if not INTERPRET:
-        return suffstats_bwd_pallas(*res, g2, gY, interpret=False)
-    if res[0].shape[0] <= FUSED_INTERPRET_MAX_N:
-        return suffstats_bwd_pallas(*res, g2, gY, interpret=True)
-    return suffstats_vjp_jnp(*res, g2, gY)
 
 
 @functools.lru_cache(maxsize=None)
@@ -163,7 +229,11 @@ def _make_suffstats_op(bwd_backend: str):
 
     def bwd(res, g):
         g2, gY = g
-        return _suffstats_bwd_dispatch(bwd_backend, res, g2, gY)
+        return _bwd_dispatch(
+            bwd_backend, res[0].shape[0],
+            lambda interp: suffstats_bwd_pallas(*res, g2, gY,
+                                                interpret=interp),
+            lambda: suffstats_vjp_jnp(*res, g2, gY))
 
     op.defvjp(fwd, bwd)
     return op
@@ -176,7 +246,5 @@ def suffstats(mu, S, Y, Z, variance, lengthscale, *, bwd_backend: str = "auto"):
     `bwd_backend` selects the reverse-pass implementation ("auto" | "pallas"
     | "jnp", see module docstring); the forward dispatch is unaffected.
     """
-    if bwd_backend not in BWD_BACKENDS:
-        raise ValueError(
-            f"bwd_backend must be one of {BWD_BACKENDS}, got {bwd_backend!r}")
+    _check_bwd_backend(bwd_backend)
     return _make_suffstats_op(bwd_backend)(mu, S, Y, Z, variance, lengthscale)

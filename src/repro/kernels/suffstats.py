@@ -20,7 +20,7 @@ the forward computes — so the backward reuses the forward's tile scheme.
 The full algebra, with the equation numbers cited throughout this file,
 lives in docs/derivations/suffstats_vjp.md.
 
-Four entry points (wired into a differentiable op by `repro.kernels.ops`):
+Main entry points (wired into differentiable ops by `repro.kernels.ops`):
 
   * `suffstats_pallas`      — forward Pallas kernel (compiled on TPU,
                               interpret elsewhere). Grid (i, j, kn) with the
@@ -39,10 +39,18 @@ Four entry points (wired into a differentiable op by `repro.kernels.ops`):
   * `suffstats_vjp_jnp`     — the same reverse algebra as a streaming jnp
                               scan; the off-TPU large-N backward.
 
+The single-statistic ops' reverse passes live here too — `kfu_bwd_pallas` /
+`psi1_bwd_pallas` / `psi2_bwd_pallas` and their streaming jnp twins
+(`kfu_vjp_jnp` / `psi1_vjp_jnp` / `psi2_vjp_jnp`) — as specializations of
+the fused rules on the same tile scheme.
+
 The Pallas forward and reverse kernels share the `_psi1_tile` / `_psi2_tile`
-block helpers below, so the exponential the reverse pass differentiates is
-the exponential the forward evaluates — the two cannot drift. The jnp pair
-shares `_psi1_weighted` / `_psi2_weighted` the same way (and
+block helpers below, and every reverse pass (fused or single-statistic,
+Pallas or jnp) shares the `_psi1_bwd_tile` / `_psi2_bwd_tile` cotangent
+helpers, so the exponential a reverse pass differentiates is the
+exponential the forward evaluates and the cotangent algebra exists in
+exactly one place — forward and reverse formulas cannot drift. The jnp
+forward pair shares `_psi1_weighted` / `_psi2_weighted` the same way (and
 `_psi1_weighted` is itself a wrapper over `_psi1_tile`).
 """
 from __future__ import annotations
@@ -113,6 +121,99 @@ def _psi2_tile(mu, S, z1, z2, l2, *, ct):
     E = jnp.exp((lognorm2 - c2)[:, :, None] + A1[:, :, None] + A2[:, None, :]
                 - 0.5 * cross)
     return r, E
+
+
+# ---------------------------------------------------------------------------
+# shared reverse-pass tile helpers
+# ---------------------------------------------------------------------------
+#
+# Every input cotangent of every psi-statistic op is linear in a per-point
+# branch weight — W1 (eq. (8), the psi1/psiY branch) or T (eq. (9), the psi2
+# branch) — so the whole reverse pass factors into the two tile helpers
+# below. The fused reverse kernel, the single-statistic reverse kernels
+# (kfu/psi1/psi2), and the streaming jnp twins all call these, the same way
+# every forward shares `_psi1_tile`/`_psi2_tile`: the ops differ only in how
+# they build their branch weight, never in the cotangent algebra.
+
+def _psi1_bwd_tile(mu, S, z1, l2, W1, *, ct):
+    """Cotangent contributions of one (TN, TM) psi1-branch tile given branch
+    weight W1 (eq. (8)): returns (dmu (TN, Q), dS (TN, Q), dz (TM, Q),
+    dvraw scalar, dl (1, Q)) per eq. (10)-(14).
+
+    `dvraw` is the raw weight total sum W1 — the caller divides by v
+    (eq. (13)), which keeps v out of the tile entirely.
+    """
+    b = 1.0 / (l2 + S)
+    ls = jnp.sqrt(l2)
+    s1 = jnp.sum(W1, axis=1, keepdims=True)  # (TN, 1)
+    W1Z = _dot(W1, z1, ((1,), (0,)), ct)  # (TN, Q)
+    sq1 = mu * mu * s1 - 2.0 * mu * W1Z + _dot(W1, z1 * z1, ((1,), (0,)), ct)
+    dmu = -b * (mu * s1 - W1Z)  # eq. (10)
+    dS = -0.5 * b * s1 + 0.5 * b * b * sq1  # eq. (11)
+    dz = (_dot(W1, mu * b, ((0,), (0,)), ct)
+          - z1 * _dot(W1, b, ((0,), (0,)), ct))  # eq. (12)
+    dvraw = jnp.sum(s1)  # eq. (13); the 1/v rides outside
+    dl = jnp.sum((S * b / ls) * s1 + ls * b * b * sq1,
+                 axis=0, keepdims=True)  # eq. (14)
+    return dmu, dS, dz, dvraw, dl
+
+
+def _psi2_bwd_tile(mu, S, z1, z2, l2, T, *, ct):
+    """Cotangent contributions of one (TN, TM, TM) psi2-branch tile given
+    branch weight T (eq. (9)): returns (dmu (TN, Q), dS (TN, Q),
+    dz_i (TM, Q) — slot-a rows, dz_j (TM, Q) — slot-b rows, dvraw scalar,
+    dl (1, Q)) per eq. (15)-(20).
+
+    All T moments reduce to MXU contractions against z / z^2; nothing larger
+    than T itself is ever live. `dvraw` is the raw weight total 2 sum T
+    (eq. (19) without the 1/v, divided out by the caller).
+    """
+    tn, q_dim = mu.shape
+    tm = z1.shape[0]
+    ls = jnp.sqrt(l2)
+    z1sq = z1 * z1
+    z2sq = z2 * z2
+    r = 1.0 / (l2 + 2.0 * S)
+    row = jnp.sum(T, axis=2)  # (TN, TM)  sum over m' (slot b)
+    col = jnp.sum(T, axis=1)  # (TN, TM)  sum over m  (slot a)
+    t = jnp.sum(row, axis=1, keepdims=True)  # (TN, 1)
+    # zbar moments (eq. (15)): u = sum_ab T zbar, w2 = sum_ab T zbar^2
+    TZ2 = _dot(T.reshape(tn * tm, tm), z2, ((1,), (0,)), ct
+               ).reshape(tn, tm, q_dim)
+    TtZ1 = _dot(jnp.swapaxes(T, 1, 2).reshape(tn * tm, tm), z1,
+                ((1,), (0,)), ct).reshape(tn, tm, q_dim)
+    u = 0.5 * (_dot(row, z1, ((1,), (0,)), ct) + _dot(col, z2, ((1,), (0,)), ct))
+    B = jnp.sum(z1[None, :, :] * TZ2, axis=1)  # (TN, Q) bilinear z^T T z
+    w2 = 0.25 * (_dot(row, z1sq, ((1,), (0,)), ct)
+                 + _dot(col, z2sq, ((1,), (0,)), ct)) + 0.5 * B
+    V = mu * mu * t - 2.0 * mu * u + w2  # sum_ab T (mu - zbar)^2
+    dmu = -2.0 * r * (mu * t - u)  # eq. (16)
+    dS = -r * t + 2.0 * r * r * V  # eq. (17)
+    dvraw = 2.0 * jnp.sum(t)  # eq. (19); the 1/v rides outside
+    # eq. (20): dlengthscale — lognorm2 + exponent-r terms + the zterm term
+    P = jnp.sum(T, axis=0)  # (TM, TM)
+    Pr = jnp.sum(P, axis=1, keepdims=True)  # (TM, 1) row sums
+    Pc = jnp.sum(P, axis=0, keepdims=True).T  # (TM, 1) column sums
+    PZ2 = _dot(P, z2, ((1,), (0,)), ct)  # (TM, Q)
+    PtZ1 = _dot(P, z1, ((0,), (0,)), ct)  # (TM, Q)
+    # sum_ab P (z1_a - z2_b)^2 per q, factored through the P moments
+    zd2 = (jnp.sum(Pr * z1sq, axis=0, keepdims=True)
+           + jnp.sum(Pc * z2sq, axis=0, keepdims=True)
+           - 2.0 * jnp.sum(z1 * PZ2, axis=0, keepdims=True))  # (1, Q)
+    dl = ((2.0 / ls) * jnp.sum(S * r * t, axis=0, keepdims=True)
+          + 2.0 * ls * jnp.sum(r * r * V, axis=0, keepdims=True)
+          + zd2 / (2.0 * ls * l2))
+    # eq. (18): dZ — slot-a rows (tile i) and slot-b rows (tile j)
+    r_mu = r * mu
+    dz_i = (_dot(row, r_mu, ((0,), (0,)), ct)
+            - 0.5 * z1 * _dot(row, r, ((0,), (0,)), ct)
+            - 0.5 * jnp.sum(r[:, None, :] * TZ2, axis=0)
+            + (PZ2 - z1 * Pr) / (2.0 * l2))
+    dz_j = (_dot(col, r_mu, ((0,), (0,)), ct)
+            - 0.5 * z2 * _dot(col, r, ((0,), (0,)), ct)
+            - 0.5 * jnp.sum(r[:, None, :] * TtZ1, axis=0)
+            + (PtZ1 - z2 * Pc) / (2.0 * l2))
+    return dmu, dS, dz_i, dz_j, dvraw, dl
 
 
 # ---------------------------------------------------------------------------
@@ -254,54 +355,11 @@ def _suffstats_bwd_kernel(mu_ref, s_ref, y_ref, w_ref, z1_ref, z2_ref,
     l2 = l2_ref[...].astype(ct)  # (1, Q)
     g2p = g2p_ref[...].astype(ct)  # (TM, TM) = g2 * v^2 exp(zterm), padded 0
 
-    tn, q_dim = mu.shape
-    tm = z1.shape[0]
-    ls = jnp.sqrt(l2)
-    z1sq = z1 * z1
-    z2sq = z2 * z2
-
     # ---------------- psi2 branch: T = g2p . E . w  (eq. (9)) ------------
-    r, E = _psi2_tile(mu, S, z1, z2, l2, ct=ct)
+    _, E = _psi2_tile(mu, S, z1, z2, l2, ct=ct)
     T = g2p[None, :, :] * E * w[:, :, None]  # (TN, TM, TM)
-    row = jnp.sum(T, axis=2)  # (TN, TM)  sum over m' (slot b)
-    col = jnp.sum(T, axis=1)  # (TN, TM)  sum over m  (slot a)
-    t = jnp.sum(row, axis=1, keepdims=True)  # (TN, 1)
-    # zbar moments (eq. (15)): u = sum_ab T zbar, w2 = sum_ab T zbar^2
-    TZ2 = _dot(T.reshape(tn * tm, tm), z2, ((1,), (0,)), ct
-               ).reshape(tn, tm, q_dim)
-    TtZ1 = _dot(jnp.swapaxes(T, 1, 2).reshape(tn * tm, tm), z1,
-                ((1,), (0,)), ct).reshape(tn, tm, q_dim)
-    u = 0.5 * (_dot(row, z1, ((1,), (0,)), ct) + _dot(col, z2, ((1,), (0,)), ct))
-    B = jnp.sum(z1[None, :, :] * TZ2, axis=1)  # (TN, Q) bilinear z^T T z
-    w2 = 0.25 * (_dot(row, z1sq, ((1,), (0,)), ct)
-                 + _dot(col, z2sq, ((1,), (0,)), ct)) + 0.5 * B
-    V = mu * mu * t - 2.0 * mu * u + w2  # sum_ab T (mu - zbar)^2
-    dmu_c = -2.0 * r * (mu * t - u)  # eq. (16)
-    ds_c = -r * t + 2.0 * r * r * V  # eq. (17)
-    dvraw_c = 2.0 * jnp.sum(t)  # eq. (19); the 1/v rides outside the kernel
-    # eq. (20): dlengthscale — lognorm2 + exponent-r terms + the zterm term
-    P = jnp.sum(T, axis=0)  # (TM, TM)
-    Pr = jnp.sum(P, axis=1, keepdims=True)  # (TM, 1) row sums
-    Pc = jnp.sum(P, axis=0, keepdims=True).T  # (TM, 1) column sums
-    PZ2 = _dot(P, z2, ((1,), (0,)), ct)  # (TM, Q)
-    PtZ1 = _dot(P, z1, ((0,), (0,)), ct)  # (TM, Q)
-    # sum_ab P (z1_a - z2_b)^2 per q, factored through the P moments
-    zd2 = (jnp.sum(Pr * z1sq, axis=0, keepdims=True)
-           + jnp.sum(Pc * z2sq, axis=0, keepdims=True)
-           - 2.0 * jnp.sum(z1 * PZ2, axis=0, keepdims=True))  # (1, Q)
-    dl_c = ((2.0 / ls) * jnp.sum(S * r * t, axis=0, keepdims=True)
-            + 2.0 * ls * jnp.sum(r * r * V, axis=0, keepdims=True)
-            + zd2 / (2.0 * ls * l2))
-    # eq. (18): dZ — slot-a rows (tile i) and slot-b rows (tile j)
-    r_mu = r * mu
-    dz_i = (_dot(row, r_mu, ((0,), (0,)), ct)
-            - 0.5 * z1 * _dot(row, r, ((0,), (0,)), ct)
-            - 0.5 * jnp.sum(r[:, None, :] * TZ2, axis=0)
-            + (PZ2 - z1 * Pr) / (2.0 * l2))
-    dz_j = (_dot(col, r_mu, ((0,), (0,)), ct)
-            - 0.5 * z2 * _dot(col, r, ((0,), (0,)), ct)
-            - 0.5 * jnp.sum(r[:, None, :] * TtZ1, axis=0)
-            + (PtZ1 - z2 * Pc) / (2.0 * l2))
+    dmu_c, ds_c, dz_i, dz_j, dvraw_c, dl_c = _psi2_bwd_tile(
+        mu, S, z1, z2, l2, T, ct=ct)
 
     # ---------------- accumulate: per-datapoint blocks -------------------
     @pl.when(first_mm)
@@ -331,20 +389,15 @@ def _suffstats_bwd_kernel(mu_ref, s_ref, y_ref, w_ref, z1_ref, z2_ref,
     def _():
         y = y_ref[...].astype(ct)  # (TN, D)
         gyv = gyv_ref[...].astype(ct)  # (TM, D) = v * gY, padded 0
-        b, blk = _psi1_tile(mu, S, z1, l2, ct=ct)
+        _, blk = _psi1_tile(mu, S, z1, l2, ct=ct)
         blk = blk * w  # psi1 / v, pad-masked
         W1 = _dot(y, gyv, ((1,), (1,)), ct) * blk  # (TN, TM)  eq. (8)
-        s1 = jnp.sum(W1, axis=1, keepdims=True)  # (TN, 1)
-        W1Z = _dot(W1, z1, ((1,), (0,)), ct)  # (TN, Q)
-        sq1 = mu * mu * s1 - 2.0 * mu * W1Z + _dot(W1, z1sq, ((1,), (0,)), ct)
-        dmu_ref[...] += -b * (mu * s1 - W1Z)  # eq. (10)
-        ds_ref[...] += -0.5 * b * s1 + 0.5 * b * b * sq1  # eq. (11)
-        dvraw_ref[...] += jnp.sum(s1)  # eq. (13); 1/v outside
-        dl_ref[...] += jnp.sum((S * b / ls) * s1 + ls * b * b * sq1,
-                               axis=0, keepdims=True)  # eq. (14)
-        dz_ref[pl.dslice(i * tile_m, tile_m), :] += (
-            _dot(W1, mu * b, ((0,), (0,)), ct)
-            - z1 * _dot(W1, b, ((0,), (0,)), ct))  # eq. (12)
+        dmu1, ds1, dz1, dvraw1, dl1 = _psi1_bwd_tile(mu, S, z1, l2, W1, ct=ct)
+        dmu_ref[...] += dmu1
+        ds_ref[...] += ds1
+        dvraw_ref[...] += dvraw1
+        dl_ref[...] += dl1
+        dz_ref[pl.dslice(i * tile_m, tile_m), :] += dz1
         dy_c = _dot(blk, gyv, ((1,), (0,)), ct)  # (TN, D)
 
         @pl.when(i == 0)
@@ -432,6 +485,242 @@ def suffstats_bwd_pallas(mu, S, Y, Z, variance, lengthscale, g2, gY, *,
     return (dmu[:N].astype(mu.dtype), dS[:N].astype(S.dtype),
             dY[:N].astype(Y.dtype), dZ[:M].astype(Z.dtype),
             (dvraw[0, 0] / v).astype(variance.dtype),
+            dl[0].astype(lengthscale.dtype))
+
+
+# ---------------------------------------------------------------------------
+# single-statistic reverse kernels (kfu / psi1 / psi2)
+# ---------------------------------------------------------------------------
+#
+# The single-statistic ops' reverse passes are specializations of the fused
+# rules — the cotangent algebra is identical, only the branch weight changes
+# (docs/derivations/suffstats_vjp.md §"Single-statistic specializations"):
+#
+#   psi1 op:  W1[n,m] = g1[n,m] · psi1[n,m]   (the output cotangent itself
+#             weights psi1, where the fused op weights by gY·Y)
+#   kfu op:   psi1 at S = 0 (psi1 IS the S-smoothed K_fu), dS discarded
+#   psi2 op:  T exactly as the fused psi2 branch (eq. (9))
+#
+# so the kernels below are the fused reverse kernel with one branch removed,
+# on the same tile helpers and the same grid/accumulation scheme.
+
+def _psi1_bwd_kernel(mu_ref, s_ref, z_ref, l2_ref, gv_ref,
+                     dmu_ref, ds_ref, dz_ref, dvraw_ref, dl_ref,
+                     *, tile_m, ct=jnp.float32):
+    kn = pl.program_id(0)
+    i = pl.program_id(1)
+
+    mu = mu_ref[...].astype(ct)  # (TN, Q)
+    S = s_ref[...].astype(ct)
+    z = z_ref[...].astype(ct)  # (TM, Q)
+    l2 = l2_ref[...].astype(ct)  # (1, Q)
+    gv = gv_ref[...].astype(ct)  # (TN, TM) = v * g, zero-padded both axes
+
+    # shared forward tile: blk = psi1 / v; zero-padded gv rows/cols kill
+    # every padded contribution, so no separate pad-weight input is needed
+    _, blk = _psi1_tile(mu, S, z, l2, ct=ct)
+    W1 = gv * blk  # eq. (8) specialized: W1 = g1 . psi1
+    dmu_c, ds_c, dz_c, dvraw_c, dl_c = _psi1_bwd_tile(mu, S, z, l2, W1, ct=ct)
+
+    @pl.when(i == 0)
+    def _():
+        dmu_ref[...] = dmu_c
+        ds_ref[...] = ds_c
+
+    @pl.when(i > 0)
+    def _():
+        dmu_ref[...] += dmu_c
+        ds_ref[...] += ds_c
+
+    @pl.when(jnp.logical_and(kn == 0, i == 0))
+    def _():
+        dz_ref[...] = jnp.zeros(dz_ref.shape, ct)
+        dvraw_ref[...] = jnp.zeros(dvraw_ref.shape, ct)
+        dl_ref[...] = jnp.zeros(dl_ref.shape, ct)
+
+    dz_ref[pl.dslice(i * tile_m, tile_m), :] += dz_c
+    dvraw_ref[...] += dvraw_c
+    dl_ref[...] += dl_c
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def psi1_bwd_pallas(mu, S, Z, variance, lengthscale, g, *,
+                    interpret: bool = False):
+    """Pallas reverse pass of ``psi1 = psi1_pallas(...)``.
+
+    Returns cotangents ``(dmu, dS, dZ, dvariance, dlengthscale)`` given the
+    output cotangent ``g (N, M)``. Grid (kn, i): per-datapoint blocks
+    (dmu, dS) accumulate the inducing tiles in place, the global cotangents
+    (dZ, dvariance, dlengthscale) live in constant-index VMEM-resident
+    blocks — the fused reverse kernel's scheme with the psi2 branch removed.
+    v is folded into the cotangent (gv = v * g) so it never enters the
+    kernel; the raw variance weight sum W1 is divided by v here (eq. (13)).
+    Interpret-mode dtype policy matches the single-statistic forwards:
+    computes in the input dtype promoted to at least f32.
+    """
+    N, Q = mu.shape
+    M = Z.shape[0]
+    ct = jnp.promote_types(mu.dtype, jnp.float32) if interpret else jnp.float32
+    pad_n = (-N) % TILE_N
+    pad_m = (-M) % TILE_M
+    mu_p = jnp.pad(mu.astype(ct), ((0, pad_n), (0, 0)))
+    S_p = jnp.pad(S.astype(ct), ((0, pad_n), (0, 0)), constant_values=1.0)
+    Z_p = jnp.pad(Z.astype(ct), ((0, pad_m), (0, 0)))
+    l2 = (lengthscale.astype(ct) ** 2)[None, :]
+    v = variance.astype(ct)
+    gv = jnp.pad(v * g.astype(ct), ((0, pad_n), (0, pad_m)))
+
+    Np = mu_p.shape[0]
+    Mp = Z_p.shape[0]
+    grid = (Np // TILE_N, Mp // TILE_M)
+    dmu, dS, dZ, dvraw, dl = pl.pallas_call(
+        functools.partial(_psi1_bwd_kernel, tile_m=TILE_M, ct=ct),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, Q), lambda kn, i: (kn, 0)),  # mu
+            pl.BlockSpec((TILE_N, Q), lambda kn, i: (kn, 0)),  # S
+            pl.BlockSpec((TILE_M, Q), lambda kn, i: (i, 0)),  # Z
+            pl.BlockSpec((1, Q), lambda kn, i: (0, 0)),  # l^2
+            pl.BlockSpec((TILE_N, TILE_M), lambda kn, i: (kn, i)),  # v * g
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_N, Q), lambda kn, i: (kn, 0)),  # dmu
+            pl.BlockSpec((TILE_N, Q), lambda kn, i: (kn, 0)),  # dS
+            pl.BlockSpec((Mp, Q), lambda kn, i: (0, 0)),  # dZ (resident)
+            pl.BlockSpec((1, 1), lambda kn, i: (0, 0)),  # dv_raw
+            pl.BlockSpec((1, Q), lambda kn, i: (0, 0)),  # dl
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, Q), ct),
+            jax.ShapeDtypeStruct((Np, Q), ct),
+            jax.ShapeDtypeStruct((Mp, Q), ct),
+            jax.ShapeDtypeStruct((1, 1), ct),
+            jax.ShapeDtypeStruct((1, Q), ct),
+        ],
+        interpret=interpret,
+    )(mu_p, S_p, Z_p, l2, gv)
+    return (dmu[:N].astype(mu.dtype), dS[:N].astype(S.dtype),
+            dZ[:M].astype(Z.dtype), (dvraw[0, 0] / v).astype(variance.dtype),
+            dl[0].astype(lengthscale.dtype))
+
+
+def kfu_bwd_pallas(X, Z, variance, lengthscale, g, *, interpret: bool = False):
+    """Pallas reverse pass of ``Kfu = kfu_pallas(...)``: the S -> 0
+    specialization of the psi1 reverse kernel (K_fu is psi1 with zero
+    latent variance; suffstats_vjp.md §"Exact statistics"). Returns
+    ``(dX, dZ, dvariance, dlengthscale)``."""
+    dX, _, dZ, dv, dl = psi1_bwd_pallas(X, jnp.zeros_like(X), Z, variance,
+                                        lengthscale, g, interpret=interpret)
+    return dX, dZ, dv, dl
+
+
+def _psi2_bwd_kernel(mu_ref, s_ref, w_ref, z1_ref, z2_ref, l2_ref, g2p_ref,
+                     dmu_ref, ds_ref, dz_ref, dvraw_ref, dl_ref,
+                     *, tile_m, ct=jnp.float32):
+    kn = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    first_mm = jnp.logical_and(i == 0, j == 0)
+
+    mu = mu_ref[...].astype(ct)  # (TN, Q)
+    S = s_ref[...].astype(ct)
+    w = w_ref[...].astype(ct)  # (TN, 1)
+    z1 = z1_ref[...].astype(ct)  # (TM, Q)
+    z2 = z2_ref[...].astype(ct)
+    l2 = l2_ref[...].astype(ct)  # (1, Q)
+    g2p = g2p_ref[...].astype(ct)  # (TM, TM) = g2 * v^2 exp(zterm), padded 0
+
+    # the fused kernel's psi2 branch, verbatim: same shared helpers
+    _, E = _psi2_tile(mu, S, z1, z2, l2, ct=ct)
+    T = g2p[None, :, :] * E * w[:, :, None]  # (TN, TM, TM)  eq. (9)
+    dmu_c, ds_c, dz_i, dz_j, dvraw_c, dl_c = _psi2_bwd_tile(
+        mu, S, z1, z2, l2, T, ct=ct)
+
+    @pl.when(first_mm)
+    def _():
+        dmu_ref[...] = dmu_c
+        ds_ref[...] = ds_c
+
+    @pl.when(jnp.logical_not(first_mm))
+    def _():
+        dmu_ref[...] += dmu_c
+        ds_ref[...] += ds_c
+
+    @pl.when(jnp.logical_and(kn == 0, first_mm))
+    def _():
+        dz_ref[...] = jnp.zeros(dz_ref.shape, ct)
+        dvraw_ref[...] = jnp.zeros(dvraw_ref.shape, ct)
+        dl_ref[...] = jnp.zeros(dl_ref.shape, ct)
+
+    dz_ref[pl.dslice(i * tile_m, tile_m), :] += dz_i
+    dz_ref[pl.dslice(j * tile_m, tile_m), :] += dz_j
+    dvraw_ref[...] += dvraw_c
+    dl_ref[...] += dl_c
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def psi2_bwd_pallas(mu, S, Z, variance, lengthscale, g2, *,
+                    interpret: bool = False):
+    """Pallas reverse pass of ``psi2 = psi2_pallas(...)``.
+
+    Returns cotangents ``(dmu, dS, dZ, dvariance, dlengthscale)`` given the
+    output cotangent ``g2 (M, M)``. This is `suffstats_bwd_pallas` with the
+    psi1/psiY branch removed: same grid (kn, i, j), same per-datapoint /
+    VMEM-resident output split, same folded prefactor
+    G2p = g2 * v^2 exp(zterm) (eq. (9)) padded with zeros. Interpret-mode
+    dtype policy matches the single-statistic forwards.
+    """
+    N, Q = mu.shape
+    M = Z.shape[0]
+    ct = jnp.promote_types(mu.dtype, jnp.float32) if interpret else jnp.float32
+    pad_n = (-N) % TILE_N
+    pad_m = (-M) % TILE_M
+    mu_p = jnp.pad(mu.astype(ct), ((0, pad_n), (0, 0)))
+    S_p = jnp.pad(S.astype(ct), ((0, pad_n), (0, 0)), constant_values=1.0)
+    w = jnp.pad(jnp.ones((N, 1), ct), ((0, pad_n), (0, 0)))
+    Z_p = jnp.pad(Z.astype(ct), ((0, pad_m), (0, 0)))
+    l2 = (lengthscale.astype(ct) ** 2)[None, :]
+    v = variance.astype(ct)
+
+    zs = Z.astype(ct) / lengthscale.astype(ct)
+    zn = jnp.sum(zs * zs, -1)
+    d2 = jnp.maximum(zn[:, None] + zn[None, :] - 2.0 * zs @ zs.T, 0.0)
+    g2p = jnp.pad(g2.astype(ct) * v**2 * jnp.exp(-0.25 * d2),
+                  ((0, pad_m), (0, pad_m)))
+
+    Np = mu_p.shape[0]
+    Mp = Z_p.shape[0]
+    grid = (Np // TILE_N, Mp // TILE_M, Mp // TILE_M)
+    dmu, dS, dZ, dvraw, dl = pl.pallas_call(
+        functools.partial(_psi2_bwd_kernel, tile_m=TILE_M, ct=ct),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # mu
+            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # S
+            pl.BlockSpec((TILE_N, 1), lambda kn, i, j: (kn, 0)),  # w
+            pl.BlockSpec((TILE_M, Q), lambda kn, i, j: (i, 0)),  # Z (slot a)
+            pl.BlockSpec((TILE_M, Q), lambda kn, i, j: (j, 0)),  # Z (slot b)
+            pl.BlockSpec((1, Q), lambda kn, i, j: (0, 0)),  # l^2
+            pl.BlockSpec((TILE_M, TILE_M), lambda kn, i, j: (i, j)),  # G2p
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # dmu
+            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # dS
+            pl.BlockSpec((Mp, Q), lambda kn, i, j: (0, 0)),  # dZ (resident)
+            pl.BlockSpec((1, 1), lambda kn, i, j: (0, 0)),  # dv_raw
+            pl.BlockSpec((1, Q), lambda kn, i, j: (0, 0)),  # dl
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, Q), ct),
+            jax.ShapeDtypeStruct((Np, Q), ct),
+            jax.ShapeDtypeStruct((Mp, Q), ct),
+            jax.ShapeDtypeStruct((1, 1), ct),
+            jax.ShapeDtypeStruct((1, Q), ct),
+        ],
+        interpret=interpret,
+    )(mu_p, S_p, w, Z_p, Z_p, l2, g2p)
+    return (dmu[:N].astype(mu.dtype), dS[:N].astype(S.dtype),
+            dZ[:M].astype(Z.dtype), (dvraw[0, 0] / v).astype(variance.dtype),
             dl[0].astype(lengthscale.dtype))
 
 
@@ -604,4 +893,114 @@ def suffstats_vjp_jnp(mu, S, Y, Z, variance, lengthscale, g2, gY, *,
     dY = dY_s.reshape(-1, Y.shape[1])[:N]
     return (dmu.astype(mu.dtype), dS.astype(S.dtype), dY.astype(Y.dtype),
             dZ.astype(Z.dtype), dv[0].astype(variance.dtype),
+            dl.astype(lengthscale.dtype))
+
+
+# ---------------------------------------------------------------------------
+# streaming jnp twins of the single-statistic reverse passes
+# ---------------------------------------------------------------------------
+#
+# The off-TPU large-N backward of the kfu/psi1/psi2 ops: the same tile
+# helpers the Pallas reverse kernels call, driven by a lax.scan over N
+# chunks instead of a grid. Per-datapoint cotangents (dmu, dS) leave chunk
+# by chunk; global cotangents (dZ, dvariance, dlengthscale) ride the carry.
+# Peak live memory is O(chunk * M) for psi1/kfu and O(chunk * M^2) for
+# psi2 — never an (N, M, Q) reference-formula residual.
+
+def psi1_vjp_jnp(mu, S, Z, variance, lengthscale, g, *, chunk: int = 512):
+    """Hand-derived VJP of ``psi1 = psi1_rbf(...)`` as a streaming scan.
+
+    Returns cotangents ``(dmu, dS, dZ, dvariance, dlengthscale)`` given the
+    output cotangent ``g (N, M)``.
+    """
+    N, Q = mu.shape
+    M = Z.shape[0]
+    dt = jnp.promote_types(mu.dtype, jnp.float32)
+    v = variance.astype(dt)
+    ls = lengthscale.astype(dt)
+    l2 = (ls**2)[None, :]
+    Zc = Z.astype(dt)
+    pad = (-N) % chunk
+    mu_p = jnp.pad(mu.astype(dt), ((0, pad), (0, 0)))
+    S_p = jnp.pad(S.astype(dt), ((0, pad), (0, 0)), constant_values=1.0)
+    # zero-padded cotangent rows kill every padded contribution (eq. (8))
+    gv_p = jnp.pad(v * g.astype(dt), ((0, pad), (0, 0)))
+    k = (N + pad) // chunk
+    xs = (mu_p.reshape(k, chunk, Q), S_p.reshape(k, chunk, Q),
+          gv_p.reshape(k, chunk, M))
+
+    def body(carry, x):
+        dZ_a, dv_a, dl_a = carry
+        mu_i, S_i, gv_i = x
+        _, blk = _psi1_tile(mu_i, S_i, Zc, l2, ct=dt)  # psi1 / v
+        W1 = gv_i * blk  # eq. (8) specialized: W1 = g1 . psi1
+        dmu_i, dS_i, dz_c, dvraw_c, dl_c = _psi1_bwd_tile(
+            mu_i, S_i, Zc, l2, W1, ct=dt)
+        return (dZ_a + dz_c, dv_a + dvraw_c[None], dl_a + dl_c[0]), \
+            (dmu_i, dS_i)
+
+    vma = 0.0 * mu_p[0, 0]
+    # dvariance rides the carry as (1,) — see suffstats_vjp_jnp
+    carry0 = (jnp.zeros((M, Q), dt) + vma, jnp.zeros((1,), dt) + vma,
+              jnp.zeros((Q,), dt) + vma)
+    (dZ, dvraw, dl), (dmu_s, dS_s) = jax.lax.scan(body, carry0, xs)
+    return (dmu_s.reshape(-1, Q)[:N].astype(mu.dtype),
+            dS_s.reshape(-1, Q)[:N].astype(S.dtype),
+            dZ.astype(Z.dtype), (dvraw[0] / v).astype(variance.dtype),
+            dl.astype(lengthscale.dtype))
+
+
+def kfu_vjp_jnp(X, Z, variance, lengthscale, g, *, chunk: int = 512):
+    """Hand-derived VJP of ``Kfu = kfu_rbf(...)``: the S -> 0 specialization
+    of the psi1 twin. Returns ``(dX, dZ, dvariance, dlengthscale)``."""
+    dX, _, dZ, dv, dl = psi1_vjp_jnp(X, jnp.zeros_like(X), Z, variance,
+                                     lengthscale, g, chunk=chunk)
+    return dX, dZ, dv, dl
+
+
+def psi2_vjp_jnp(mu, S, Z, variance, lengthscale, g2, *, chunk: int = 512):
+    """Hand-derived VJP of ``psi2 = psi2_rbf(...)`` as a streaming scan.
+
+    Returns cotangents ``(dmu, dS, dZ, dvariance, dlengthscale)`` given the
+    output cotangent ``g2 (M, M)``. Since z1 == z2 == Z, the two dZ slot
+    contributions of eq. (18) are summed.
+    """
+    N, Q = mu.shape
+    M = Z.shape[0]
+    dt = jnp.promote_types(mu.dtype, jnp.float32)
+    v = variance.astype(dt)
+    ls = lengthscale.astype(dt)
+    l2 = (ls**2)[None, :]
+    Zc = Z.astype(dt)
+    zs = Zc / ls
+    zn = jnp.sum(zs * zs, -1)
+    d2 = jnp.maximum(zn[:, None] + zn[None, :] - 2.0 * zs @ zs.T, 0.0)
+    # fold the (m, m')-only prefactor v^2 exp(zterm) into the cotangent
+    G2p = g2.astype(dt) * v**2 * jnp.exp(-0.25 * d2)  # (M, M)  — eq. (9)
+
+    pad = (-N) % chunk
+    mu_p = jnp.pad(mu.astype(dt), ((0, pad), (0, 0)))
+    S_p = jnp.pad(S.astype(dt), ((0, pad), (0, 0)), constant_values=1.0)
+    w = jnp.pad(jnp.ones((N,), dt), ((0, pad),))
+    k = (N + pad) // chunk
+    xs = (mu_p.reshape(k, chunk, Q), S_p.reshape(k, chunk, Q),
+          w.reshape(k, chunk))
+
+    def body(carry, x):
+        dZ_a, dv_a, dl_a = carry
+        mu_i, S_i, w_i = x
+        _, E = _psi2_tile(mu_i, S_i, Zc, Zc, l2, ct=dt)  # (c, M, M)
+        T = G2p[None, :, :] * E * w_i[:, None, None]  # eq. (9)
+        dmu_i, dS_i, dz_i, dz_j, dvraw_c, dl_c = _psi2_bwd_tile(
+            mu_i, S_i, Zc, Zc, l2, T, ct=dt)
+        return (dZ_a + dz_i + dz_j, dv_a + dvraw_c[None], dl_a + dl_c[0]), \
+            (dmu_i, dS_i)
+
+    vma = 0.0 * mu_p[0, 0]
+    carry0 = (jnp.zeros((M, Q), dt) + vma, jnp.zeros((1,), dt) + vma,
+              jnp.zeros((Q,), dt) + vma)
+    (dZ, dvraw, dl), (dmu_s, dS_s) = jax.lax.scan(body, carry0, xs)
+    return (dmu_s.reshape(-1, Q)[:N].astype(mu.dtype),
+            dS_s.reshape(-1, Q)[:N].astype(S.dtype),
+            dZ.astype(Z.dtype), (dvraw[0] / v).astype(variance.dtype),
             dl.astype(lengthscale.dtype))

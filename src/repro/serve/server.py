@@ -116,14 +116,21 @@ class GPServer:
         return self._entry(name).state
 
     def models(self) -> Tuple[str, ...]:
-        return tuple(sorted(self._models))
+        # iterating the registry unlocked races a concurrent register():
+        # CPython raises "dictionary changed size during iteration" (or
+        # hands back a torn view), so snapshot under the lock
+        with self._registry_lock:
+            return tuple(sorted(self._models))
 
     def _entry(self, name: str) -> _Entry:
-        try:
-            return self._models[name]
-        except KeyError:
+        with self._registry_lock:
+            entry = self._models.get(name)
+        if entry is None:
+            # the error message enumerates the registry via models(), which
+            # re-takes the (non-reentrant) lock — raise outside it
             raise KeyError(
-                f"no model {name!r} registered; have {self.models()}") from None
+                f"no model {name!r} registered; have {self.models()}")
+        return entry
 
     # ------------------------------------------------------------------ #
     # bucketed predict
@@ -213,6 +220,14 @@ class GPServer:
                     return
                 pending = list(self._queue)
                 self._queue.clear()
+            # claim each dequeued future: a caller may have cancel()ed while
+            # the request sat in the queue, and set_result on a cancelled
+            # Future raises InvalidStateError — which would abort delivery
+            # for every later request in the same coalesced group. Marking
+            # the survivors RUNNING here also makes them uncancellable, so
+            # delivery below cannot race another cancel().
+            pending = [r for r in pending
+                       if r.future.set_running_or_notify_cancel()]
             # coalesce by (model, diag, feature-dim, dtype) — mixing dtypes
             # would silently promote the concatenated batch and hand some
             # callers a different dtype than predict() returns; diag=False

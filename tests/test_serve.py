@@ -279,6 +279,71 @@ def test_malformed_requests_rejected_in_caller_and_worker_survives():
                                    rtol=1e-12, atol=1e-14)
 
 
+def test_models_iteration_safe_under_concurrent_register():
+    """Registry reads (`models()` / `state()` lookups) snapshot under the
+    registry lock: a register() storm while another thread iterates must
+    never raise "dictionary changed size during iteration" or hand back a
+    torn view (regression for the unlocked reads)."""
+    gp, X, _ = _fitted_gp(jax.random.PRNGKey(13), steps=5)
+    st = gp.export_state()
+    srv = GPServer()
+    srv.register("base", kernel=gp.kernel, state=st)
+    errs, stop = [], threading.Event()
+
+    def reader():
+        try:
+            while not stop.is_set():
+                names = srv.models()
+                assert "base" in names
+                assert srv.state("base") is not None
+        except Exception as e:  # pragma: no cover - the regression itself
+            errs.append(e)
+
+    readers = [threading.Thread(target=reader) for _ in range(4)]
+    for t in readers:
+        t.start()
+    try:
+        for i in range(300):
+            srv.register(f"m{i}", kernel=gp.kernel, state=st)
+    finally:
+        stop.set()
+        for t in readers:
+            t.join()
+    assert not errs, errs
+    assert len(srv.models()) == 301
+
+
+def test_cancelled_future_does_not_poison_coalesced_group():
+    """A caller cancelling its Future while the request waits in the queue
+    must not break delivery for the rest of the coalesced group: the worker
+    claims each dequeued future (set_running_or_notify_cancel) and skips
+    the cancelled ones (regression for the InvalidStateError abort)."""
+    from concurrent.futures import Future
+
+    from repro.serve.server import _Request
+
+    gp, X, _ = _fitted_gp(jax.random.PRNGKey(14), steps=5)
+    st = gp.export_state()
+    with GPServer() as srv:
+        srv.register("gp", kernel=gp.kernel, state=st)
+        # enqueue a request by hand BEFORE the worker exists, then cancel it:
+        # the next submit() starts the worker, which drains both requests as
+        # one group with the cancelled future first
+        cancelled = Future()
+        with srv._cv:
+            srv._queue.append(_Request("gp", X[:2], True, cancelled))
+        assert cancelled.cancel()
+        live = [srv.submit("gp", X[3 * i: 3 * i + 3]) for i in range(3)]
+        for i, fut in enumerate(live):
+            mean, var = fut.result(timeout=30)  # InvalidStateError poisoned
+            want_mean, want_var = srv.predict("gp", X[3 * i: 3 * i + 3])
+            np.testing.assert_allclose(np.asarray(mean), np.asarray(want_mean),
+                                       rtol=1e-12, atol=1e-14)
+            np.testing.assert_allclose(np.asarray(var), np.asarray(want_var),
+                                       rtol=1e-12, atol=1e-14)
+        assert cancelled.cancelled()
+
+
 def test_server_online_update_shifts_predictions():
     key = jax.random.PRNGKey(9)
     X, Y, Z = _data(key, 300, Q=1, D=1, M=10)
