@@ -1,0 +1,47 @@
+"""Static VMEM budget table per Pallas kernel (BENCH_vmem.json).
+
+Not a timing benchmark: the rows come from `repro.analysis.pallas_audit`,
+which computes each kernel's per-grid-step VMEM residency (double-buffered
+streamed blocks + constant-index resident accumulators + kernel-body
+workspace) straight from the BlockSpecs, without lowering or running
+anything. The table is the input the tile autotuner (ROADMAP item 2) will
+consume when TILE_N/TILE_M stop being hand-picked constants — and the
+committed trajectory future kernel PRs diff their working sets against.
+"""
+from __future__ import annotations
+
+from benchmarks.common import SCHEMA_VERSION, row
+
+
+def run(*, smoke: bool = False):
+    """Returns (csv_rows, json_doc). `smoke` audits at smaller sizes."""
+    from repro.analysis.pallas_audit import (Problem, VMEM_BUDGET_BYTES,
+                                             audit_kernels, vmem_table)
+
+    problem = Problem(N=1024, M=256, Q=2, D=2) if smoke else Problem()
+    audits = audit_kernels(problem=problem)
+    rows = vmem_table(audits)
+    csv = [
+        row(f"vmem_{r['kernel']}", 0.0,
+            f"vmem_mb={r['vmem_estimate_bytes'] / 2**20:.2f},"
+            f"resident_kb={r['resident_bytes'] / 1024:.1f},"
+            f"fits={int(r['fits'])}")
+        for r in rows
+    ]
+    doc = {
+        "meta": {
+            "bench": "vmem",
+            "schema_version": SCHEMA_VERSION,
+            "smoke": bool(smoke),
+            "problem": {"N": problem.N, "M": problem.M,
+                        "Q": problem.Q, "D": problem.D},
+            "vmem_budget_bytes": VMEM_BUDGET_BYTES,
+        },
+        "rows": rows,
+    }
+    return csv, doc
+
+
+if __name__ == "__main__":
+    csv, _ = run(smoke=True)
+    print("\n".join(csv))

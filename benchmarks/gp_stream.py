@@ -10,7 +10,12 @@ Rows time the jitted GP-LVM negative-ELBO (pass="loss", the predict-time
 statistics cost) and its value_and_grad (pass="step", the training step
 cost, timed at the smaller sizes so the full sweep stays minutes-scale),
 plus the exact-path SGPR loss — all chunked, so nothing materializes an
-(N, M) workspace (the peak_intermediate_bytes column is the proof).
+(N, M) workspace. Each row's headline memory signal is its `scaling_class`
+from repro.analysis (the worst intermediate's growth class along N, e.g.
+"O(N)"); the raw `peak_intermediate_bytes` column stays for trajectory
+continuity. Rows whose traced program changes structure between N and 2N
+(the fused op's interpret/jnp dispatch at FUSED_INTERPRET_MAX_N) report
+"n/a(dispatch-boundary)" instead of a class.
 
 Fused "step" rows carry a `bwd_backend` field: the reverse pass of the
 fused op is itself dispatched (Pallas reverse kernel vs streaming jnp scan,
@@ -30,6 +35,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import row, time_call, validate_psi_kernel
+from repro.analysis import AnalysisError, scaling_class
 from repro.core import gplvm
 from repro.data.synthetic import gplvm_synthetic
 from repro.gp import get
@@ -43,7 +49,8 @@ CHUNK = 4096
 BACKENDS = ("jnp", "fused")
 
 
-def _json_row(model, backend, pass_, N, seconds, peak_bytes, bwd_backend=None):
+def _json_row(model, backend, pass_, N, seconds, peak_bytes, cls,
+              bwd_backend=None):
     # the engine chunk only steers the jnp path; the fused/pallas ops stream
     # at their own internal granularity, so their rows must not claim it.
     # bwd_backend is only meaningful for "step" rows of the kernelized
@@ -55,6 +62,7 @@ def _json_row(model, backend, pass_, N, seconds, peak_bytes, bwd_backend=None):
         "bwd_backend": bwd_backend if pass_ == "step" else None,
         "seconds": float(seconds),
         "us_per_point": float(seconds / N * 1e6),
+        "scaling_class": cls,
         "peak_intermediate_bytes": int(peak_bytes),
     }
 
@@ -63,7 +71,13 @@ def _bench(fn, *args, N):
     jfn = jax.jit(fn)
     t = time_call(jfn, *args, warmup=1, iters=1 if N > GRAD_MAX_N else 2)
     peak = peak_intermediate_bytes(fn, *args)
-    return t, peak
+    try:
+        cls = scaling_class(fn, *args, axis="N", sizes={"N": N, "M": M})
+    except AnalysisError:
+        # the trace at 2N crosses a size-dependent dispatch branch (e.g.
+        # FUSED_INTERPRET_MAX_N): no single class describes the row
+        cls = "n/a(dispatch-boundary)"
+    return t, peak, cls
 
 
 def run(sizes=SIZES, kernel_name: str = "rbf", *, smoke: bool = False):
@@ -83,15 +97,15 @@ def run(sizes=SIZES, kernel_name: str = "rbf", *, smoke: bool = False):
         for backend in backends:
             loss = functools.partial(gplvm.loss, kernel=kern, backend=backend,
                                      chunk=CHUNK)
-            t, peak = _bench(loss, params, Y, N=N)
-            rows.append(_json_row("gplvm", backend, "loss", N, t, peak))
+            t, peak, cls = _bench(loss, params, Y, N=N)
+            rows.append(_json_row("gplvm", backend, "loss", N, t, peak, cls))
             csv.append(row(f"gp_stream_gplvm_{backend}_loss_N{N}", t,
                            f"per_point_us={t/N*1e6:.3f},peak_mb={peak/1e6:.1f}"))
             if N <= GRAD_MAX_N:
                 vg = jax.value_and_grad(loss)
-                t, peak = _bench(vg, params, Y, N=N)
+                t, peak, cls = _bench(vg, params, Y, N=N)
                 bwd = "auto" if backend == "fused" else None
-                rows.append(_json_row("gplvm", backend, "step", N, t, peak,
+                rows.append(_json_row("gplvm", backend, "step", N, t, peak, cls,
                                       bwd_backend=bwd))
                 csv.append(row(f"gp_stream_gplvm_{backend}_step_N{N}", t,
                                f"per_point_us={t/N*1e6:.3f},peak_mb={peak/1e6:.1f}"))
@@ -106,8 +120,8 @@ def run(sizes=SIZES, kernel_name: str = "rbf", *, smoke: bool = False):
         gp = SparseGPRegression(kernel=get(kernel_name)(1), M=M, chunk=CHUNK)
         p = gp.init_params(X, Ys)
         loss = gp._loss_fn()
-        t, peak = _bench(loss, p, X, Ys, N=N)
-        rows.append(_json_row("sgpr", "jnp", "loss", N, t, peak))
+        t, peak, cls = _bench(loss, p, X, Ys, N=N)
+        rows.append(_json_row("sgpr", "jnp", "loss", N, t, peak, cls))
         csv.append(row(f"gp_stream_sgpr_jnp_loss_N{N}", t,
                        f"per_point_us={t/N*1e6:.3f},peak_mb={peak/1e6:.1f}"))
 
@@ -123,14 +137,14 @@ def run(sizes=SIZES, kernel_name: str = "rbf", *, smoke: bool = False):
         params = gplvm.init_params(key, np.asarray(Y), Q=Q, M=M, kernel=kern)
         label = "pallas-interpret" if ops.interpret_mode() else "pallas"
         loss = functools.partial(gplvm.loss, kernel=kern, backend="fused")
-        t, peak = _bench(loss, params, Y, N=n_int)
-        rows.append(_json_row("gplvm", label, "loss", n_int, t, peak))
+        t, peak, cls = _bench(loss, params, Y, N=n_int)
+        rows.append(_json_row("gplvm", label, "loss", n_int, t, peak, cls))
         csv.append(row(f"gp_stream_gplvm_{label}_loss_N{n_int}", t,
                        f"per_point_us={t/n_int*1e6:.3f},peak_mb={peak/1e6:.1f}"))
         step = jax.value_and_grad(functools.partial(
             gplvm.loss, kernel=kern, backend="fused", bwd_backend="pallas"))
-        t, peak = _bench(step, params, Y, N=n_int)
-        rows.append(_json_row("gplvm", label, "step", n_int, t, peak,
+        t, peak, cls = _bench(step, params, Y, N=n_int)
+        rows.append(_json_row("gplvm", label, "step", n_int, t, peak, cls,
                               bwd_backend="pallas"))
         csv.append(row(f"gp_stream_gplvm_{label}_step_N{n_int}", t,
                        f"per_point_us={t/n_int*1e6:.3f},peak_mb={peak/1e6:.1f}"))
@@ -146,14 +160,14 @@ def run(sizes=SIZES, kernel_name: str = "rbf", *, smoke: bool = False):
         _, Y = gplvm_synthetic(key, N=n_int, D=D, Q=Q)
         params = gplvm.init_params(key, np.asarray(Y), Q=Q, M=M, kernel=kern)
         loss = functools.partial(gplvm.loss, kernel=kern, backend="pallas")
-        t, peak = _bench(loss, params, Y, N=n_int)
-        rows.append(_json_row("gplvm", label, "loss", n_int, t, peak))
+        t, peak, cls = _bench(loss, params, Y, N=n_int)
+        rows.append(_json_row("gplvm", label, "loss", n_int, t, peak, cls))
         csv.append(row(f"gp_stream_gplvm_{label}_loss_N{n_int}", t,
                        f"per_point_us={t/n_int*1e6:.3f},peak_mb={peak/1e6:.1f}"))
         step = jax.value_and_grad(functools.partial(
             gplvm.loss, kernel=kern, backend="pallas", bwd_backend="pallas"))
-        t, peak = _bench(step, params, Y, N=n_int)
-        rows.append(_json_row("gplvm", label, "step", n_int, t, peak,
+        t, peak, cls = _bench(step, params, Y, N=n_int)
+        rows.append(_json_row("gplvm", label, "step", n_int, t, peak, cls,
                               bwd_backend="pallas"))
         csv.append(row(f"gp_stream_gplvm_{label}_step_N{n_int}", t,
                        f"per_point_us={t/n_int*1e6:.3f},peak_mb={peak/1e6:.1f}"))
@@ -165,8 +179,8 @@ def run(sizes=SIZES, kernel_name: str = "rbf", *, smoke: bool = False):
                                 backend="pallas", bwd_backend="pallas")
         p = gp.init_params(X, Ys)
         step = jax.value_and_grad(gp._loss_fn())
-        t, peak = _bench(step, p, X, Ys, N=n_int)
-        rows.append(_json_row("sgpr", label, "step", n_int, t, peak,
+        t, peak, cls = _bench(step, p, X, Ys, N=n_int)
+        rows.append(_json_row("sgpr", label, "step", n_int, t, peak, cls,
                               bwd_backend="pallas"))
         csv.append(row(f"gp_stream_sgpr_{label}_step_N{n_int}", t,
                        f"per_point_us={t/n_int*1e6:.3f},peak_mb={peak/1e6:.1f}"))

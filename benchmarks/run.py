@@ -1,9 +1,11 @@
 """Benchmark driver: one section per paper table/figure + the roofline table
 + the streaming-engine sweep (BENCH_gp.json) + the serving-latency sweep
-(BENCH_serve.json).
+(BENCH_serve.json) + the static per-kernel VMEM budget table
+(BENCH_vmem.json, from repro.analysis.pallas_audit).
 
     PYTHONPATH=src python -m benchmarks.run [--fast|--smoke] [--only SECTION] \
-        [--out BENCH_gp.json] [--serve-out BENCH_serve.json]
+        [--out BENCH_gp.json] [--serve-out BENCH_serve.json] \
+        [--vmem-out BENCH_vmem.json]
 
 Prints ``name,us_per_call,derived`` CSV rows to stdout. Whenever the
 gp_stream / serve sections run (both default; excluded only by ``--only``
@@ -23,7 +25,7 @@ import pathlib
 import sys
 
 SECTIONS = ("gp_scaling", "indistributable", "psi_kernels", "gp_stream",
-            "serve", "lm_step", "roofline")
+            "serve", "lm_step", "roofline", "analysis")
 
 
 def validate_bench_files(root=None, *, exclude=()) -> list:
@@ -72,13 +74,20 @@ def main() -> None:
                     help="where to write the serving-latency JSON (default: "
                          "BENCH_serve.json, or BENCH_serve.smoke.json under "
                          "--smoke)")
+    ap.add_argument("--vmem-out", default=None,
+                    help="where to write the static VMEM budget table "
+                         "(default: BENCH_vmem.json, or BENCH_vmem.smoke.json "
+                         "under --smoke)")
     args = ap.parse_args()
     if args.out is None:
         args.out = "BENCH_gp.smoke.json" if args.fast else "BENCH_gp.json"
     if args.serve_out is None:
         args.serve_out = "BENCH_serve.smoke.json" if args.fast else "BENCH_serve.json"
+    if args.vmem_out is None:
+        args.vmem_out = "BENCH_vmem.smoke.json" if args.fast else "BENCH_vmem.json"
 
-    overwriting = {pathlib.Path(args.out).name, pathlib.Path(args.serve_out).name}
+    overwriting = {pathlib.Path(args.out).name, pathlib.Path(args.serve_out).name,
+                   pathlib.Path(args.vmem_out).name}
     committed = validate_bench_files(exclude=overwriting)
     print(f"# committed bench files OK: {', '.join(committed) or '(none)'}",
           file=sys.stderr)
@@ -120,6 +129,14 @@ def main() -> None:
     if wanted("roofline"):
         print("# roofline table (from dry-run artifacts)", file=sys.stderr)
         rows += roofline_table.run()
+    vmem_doc = None
+    if wanted("analysis"):
+        from benchmarks import analysis_vmem
+
+        print("# static analysis - per-kernel VMEM budget table",
+              file=sys.stderr)
+        csv, vmem_doc = analysis_vmem.run(smoke=args.fast)
+        rows += csv
     print("\n".join(rows))
 
     if wanted("gp_stream"):
@@ -146,6 +163,11 @@ def main() -> None:
         with open(args.serve_out, "w") as f:
             json.dump(serve_doc, f, indent=1)
         print(f"# wrote {args.serve_out} ({len(serve_doc['rows'])} rows)",
+              file=sys.stderr)
+    if vmem_doc is not None:
+        with open(args.vmem_out, "w") as f:
+            json.dump(vmem_doc, f, indent=1)
+        print(f"# wrote {args.vmem_out} ({len(vmem_doc['rows'])} rows)",
               file=sys.stderr)
 
 

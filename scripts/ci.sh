@@ -13,6 +13,14 @@ python -m pytest -x -q
 echo "== docs check (links resolve, docs/api.md symbols import) =="
 python scripts/check_docs.py
 
+echo "== static analysis (lint + pallas audit + jaxpr-check smoke) =="
+# the three repro.analysis passes: AST lint rules ANL001-ANL004 over
+# src/repro, the per-kernel VMEM/tiling/dtype audit of every registered
+# Pallas kernel, and the scaling-class check on the quickstart SGPR loss
+# (no intermediate in value_and_grad may reach O(N*M)). Non-zero exit on
+# any finding.
+python -m repro.analysis --all
+
 echo "== quickstart (sparse GP regression, facade) =="
 python examples/quickstart.py --steps 150
 
@@ -45,7 +53,7 @@ import os
 doc = json.load(open(os.environ["SMOKE_BENCH"]))
 rows = doc["rows"]
 required = {"model", "backend", "pass", "N", "seconds", "us_per_point",
-            "peak_intermediate_bytes", "bwd_backend"}
+            "scaling_class", "peak_intermediate_bytes", "bwd_backend"}
 assert rows, "BENCH_gp.json has no rows"
 assert all(required <= set(r) for r in rows), "BENCH_gp.json rows malformed"
 assert {r["backend"] for r in rows} >= {"jnp", "fused"}, "missing backend rows"
@@ -75,6 +83,24 @@ assert any(r.get("op") == "derived" and r.get("name") == "speedup_vs_facade"
 assert any(r.get("op") == "update" for r in rows), "missing update rows"
 assert any(r.get("op") == "submit" for r in rows), "missing submit rows"
 print(f"serve smoke JSON OK ({len(rows)} rows)")
+PY
+
+echo "== benchmark harness (static VMEM budget table, smoke mode) =="
+VMEM_BENCH="$(mktemp -t BENCH_vmem_smoke.XXXXXX.json)"
+python -m benchmarks.run --smoke --only analysis --vmem-out "$VMEM_BENCH" > /dev/null
+VMEM_BENCH="$VMEM_BENCH" python - <<'PY'
+import json
+import os
+
+doc = json.load(open(os.environ["VMEM_BENCH"]))
+rows = doc["rows"]
+from repro.analysis.pallas_audit import KERNELS
+assert [r["kernel"] for r in rows] == list(KERNELS), rows
+assert all(r["fits"] and not r["findings"] for r in rows), rows
+required = {"grid", "ct", "blocks", "streamed_bytes", "resident_bytes",
+            "body_workspace_bytes", "vmem_estimate_bytes", "vmem_budget_bytes"}
+assert all(required <= set(r) for r in rows), "vmem rows malformed"
+print(f"vmem smoke JSON OK ({len(rows)} rows)")
 PY
 
 echo "CI OK"

@@ -1,0 +1,59 @@
+"""repro.analysis — static analysis for the scaling claims the tests assert.
+
+Three passes, runnable as a library, as a CLI (``python -m repro.analysis``),
+and as the "static analysis" lane in ``scripts/ci.sh``:
+
+* :mod:`repro.analysis.jaxpr_check` — traces a function at two problem
+  sizes and classifies every intermediate's scaling class along an axis
+  (O(1), O(N), O(N*M), ...). `assert_no_scaling` is the single statement of
+  the paper's memory guarantee ("no grad-path intermediate grows like
+  N*M") that the per-test byte thresholds used to approximate.
+* :mod:`repro.analysis.pallas_audit` — per-kernel VMEM residency, tile
+  divisibility, index-map bounds and dtype-promotion-rule checks computed
+  from the BlockSpecs without lowering anything; feeds BENCH_vmem.json.
+* :mod:`repro.analysis.lint` — AST rules ANL001-ANL004 for the invariants
+  earlier PRs fixed by hand (call-time platform dispatch, locked registry
+  access, bwd_backend-only VJP registration, no literal kernel dtypes).
+"""
+from repro.analysis.jaxpr_check import (
+    AnalysisError,
+    Intermediate,
+    ScalingReport,
+    ScalingViolation,
+    assert_no_scaling,
+    scaling_class,
+    scaling_report,
+    trace_intermediates,
+)
+from repro.analysis.lint import LintFinding, RULES, lint_paths, lint_source
+from repro.analysis.pallas_audit import (
+    AuditFinding,
+    KernelAudit,
+    Problem,
+    VMEM_BUDGET_BYTES,
+    audit_callable,
+    audit_kernels,
+    vmem_table,
+)
+
+__all__ = [
+    "AnalysisError",
+    "Intermediate",
+    "ScalingReport",
+    "ScalingViolation",
+    "assert_no_scaling",
+    "scaling_class",
+    "scaling_report",
+    "trace_intermediates",
+    "LintFinding",
+    "RULES",
+    "lint_paths",
+    "lint_source",
+    "AuditFinding",
+    "KernelAudit",
+    "Problem",
+    "VMEM_BUDGET_BYTES",
+    "audit_callable",
+    "audit_kernels",
+    "vmem_table",
+]

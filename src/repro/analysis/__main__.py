@@ -1,0 +1,114 @@
+"""CLI for the static-analysis passes: ``python -m repro.analysis``.
+
+    python -m repro.analysis --all            # every pass (CI lane)
+    python -m repro.analysis --lint           # AST rules only
+    python -m repro.analysis --pallas-audit   # kernel VMEM/tiling/dtype
+    python -m repro.analysis --jaxpr-check    # scaling smoke on the
+                                              # quickstart SGPR loss
+
+Exit status is the number of failing passes (0 on a clean tree). Findings
+print with file:line so editors can jump to them. Suppress a lint finding
+inline with ``# noqa: ANL00x``; there is deliberately no suppression for
+the pallas audit or the jaxpr check — fix the kernel or widen the stated
+bound instead.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _run_lint(paths=None) -> int:
+    from repro.analysis.lint import lint_paths
+
+    findings = lint_paths(paths or None)
+    for f in findings:
+        print(f.describe())
+    print(f"[lint] {len(findings)} finding(s) across rules ANL001-ANL004")
+    return 1 if findings else 0
+
+
+def _run_pallas_audit(vmem_budget_bytes: int) -> int:
+    from repro.analysis.pallas_audit import audit_kernels
+
+    audits = audit_kernels(vmem_budget_bytes=vmem_budget_bytes)
+    bad = 0
+    for a in audits:
+        status = "ok" if (a.fits and not a.findings) else "FAIL"
+        print(f"[pallas] {a.name:24s} grid={a.grid!s:14s} ct={a.ct} "
+              f"vmem={a.vmem_estimate_bytes / 2**20:6.2f} MiB "
+              f"(budget {a.vmem_budget_bytes / 2**20:.0f} MiB)  {status}")
+        for f in a.findings:
+            print(f"         {f.describe()}")
+            bad += 1
+    print(f"[pallas] {len(audits)} kernel(s) audited, {bad} finding(s)")
+    return 1 if bad else 0
+
+
+def _run_jaxpr_check() -> int:
+    """Scaling smoke on the quickstart model: value_and_grad of the chunked
+    SGPR loss must keep every intermediate strictly below O(N*M)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_check import ScalingViolation, assert_no_scaling
+    from repro.gp import SparseGPRegression, get
+
+    N, M, chunk = 4096, 32, 512
+    key = jax.random.PRNGKey(0)
+    X = jax.random.uniform(key, (N, 1), jnp.float32, -3.0, 3.0)
+    Y = jnp.sin(2.0 * X)
+    gp = SparseGPRegression(kernel=get("rbf")(1), M=M, chunk=chunk)
+    p = gp.init_params(X, Y)
+    try:
+        report = assert_no_scaling(
+            jax.value_and_grad(gp._loss_fn()), p, X, Y,
+            axis="N", worse_than="N*M", sizes={"N": N, "M": M})
+    except ScalingViolation as exc:
+        print(f"[jaxpr] FAIL: {exc}")
+        return 1
+    print(f"[jaxpr] quickstart SGPR value_and_grad: worst intermediate "
+          f"{report.worst_class} — below the O(N*M) bound")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static-analysis passes over the repro tree")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (default when no pass is selected)")
+    ap.add_argument("--lint", action="store_true", help="AST lint rules")
+    ap.add_argument("--pallas-audit", action="store_true",
+                    help="Pallas kernel VMEM/tiling/dtype audit")
+    ap.add_argument("--jaxpr-check", action="store_true",
+                    help="scaling-class smoke on the quickstart SGPR loss")
+    ap.add_argument("--vmem-budget", type=int, default=None, metavar="BYTES",
+                    help="override the per-core VMEM budget for the audit")
+    ap.add_argument("paths", nargs="*", metavar="PATH",
+                    help="restrict the lint pass to these files "
+                         "(default: every .py under src/repro)")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.pallas_audit import VMEM_BUDGET_BYTES
+
+    budget = args.vmem_budget or VMEM_BUDGET_BYTES
+    chosen = args.lint or args.pallas_audit or args.jaxpr_check
+    run_all = args.all or not chosen
+
+    failures = 0
+    if run_all or args.lint:
+        failures += _run_lint(args.paths)
+    if run_all or args.pallas_audit:
+        failures += _run_pallas_audit(budget)
+    if run_all or args.jaxpr_check:
+        failures += _run_jaxpr_check()
+    if failures:
+        print(f"static analysis: {failures} pass(es) failed")
+    else:
+        print("static analysis: all passes clean")
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

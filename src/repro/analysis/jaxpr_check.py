@@ -1,0 +1,359 @@
+"""Jaxpr invariant checker: classify every intermediate's scaling class.
+
+The streaming engine's whole contract — "no grad path materializes an
+O(N * M) intermediate" — was enforced by `launch.memory.peak_intermediate_bytes`
+plus a hand-computed byte threshold copy-pasted into four test files. The
+threshold form has two failure modes: the constant silently encodes N, M and
+itemsize (change any and the bound means something else), and a buffer that
+scales badly but starts small sails under it.
+
+This module states the invariant the way the code means it: trace the
+function at TWO problem sizes (N and factor * N, traces only — nothing
+executes), pair the jaxprs equation by equation (same program, same trace,
+so the structure is identical and only shapes differ), and read each
+intermediate's growth exponent off the size ratio. An (N, M) buffer is then
+not "more than 52428800 bytes" but "scaling class O(N * M)" — independent of
+the sizes the test happened to pick.
+
+Entry points:
+
+  * `scaling_report(fn, *args, axis="N", sizes=...)` — every intermediate
+    with its scaling class, largest class first.
+  * `assert_no_scaling(fn, *args, axis="N", worse_than="N*M", sizes=...)` —
+    raise `ScalingViolation` (with the offending primitive and source line)
+    if any intermediate reaches the named class within `margin`.
+  * `trace_intermediates(fn, *args)` — the single-trace walk
+    `launch.memory` now wraps for backward compatibility.
+
+The walk recurses into every sub-jaxpr held by an equation's params —
+list/tuple-valued AND dict-valued (scan/cond/pjit/remat/custom_vjp bodies),
+closing the analyzer blind spot the old `launch.memory` walker had.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "AnalysisError",
+    "ScalingViolation",
+    "Intermediate",
+    "ScalingReport",
+    "trace_intermediates",
+    "scaling_report",
+    "scaling_class",
+    "assert_no_scaling",
+    "sub_jaxprs",
+]
+
+
+class AnalysisError(RuntimeError):
+    """The analyzer itself cannot proceed (e.g. the traced program changed
+    structure between the two problem sizes — a size-dependent dispatch
+    branch sits between them; pick sizes on the same side of it)."""
+
+
+class ScalingViolation(AssertionError):
+    """An intermediate reached a forbidden scaling class."""
+
+    def __init__(self, message: str, violations: Sequence["Intermediate"]):
+        super().__init__(message)
+        self.violations = list(violations)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+def sub_jaxprs(val: Any) -> Iterable[Any]:
+    """Yield every (raw) jaxpr reachable from one eqn param value.
+
+    Handles ClosedJaxpr, raw Jaxpr, and list/tuple/dict containers of
+    either — dict-valued params (e.g. custom_vjp's bwd mapping) were the
+    blind spot of the pre-analysis walker.
+    """
+    if hasattr(val, "jaxpr"):  # ClosedJaxpr
+        yield val.jaxpr
+    elif hasattr(val, "eqns"):  # raw Jaxpr
+        yield val
+    elif isinstance(val, (list, tuple)):
+        for item in val:
+            yield from sub_jaxprs(item)
+    elif isinstance(val, dict):
+        for item in val.values():
+            yield from sub_jaxprs(item)
+
+
+def _source_line(eqn) -> str:
+    try:
+        from jax._src import source_info_util
+
+        return source_info_util.summarize(eqn.source_info)
+    except Exception:  # pragma: no cover - jax-internal API drift
+        return "<unknown>"
+
+
+def _collect(jaxpr, out: List[Tuple[Any, Any]]) -> None:
+    """Append (aval, eqn) for every equation output, depth-first in trace
+    order — the order is what lets two traces of the same program at
+    different sizes be paired index by index."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape") and hasattr(aval, "dtype"):
+                out.append((aval, eqn))
+        for val in eqn.params.values():
+            for sub in sub_jaxprs(val):
+                _collect(sub, out)
+
+
+def trace_intermediates(fn: Callable, *args, **kwargs) -> List[Tuple[Tuple[int, ...], str, int, str, str]]:
+    """One-trace walk: [(shape, dtype, nbytes, primitive, source)] for every
+    equation output of ``fn(*args, **kwargs)``. Traces only — never executes."""
+    import jax
+
+    closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    pairs: List[Tuple[Any, Any]] = []
+    _collect(closed.jaxpr, pairs)
+    return [(tuple(a.shape), str(a.dtype), int(a.size) * a.dtype.itemsize,
+             eqn.primitive.name, _source_line(eqn)) for a, eqn in pairs]
+
+
+# ---------------------------------------------------------------------------
+# two-size scaling classification
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Intermediate:
+    """One equation output with its scaling class along the grown axis."""
+
+    shape: Tuple[int, ...]
+    dtype: str
+    nbytes: int
+    primitive: str
+    source: str
+    growth_exp: int  # p in elements ~ coeff * axis^p
+    coeff: float     # elements / axis^p at the base size
+    label: str       # human class label, e.g. "O(N*M)"
+
+    def describe(self) -> str:
+        return (f"{self.label:<12} {self.shape!s:<20} {self.dtype:<8} "
+                f"{self.nbytes / 1e6:>10.2f} MB  {self.primitive}  "
+                f"[{self.source}]")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalingReport:
+    """Deduplicated intermediates of one traced function, worst class first."""
+
+    axis: str
+    axis_size: int
+    sizes: Dict[str, int]
+    entries: Tuple[Intermediate, ...]
+
+    @property
+    def worst(self) -> Optional[Intermediate]:
+        return self.entries[0] if self.entries else None
+
+    @property
+    def worst_class(self) -> str:
+        return self.entries[0].label if self.entries else "O(1)"
+
+    def format(self, top: int = 10) -> str:
+        head = (f"scaling report along axis {self.axis!r} "
+                f"({self.axis} = {self.axis_size}, "
+                f"{', '.join(f'{k} = {v}' for k, v in self.sizes.items() if k != self.axis)})")
+        lines = [e.describe() for e in self.entries[:top]]
+        return "\n".join([head] + lines)
+
+
+def _class_label(axis: str, exp: int, coeff: float,
+                 sizes: Dict[str, int]) -> str:
+    """Express the per-axis coefficient through the named sizes: coeff ~ M
+    becomes "O(N*M)", coeff ~ M*Q becomes "O(N*M*Q)". Falls back to the
+    numeric coefficient when no product of named sizes is within 2x."""
+    axis_part = [] if exp == 0 else [axis if exp == 1 else f"{axis}^{exp}"]
+    if exp == 0 and coeff <= 2.0:
+        return "O(1)"
+    # candidate products of the non-axis named sizes, powers 0..2 each
+    names = [(k, v) for k, v in sizes.items() if k != axis and v > 1]
+    best: Tuple[float, List[str]] = (abs(math.log(max(coeff, 1.0))), [])
+    for mask in range(3 ** len(names)):
+        prod, parts, m = 1.0, [], mask
+        for name, value in names:
+            power, m = m % 3, m // 3
+            if power:
+                prod *= value ** power
+                parts.append(name if power == 1 else f"{name}^{power}")
+        err = abs(math.log(max(coeff, 1.0) / prod))
+        if err < best[0] - 1e-9:
+            best = (err, parts)
+    if best[0] <= math.log(2.0):
+        parts = axis_part + best[1]
+        return "O(" + ("*".join(parts) or "1") + ")"
+    if exp == 0:
+        return f"O({coeff:.0f})"
+    return "O(" + "*".join(axis_part + [f"{coeff:.0f}"]) + ")"
+
+
+def _grow_args(args, axis_size: int, factor: int):
+    """Abstract copies of `args` (any pytree of arrays / ShapeDtypeStructs)
+    with every dimension equal to `axis_size` multiplied by `factor`."""
+    import jax
+
+    def grow(leaf):
+        shape = tuple(d * factor if d == axis_size else d for d in leaf.shape)
+        return jax.ShapeDtypeStruct(shape, leaf.dtype)
+
+    return jax.tree_util.tree_map(grow, args)
+
+
+def _abstract_args(args):
+    import jax
+
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.ShapeDtypeStruct(tuple(leaf.shape), leaf.dtype), args)
+
+
+def scaling_report(fn: Callable, *args, axis: str = "N",
+                   sizes: Optional[Dict[str, int]] = None,
+                   factor: int = 2) -> ScalingReport:
+    """Classify every intermediate of ``fn(*args)`` by how it scales along
+    `axis`.
+
+    `sizes` names the problem dimensions, e.g. ``{"N": 1_000_000, "M": 128,
+    "Q": 4}``; it must contain `axis`. The function is traced (never
+    executed) at the given sizes and again with every dimension equal to
+    ``sizes[axis]`` grown by `factor`; each intermediate's growth exponent is
+    read off the per-equation size ratio. Dimensions that coincidentally
+    equal ``sizes[axis]`` would be grown too — use sizes where the streaming
+    axis is unambiguous (it always is at the million-point scales this
+    guards).
+    """
+    import jax
+
+    if sizes is None or axis not in sizes:
+        raise ValueError(
+            f"sizes= must name the grown axis, e.g. sizes={{{axis!r}: <N>, 'M': <M>}}")
+    axis_size = int(sizes[axis])
+    if factor < 2:
+        raise ValueError(f"factor must be >= 2, got {factor}")
+
+    base = _abstract_args(args)
+    grown = _grow_args(args, axis_size, factor)
+    pairs1: List[Tuple[Any, Any]] = []
+    pairs2: List[Tuple[Any, Any]] = []
+    _collect(jax.make_jaxpr(fn)(*base).jaxpr, pairs1)
+    _collect(jax.make_jaxpr(fn)(*grown).jaxpr, pairs2)
+
+    if len(pairs1) != len(pairs2):
+        raise AnalysisError(
+            f"program structure changed between {axis} = {axis_size} and "
+            f"{axis} = {factor * axis_size} ({len(pairs1)} vs {len(pairs2)} "
+            f"intermediates) — a size-dependent dispatch branch sits between "
+            f"the two sizes; pick sizes on the same side of it")
+
+    log_factor = math.log(factor)
+    best: Dict[Tuple[Tuple[int, ...], str, int, float], Intermediate] = {}
+    for (a1, e1), (a2, e2) in zip(pairs1, pairs2):
+        if e1.primitive.name != e2.primitive.name:
+            raise AnalysisError(
+                f"program structure changed between the two sizes: "
+                f"{e1.primitive.name} vs {e2.primitive.name} at the same "
+                f"trace position")
+        s1 = max(int(a1.size), 1)
+        s2 = max(int(a2.size), 1)
+        exp = max(int(round(math.log(s2 / s1) / log_factor)), 0)
+        coeff = s1 / float(axis_size ** exp)
+        key = (tuple(a1.shape), str(a1.dtype), exp, coeff)
+        if key not in best:
+            best[key] = Intermediate(
+                shape=tuple(a1.shape), dtype=str(a1.dtype),
+                nbytes=int(a1.size) * a1.dtype.itemsize,
+                primitive=e1.primitive.name, source=_source_line(e1),
+                growth_exp=exp, coeff=coeff,
+                label=_class_label(axis, exp, coeff, sizes))
+    entries = sorted(best.values(),
+                     key=lambda e: (e.growth_exp, e.coeff, e.nbytes),
+                     reverse=True)
+    return ScalingReport(axis=axis, axis_size=axis_size, sizes=dict(sizes),
+                         entries=tuple(entries))
+
+
+def scaling_class(fn: Callable, *args, axis: str = "N",
+                  sizes: Optional[Dict[str, int]] = None,
+                  factor: int = 2) -> str:
+    """The worst scaling-class label of ``fn(*args)`` along `axis` — what the
+    benchmark rows report as their headline memory signal."""
+    return scaling_report(fn, *args, axis=axis, sizes=sizes,
+                         factor=factor).worst_class
+
+
+# ---------------------------------------------------------------------------
+# the named-bound assertion the tests state their guarantee through
+# ---------------------------------------------------------------------------
+
+def _parse_bound(worse_than: str, axis: str,
+                 sizes: Dict[str, int]) -> Tuple[int, float]:
+    """Parse "N*M" / "N" / "N^2" / "N*M*Q" into (axis exponent, coefficient
+    in elements). Every non-axis token must be a named size or an integer."""
+    exp, coeff = 0, 1.0
+    for token in worse_than.replace(" ", "").split("*"):
+        if not token:
+            continue
+        name, _, power = token.partition("^")
+        p = int(power) if power else 1
+        if name == axis:
+            exp += p
+        elif name in sizes:
+            coeff *= float(sizes[name]) ** p
+        elif name.isdigit():
+            coeff *= float(name) ** p
+        else:
+            raise ValueError(
+                f"worse_than={worse_than!r} names {name!r}, which is neither "
+                f"the axis {axis!r} nor in sizes={sorted(sizes)}")
+    if exp == 0:
+        raise ValueError(
+            f"worse_than={worse_than!r} must involve the grown axis {axis!r}")
+    return exp, coeff
+
+
+def assert_no_scaling(fn: Callable, *args, axis: str = "N",
+                      worse_than: str = "N*M",
+                      sizes: Optional[Dict[str, int]] = None,
+                      margin: float = 4.0, factor: int = 2,
+                      budget_bytes: Optional[int] = None) -> ScalingReport:
+    """Assert no intermediate of ``fn(*args)`` reaches the scaling class
+    `worse_than` along `axis`.
+
+    An intermediate violates the bound when its growth exponent along `axis`
+    exceeds the bound's, or when it matches the bound's exponent and its
+    per-``axis^p`` coefficient comes within `margin` of the bound's — the
+    default ``margin=4.0`` with ``worse_than="N*M"`` reads "nothing within
+    4x of an (N, M) array", the contract the streaming tests always meant.
+    ``margin < 1`` loosens the bound instead: ``margin=0.5`` allows up to a
+    2x-the-bound buffer (for ops whose OUTPUT cotangent is itself (N, M)).
+
+    `budget_bytes`, when given, additionally caps every intermediate's
+    absolute size regardless of class. Returns the full `ScalingReport` on
+    success so callers can log it.
+    """
+    rep = scaling_report(fn, *args, axis=axis, sizes=sizes, factor=factor)
+    bound_exp, bound_coeff = _parse_bound(worse_than, axis, rep.sizes)
+    violations = [
+        e for e in rep.entries
+        if e.growth_exp > bound_exp
+        or (e.growth_exp == bound_exp and e.coeff * margin >= bound_coeff)
+        or (budget_bytes is not None and e.nbytes > budget_bytes)
+    ]
+    if violations:
+        listing = "\n".join("  " + v.describe() for v in violations[:8])
+        raise ScalingViolation(
+            f"{len(violations)} intermediate(s) reach scaling class "
+            f"O({worse_than}) along {axis} (margin {margin:g}"
+            + (f", budget {budget_bytes / 1e6:.0f} MB" if budget_bytes else "")
+            + f"):\n{listing}",
+            violations)
+    return rep

@@ -1,0 +1,237 @@
+"""AST-based repo lint: the invariants PRs 3-5 fixed by hand, as rules.
+
+Each rule encodes a bug class that actually shipped (and was reverted) in
+this repo's history:
+
+  ANL001  import-time platform dispatch. `jax.devices()` /
+          `jax.default_backend()` at module scope bakes the backend present
+          at import into module state; under `jax.distributed` or test
+          reordering that snapshot is stale. Platform reads must happen at
+          call time (the `interpret_mode()` pattern in `kernels/ops.py`).
+  ANL002  unguarded registry access. `GPServer._models` is shared across
+          serving threads; every read or write outside a
+          `with self._registry_lock:` block races `register()`. (`__init__`
+          is exempt: the instance is not yet published.)
+  ANL003  backward-pass registration outside the dispatcher. Kernel modules
+          must not call `jax.vjp` or register `.defvjp` themselves — the
+          lru-cached op factories in `kernels/ops.py` own custom-VJP wiring
+          so `bwd_backend` dispatch ("pallas" | "reference") stays the only
+          switch. A stray `defvjp` in a kernel file silently shadows it.
+  ANL004  hard-coded compute dtypes in kernel files. Kernel bodies take
+          their dtype from the promotion helpers (`ct = ...`); a literal
+          `dtype=jnp.float32` / `.astype(jnp.float32)` in a kernel file
+          breaks the f64 interpret-mode parity path.
+
+Suppress a finding inline with `# noqa: ANL00x` on the offending line.
+`lint_source` lints a string (used by the seeded-violation fixtures);
+`lint_paths` walks the tree.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["LintFinding", "RULES", "lint_source", "lint_paths"]
+
+RULES: Dict[str, str] = {
+    "ANL001": "import-time platform dispatch (use interpret_mode() / "
+              "call-time jax.devices())",
+    "ANL002": "registry access outside its lock",
+    "ANL003": "backward registration outside the bwd_backend dispatcher",
+    "ANL004": "hard-coded dtype literal in a kernel file",
+}
+
+# platform-reading callables that must not run at import time
+_PLATFORM_CALLS = {"devices", "default_backend", "local_devices",
+                   "process_index", "get_backend"}
+
+# attribute -> lock that must be held (ANL002)
+_GUARDED_ATTRS: Dict[str, str] = {"_models": "_registry_lock"}
+_GUARD_EXEMPT_FUNCS = {"__init__"}
+
+# files whose ANL003/ANL004 rules apply (path match, forward slashes)
+_KERNEL_DIR = "repro/kernels/"
+_DISPATCH_OWNER = "repro/kernels/ops.py"
+
+# dtype-literal names a kernel file must not hard-code (ANL004)
+_DTYPE_LITERALS = {"float16", "bfloat16", "float32", "float64",
+                   "int8", "int16", "int32", "int64"}
+
+_NOQA = re.compile(r"#\s*noqa:\s*(ANL\d{3}(?:\s*,\s*ANL\d{3})*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def describe(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+def _noqa_codes(source_lines: Sequence[str], line: int) -> Set[str]:
+    if 1 <= line <= len(source_lines):
+        m = _NOQA.search(source_lines[line - 1])
+        if m:
+            return {c.strip() for c in m.group(1).split(",")}
+    return set()
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.devices' for Attribute/Name chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_dtype_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value in _DTYPE_LITERALS
+    dotted = _dotted(node)
+    return bool(dotted) and dotted.rsplit(".", 1)[-1] in _DTYPE_LITERALS
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, relpath: str):
+        self.relpath = relpath
+        self.findings: List[LintFinding] = []
+        self._func_depth = 0
+        self._func_names: List[str] = []
+        self._locks_held: List[str] = []
+        self._in_kernel_file = (
+            _KERNEL_DIR in relpath and not relpath.endswith("ops.py"))
+        self._in_promotion_helper = 0
+
+    def _add(self, node: ast.AST, code: str, message: str) -> None:
+        self.findings.append(LintFinding(
+            self.relpath, getattr(node, "lineno", 0), code, message))
+
+    # -- scope tracking ----------------------------------------------------
+    def _visit_func(self, node) -> None:
+        self._func_depth += 1
+        self._func_names.append(node.name)
+        promo = "promote" in node.name or node.name == "_compute_dtype"
+        self._in_promotion_helper += promo
+        self.generic_visit(node)
+        self._in_promotion_helper -= promo
+        self._func_names.pop()
+        self._func_depth -= 1
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self._func_depth += 1
+        self.generic_visit(node)
+        self._func_depth -= 1
+
+    def visit_With(self, node: ast.With) -> None:
+        held = []
+        for item in node.items:
+            dotted = _dotted(item.context_expr)
+            if dotted:
+                held.append(dotted.rsplit(".", 1)[-1])
+        self._locks_held.extend(held)
+        self.generic_visit(node)
+        if held:
+            del self._locks_held[-len(held):]
+
+    # -- rules -------------------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func) or ""
+        leaf = dotted.rsplit(".", 1)[-1]
+
+        # ANL001: platform read at module scope
+        if (self._func_depth == 0 and dotted.startswith("jax")
+                and leaf in _PLATFORM_CALLS):
+            self._add(node, "ANL001",
+                      f"`{dotted}()` runs at import time; platform dispatch "
+                      f"must be read at call time (see interpret_mode())")
+
+        # ANL003: backward registration outside kernels/ops.py
+        if self._in_kernel_file:
+            if leaf == "defvjp":
+                self._add(node, "ANL003",
+                          "custom-VJP registration belongs to the op "
+                          "factories in kernels/ops.py (bwd_backend "
+                          "dispatch), not individual kernel files")
+            elif dotted == "jax.vjp":
+                self._add(node, "ANL003",
+                          "direct jax.vjp of a reference implementation "
+                          "bypasses bwd_backend dispatch; register the "
+                          "backward through kernels/ops.py")
+
+        # ANL004: literal dtype= kwarg / .astype(literal) in kernel files
+        if self._in_kernel_file and not self._in_promotion_helper:
+            for kw in node.keywords:
+                if kw.arg == "dtype" and _is_dtype_literal(kw.value):
+                    self._add(node, "ANL004",
+                              "hard-coded dtype= literal; take the compute "
+                              "dtype from the promotion helper (ct)")
+            if leaf == "astype" and node.args and _is_dtype_literal(
+                    node.args[0]):
+                self._add(node, "ANL004",
+                          "hard-coded .astype(<literal>); take the compute "
+                          "dtype from the promotion helper (ct)")
+
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        # ANL002: self.<guarded attr> outside `with self.<lock>:`
+        lock = _GUARDED_ATTRS.get(node.attr)
+        if (lock is not None
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+                and lock not in self._locks_held
+                and not (self._func_names
+                         and self._func_names[-1] in _GUARD_EXEMPT_FUNCS)):
+            self._add(node, "ANL002",
+                      f"`self.{node.attr}` accessed outside "
+                      f"`with self.{lock}:` — the registry is shared across "
+                      f"serving threads")
+        self.generic_visit(node)
+
+
+def lint_source(source: str, relpath: str) -> List[LintFinding]:
+    """Lint one module's source text. `relpath` selects which rules apply
+    (kernel-file rules key off the path) and is reported in findings."""
+    relpath = relpath.replace("\\", "/")
+    try:
+        tree = ast.parse(source, filename=relpath)
+    except SyntaxError as exc:
+        return [LintFinding(relpath, exc.lineno or 0, "ANL000",
+                            f"syntax error: {exc.msg}")]
+    visitor = _Visitor(relpath)
+    visitor.visit(tree)
+    lines = source.splitlines()
+    return [f for f in visitor.findings
+            if f.code not in _noqa_codes(lines, f.line)]
+
+
+def lint_paths(paths: Optional[Iterable[pathlib.Path]] = None,
+               root: Optional[pathlib.Path] = None) -> List[LintFinding]:
+    """Lint a set of files (default: every .py under src/repro)."""
+    if root is None:
+        root = pathlib.Path(__file__).resolve().parents[2]
+    if paths is None:
+        paths = sorted((root / "repro").rglob("*.py"))
+    findings: List[LintFinding] = []
+    for path in paths:
+        resolved = pathlib.Path(path).resolve()
+        try:
+            rel = str(resolved.relative_to(root))
+        except ValueError:  # outside src/ (e.g. a fixture): report as given
+            rel = str(path)
+        findings.extend(lint_source(
+            resolved.read_text(encoding="utf-8"), rel))
+    return findings

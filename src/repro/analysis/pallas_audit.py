@@ -1,0 +1,494 @@
+"""Pallas kernel auditor: static VMEM / tiling / dtype checks per kernel.
+
+Every Pallas kernel in `repro.kernels` makes three promises it can only
+keep structurally:
+
+  * its per-grid-step VMEM working set — streamed blocks (double-buffered
+    by the pipeline), constant-index blocks that stay RESIDENT across the
+    whole grid (the reverse kernels' dZ/dvariance/dlengthscale
+    accumulators), and the kernel-body workspace — fits the ~16 MB/core
+    VMEM budget;
+  * every operand it receives is padded to a tile multiple and every
+    BlockSpec index map stays inside the padded array;
+  * its compute dtype follows the documented promotion rule — float32 when
+    compiled, max(input dtype, float32) in interpret mode — and never
+    silently downcasts an f64 parity path.
+
+This module checks all three WITHOUT running (or even lowering) a kernel:
+`pl.pallas_call` is temporarily swapped for a recorder and each wrapper is
+traced with `jax.eval_shape`, which hands us the real grid, BlockSpecs,
+padded operand shapes and the kernel body's bound compute dtype. The body
+workspace is estimated from the kernel jaxpr that a (separate, unmocked)
+interpret-mode trace embeds in the `pallas_call` equation, walked with the
+same machinery as `repro.analysis.jaxpr_check`.
+
+The per-kernel budget rows (`vmem_table`) are written to BENCH_vmem.json by
+`benchmarks/run.py --only analysis` — the table the tile autotuner
+(ROADMAP item 2) will consume when block sizes stop being hand-picked
+constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.jaxpr_check import sub_jaxprs
+
+__all__ = [
+    "Problem",
+    "AuditFinding",
+    "BlockInfo",
+    "KernelAudit",
+    "KERNELS",
+    "VMEM_BUDGET_BYTES",
+    "capture_pallas_calls",
+    "audit_callable",
+    "audit_kernels",
+    "vmem_table",
+]
+
+# ~16 MB of VMEM per TPU core (see the Pallas TPU guide's memory hierarchy).
+VMEM_BUDGET_BYTES = 16 * 2 ** 20
+
+# Cap on exhaustive grid enumeration for the index-map checks; beyond it
+# only the corner points are evaluated.
+_MAX_GRID_POINTS = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """Representative problem sizes the kernels are audited at. Multi-tile
+    in both N and M so index maps and accumulator residency are exercised."""
+
+    N: int = 4096
+    M: int = 256
+    Q: int = 4
+    D: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditFinding:
+    kernel: str
+    code: str  # VMEM001 | TILE001 | IDX001 | DTYPE001
+    message: str
+
+    def describe(self) -> str:
+        return f"{self.kernel}: {self.code} {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockInfo:
+    kind: str  # "in" | "out"
+    pos: int
+    block_shape: Tuple[int, ...]
+    dtype: str
+    nbytes: int
+    resident: bool  # constant index map: lives in VMEM for the whole grid
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelAudit:
+    """The compiled-path (float32) VMEM/tiling view of one kernel, plus the
+    dtype-rule findings gathered across every audited input dtype."""
+
+    name: str
+    grid: Tuple[int, ...]
+    ct: str
+    blocks: Tuple[BlockInfo, ...]
+    streamed_bytes: int
+    resident_bytes: int
+    body_workspace_bytes: int
+    vmem_budget_bytes: int
+    findings: Tuple[AuditFinding, ...]
+
+    @property
+    def vmem_estimate_bytes(self) -> int:
+        # streamed blocks are double-buffered by the Pallas pipeline;
+        # constant-index blocks keep a single resident copy
+        return (2 * self.streamed_bytes + self.resident_bytes
+                + self.body_workspace_bytes)
+
+    @property
+    def fits(self) -> bool:
+        return self.vmem_estimate_bytes <= self.vmem_budget_bytes
+
+
+# ---------------------------------------------------------------------------
+# capture: swap pl.pallas_call for a recorder, trace the wrapper abstractly
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Capture:
+    kernel_fn: Any
+    grid: Tuple[int, ...]
+    in_specs: List[Any]
+    out_specs: List[Any]
+    out_shape: List[Any]
+    operands: List[Any]  # abstract avals actually passed to pallas_call
+    interpret: bool
+
+    @property
+    def ct(self):
+        return getattr(self.kernel_fn, "keywords", {}).get("ct")
+
+
+def capture_pallas_calls(fn: Callable, *args) -> List[_Capture]:
+    """Trace ``fn(*args)`` (abstractly — nothing executes, nothing lowers)
+    with `pl.pallas_call` replaced by a recorder; returns one `_Capture` per
+    pallas_call site, with the padded operand shapes the wrapper built."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    captures: List[_Capture] = []
+
+    def recorder(kernel, out_shape=None, *, grid=None, in_specs=None,
+                 out_specs=None, interpret=False, **kw):
+        if out_shape is None:
+            out_shape = kw.pop("out_shape", None)
+        multi = isinstance(out_shape, (list, tuple))
+        shapes = list(out_shape) if multi else [out_shape]
+        specs = out_specs if isinstance(out_specs, (list, tuple)) else [out_specs]
+
+        def runner(*operands):
+            captures.append(_Capture(
+                kernel_fn=kernel, grid=tuple(grid),
+                in_specs=list(in_specs), out_specs=list(specs),
+                out_shape=shapes,
+                operands=[jax.ShapeDtypeStruct(tuple(o.shape), o.dtype)
+                          for o in operands],
+                interpret=bool(interpret)))
+            outs = [jnp.zeros(s.shape, s.dtype) for s in shapes]
+            return outs if multi else outs[0]
+
+        return runner
+
+    # the wrappers are @jax.jit functions; trace the wrapped python function
+    # so the recorder is hit even when a compiled cache entry exists. The
+    # fresh lambda defeats eval_shape's (fn identity, avals) trace cache —
+    # a cached trace would skip the recorder entirely on repeat audits.
+    plain = getattr(fn, "__wrapped__", fn)
+    original = pl.pallas_call
+    pl.pallas_call = recorder
+    try:
+        jax.eval_shape(lambda *a: plain(*a), *args)
+    finally:
+        pl.pallas_call = original
+    return captures
+
+
+def _body_workspace_bytes(fn: Callable, *args) -> int:
+    """Largest intermediate inside the kernel body, from the kernel jaxpr an
+    interpret-mode trace embeds in the pallas_call equation."""
+    import jax
+
+    plain = getattr(fn, "__wrapped__", fn)
+    closed = jax.make_jaxpr(plain)(*args)
+
+    def find(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                return eqn.params.get("jaxpr")
+            for val in eqn.params.values():
+                for sub in sub_jaxprs(val):
+                    hit = find(sub)
+                    if hit is not None:
+                        return hit
+        return None
+
+    body = find(closed.jaxpr)
+    if body is None:
+        return 0
+    worst = 0
+    stack = [getattr(body, "jaxpr", body)]
+    while stack:
+        j = stack.pop()
+        for eqn in j.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and hasattr(aval, "shape"):
+                    worst = max(worst, int(aval.size) * aval.dtype.itemsize)
+            for val in eqn.params.values():
+                stack.extend(sub_jaxprs(val))
+    return worst
+
+
+# ---------------------------------------------------------------------------
+# the checks
+# ---------------------------------------------------------------------------
+
+def _grid_points(grid: Tuple[int, ...]):
+    total = 1
+    for g in grid:
+        total *= max(int(g), 1)
+    if total <= _MAX_GRID_POINTS:
+        return itertools.product(*(range(int(g)) for g in grid))
+    return itertools.product(*((0, int(g) - 1) for g in grid))
+
+
+def _index_profile(spec, grid: Tuple[int, ...]):
+    """(is_constant, max_block_index per dim) of one BlockSpec over the grid."""
+    first = None
+    lo = hi = None
+    for point in _grid_points(grid):
+        idx = tuple(int(i) for i in spec.index_map(*point))
+        if first is None:
+            first, lo, hi = idx, list(idx), list(idx)
+        else:
+            lo = [min(a, b) for a, b in zip(lo, idx)]
+            hi = [max(a, b) for a, b in zip(hi, idx)]
+    constant = first is not None and tuple(lo) == tuple(hi)
+    return constant, tuple(lo or ()), tuple(hi or ())
+
+
+def _block_bytes(block_shape: Tuple[int, ...], dtype) -> int:
+    import numpy as np
+
+    size = 1
+    for d in block_shape:
+        size *= int(d)
+    return size * np.dtype(dtype).itemsize
+
+
+def _check_spec(name: str, kind: str, pos: int, spec, aval, grid,
+                findings: List[AuditFinding]) -> BlockInfo:
+    block = tuple(int(b) for b in spec.block_shape)
+    shape = tuple(int(d) for d in aval.shape)
+    if len(block) != len(shape):
+        findings.append(AuditFinding(name, "TILE001",
+                        f"{kind}[{pos}] block rank {len(block)} != operand "
+                        f"rank {len(shape)} (shape {shape})"))
+    else:
+        for d, (b, s) in enumerate(zip(block, shape)):
+            if s % b != 0:
+                findings.append(AuditFinding(name, "TILE001",
+                                f"{kind}[{pos}] dim {d}: operand extent {s} "
+                                f"not divisible by block extent {b} — the "
+                                f"wrapper must pad to a tile multiple"))
+    constant, lo, hi = _index_profile(spec, grid)
+    if len(block) == len(shape):
+        for d, (b, s, h, l) in enumerate(zip(block, shape, hi, lo)):
+            if l < 0 or (h + 1) * b > s:
+                findings.append(AuditFinding(name, "IDX001",
+                                f"{kind}[{pos}] dim {d}: index map reaches "
+                                f"block {h} of extent {b} beyond the operand "
+                                f"extent {s}"))
+    return BlockInfo(kind=kind, pos=pos, block_shape=block,
+                     dtype=str(aval.dtype),
+                     nbytes=_block_bytes(block, aval.dtype),
+                     resident=constant)
+
+
+def _expected_ct(input_dtype, interpret: bool):
+    import jax.numpy as jnp
+
+    if interpret:
+        return jnp.promote_types(jnp.dtype(input_dtype), jnp.float32)
+    return jnp.dtype(jnp.float32)
+
+
+def _check_dtype_rule(name: str, cap: _Capture, input_dtype,
+                      findings: List[AuditFinding]) -> None:
+    """The documented promotion rule: compiled kernels compute in float32;
+    interpret mode computes in max(input dtype, float32) so f64 parity tests
+    exercise the body itself. A divergence (e.g. a body bound to the raw
+    input dtype under compilation, or a silent f64 -> f32 downcast in
+    interpret mode) is exactly the class of bug this flags."""
+    import numpy as np
+
+    expected = _expected_ct(input_dtype, cap.interpret)
+    mode = "interpret" if cap.interpret else "compiled"
+    ct = cap.ct
+    if ct is not None and np.dtype(ct) != expected:
+        findings.append(AuditFinding(name, "DTYPE001",
+                        f"kernel body compute dtype is {np.dtype(ct).name} "
+                        f"({mode}, input {np.dtype(input_dtype).name}); the "
+                        f"promotion rule requires {expected.name}"))
+    for kind, avals in (("operand", cap.operands), ("output", cap.out_shape)):
+        for pos, aval in enumerate(avals):
+            if np.dtype(aval.dtype) != expected:
+                findings.append(AuditFinding(name, "DTYPE001",
+                                f"{kind}[{pos}] enters/leaves the kernel as "
+                                f"{np.dtype(aval.dtype).name} ({mode}, input "
+                                f"{np.dtype(input_dtype).name}); expected "
+                                f"{expected.name}"))
+
+
+def audit_callable(fn: Callable, *args, name: Optional[str] = None,
+                   vmem_budget_bytes: int = VMEM_BUDGET_BYTES,
+                   input_dtype=None, check_dtype_rule: bool = True,
+                   interpret: bool = False,
+                   body_workspace_args: Optional[Sequence[Any]] = None,
+                   ) -> List[KernelAudit]:
+    """Audit every pallas_call inside one wrapper invocation. `args` are
+    abstract (`jax.ShapeDtypeStruct`) or concrete arrays; nothing executes.
+    Returns one `KernelAudit` per pallas_call site."""
+    import jax.numpy as jnp
+
+    name = name or getattr(fn, "__name__", repr(fn))
+    if input_dtype is None:
+        leaves = [a for a in args if hasattr(a, "dtype")]
+        input_dtype = leaves[0].dtype if leaves else jnp.float32
+    captures = capture_pallas_calls(
+        fn, *args) if not interpret else capture_pallas_calls(
+        functools.partial(fn, interpret=True), *args)
+    workspace = 0
+    if body_workspace_args is not None:
+        workspace = _body_workspace_bytes(
+            functools.partial(fn, interpret=True), *body_workspace_args)
+    audits = []
+    for cap in captures:
+        findings: List[AuditFinding] = []
+        blocks = [
+            _check_spec(name, "in", i, spec, aval, cap.grid, findings)
+            for i, (spec, aval) in enumerate(zip(cap.in_specs, cap.operands))
+        ] + [
+            _check_spec(name, "out", i, spec, aval, cap.grid, findings)
+            for i, (spec, aval) in enumerate(zip(cap.out_specs, cap.out_shape))
+        ]
+        if check_dtype_rule:
+            _check_dtype_rule(name, cap, input_dtype, findings)
+        streamed = sum(b.nbytes for b in blocks if not b.resident)
+        resident = sum(b.nbytes for b in blocks if b.resident)
+        estimate = 2 * streamed + resident + workspace
+        if estimate > vmem_budget_bytes:
+            findings.append(AuditFinding(name, "VMEM001",
+                            f"per-grid-step VMEM estimate "
+                            f"{estimate / 2**20:.2f} MiB (2x{streamed} "
+                            f"streamed + {resident} resident + {workspace} "
+                            f"body workspace) exceeds the "
+                            f"{vmem_budget_bytes / 2**20:.2f} MiB budget"))
+        audits.append(KernelAudit(
+            name=name, grid=cap.grid,
+            ct=str(jnp.dtype(cap.ct)) if cap.ct is not None else "?",
+            blocks=tuple(blocks), streamed_bytes=streamed,
+            resident_bytes=resident, body_workspace_bytes=workspace,
+            vmem_budget_bytes=vmem_budget_bytes,
+            findings=tuple(findings)))
+    return audits
+
+
+# ---------------------------------------------------------------------------
+# the kernel registry: every Pallas kernel in repro.kernels
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    import jax
+
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _args_kfu(p: Problem, dt):
+    return (_sds((p.N, p.Q), dt), _sds((p.M, p.Q), dt), _sds((), dt),
+            _sds((p.Q,), dt))
+
+
+def _args_psi1(p: Problem, dt):
+    return (_sds((p.N, p.Q), dt), _sds((p.N, p.Q), dt), _sds((p.M, p.Q), dt),
+            _sds((), dt), _sds((p.Q,), dt))
+
+
+_args_psi2 = _args_psi1
+
+
+def _args_suffstats(p: Problem, dt):
+    return (_sds((p.N, p.Q), dt), _sds((p.N, p.Q), dt), _sds((p.N, p.D), dt),
+            _sds((p.M, p.Q), dt), _sds((), dt), _sds((p.Q,), dt))
+
+
+def _args_suffstats_bwd(p: Problem, dt):
+    return _args_suffstats(p, dt) + (_sds((p.M, p.M), dt),
+                                     _sds((p.M, p.D), dt))
+
+
+def _args_psi1_bwd(p: Problem, dt):
+    return _args_psi1(p, dt) + (_sds((p.N, p.M), dt),)
+
+
+def _args_psi2_bwd(p: Problem, dt):
+    return _args_psi2(p, dt) + (_sds((p.M, p.M), dt),)
+
+
+def _kernel_registry() -> List[Tuple[str, Callable, Callable]]:
+    """(name, wrapper fn, args builder) for every Pallas kernel in
+    `repro.kernels`. `kfu_bwd_pallas` is the S -> 0 wrapper over
+    `psi1_bwd_pallas` and owns no pallas_call of its own."""
+    from repro.kernels import kfu, psi1, psi2, suffstats
+
+    return [
+        ("kfu_pallas", kfu.kfu_pallas, _args_kfu),
+        ("psi1_pallas", psi1.psi1_pallas, _args_psi1),
+        ("psi2_pallas", psi2.psi2_pallas, _args_psi2),
+        ("suffstats_pallas", suffstats.suffstats_pallas, _args_suffstats),
+        ("suffstats_bwd_pallas", suffstats.suffstats_bwd_pallas,
+         _args_suffstats_bwd),
+        ("psi1_bwd_pallas", suffstats.psi1_bwd_pallas, _args_psi1_bwd),
+        ("psi2_bwd_pallas", suffstats.psi2_bwd_pallas, _args_psi2_bwd),
+    ]
+
+
+KERNELS = tuple(name for name, _, _ in _kernel_registry())
+
+
+def audit_kernels(problem: Problem = Problem(),
+                  vmem_budget_bytes: int = VMEM_BUDGET_BYTES,
+                  dtypes: Sequence[str] = ("float32", "float64"),
+                  ) -> List[KernelAudit]:
+    """Audit every registered kernel. The returned audits carry the
+    compiled-path (float32) VMEM/tiling view; the dtype-promotion rule is
+    additionally checked at every dtype in `dtypes`, in both compiled and
+    interpret mode, with any divergence attached to the kernel's findings."""
+    import jax.numpy as jnp
+
+    audits: List[KernelAudit] = []
+    for name, fn, build in _kernel_registry():
+        f32_args = build(problem, jnp.float32)
+        main = audit_callable(
+            fn, *f32_args, name=name, vmem_budget_bytes=vmem_budget_bytes,
+            input_dtype=jnp.float32, check_dtype_rule=True,
+            body_workspace_args=f32_args)
+        extra: List[AuditFinding] = []
+        for dt in dtypes:
+            for interpret in (False, True):
+                if str(jnp.dtype(dt)) == "float32" and not interpret:
+                    continue  # already covered by the main audit
+                for a in audit_callable(
+                        fn, *build(problem, jnp.dtype(dt)), name=name,
+                        vmem_budget_bytes=vmem_budget_bytes,
+                        input_dtype=jnp.dtype(dt), interpret=interpret,
+                        check_dtype_rule=True):
+                    extra.extend(f for f in a.findings
+                                 if f.code == "DTYPE001")
+        for a in main:
+            merged = tuple(dict.fromkeys(a.findings + tuple(extra)))
+            audits.append(dataclasses.replace(a, findings=merged))
+    return audits
+
+
+def vmem_table(audits: Sequence[KernelAudit]) -> List[Dict[str, Any]]:
+    """The budget table (one row per kernel) BENCH_vmem.json carries — the
+    input the tile autotuner will consume."""
+    rows = []
+    for a in audits:
+        rows.append({
+            "section": "vmem",
+            "kernel": a.name,
+            "grid": list(a.grid),
+            "ct": a.ct,
+            "blocks": [
+                {"kind": b.kind, "pos": b.pos,
+                 "block_shape": list(b.block_shape), "dtype": b.dtype,
+                 "bytes": b.nbytes, "resident": b.resident}
+                for b in a.blocks
+            ],
+            "streamed_bytes": a.streamed_bytes,
+            "resident_bytes": a.resident_bytes,
+            "body_workspace_bytes": a.body_workspace_bytes,
+            "vmem_estimate_bytes": a.vmem_estimate_bytes,
+            "vmem_budget_bytes": a.vmem_budget_bytes,
+            "fits": a.fits,
+            "findings": [f.describe() for f in a.findings],
+        })
+    return rows

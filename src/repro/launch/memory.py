@@ -3,55 +3,36 @@
 XLA's per-backend memory analysis is unavailable on CPU, but the question
 the streaming engine has to answer — "does any intermediate scale with N?"
 — is visible in the jaxpr: every equation output is an intermediate buffer
-the program materializes at some point. `peak_intermediate_bytes` walks the
-(closed) jaxpr of a function, recursing into sub-jaxprs (scan/cond/pjit/
-remat bodies), and returns the size of the single largest intermediate.
+the program materializes at some point.
 
-This is what the chunked-training tests assert on (a chunked million-point
-loss must have no intermediate anywhere near N * M) and what the benchmark
-harness reports as its peak-memory estimate. It is an estimate of the
-dominating buffer, not a liveness analysis — good for catching O(N * M)
-materialization, not for byte-exact accounting.
+The walk itself now lives in `repro.analysis.jaxpr_check`, which also
+classifies each intermediate's scaling class by tracing at two problem
+sizes (`assert_no_scaling` is what the tests state their guarantee
+through). This module keeps the original byte-level entry points as thin
+wrappers for the benchmark harness and for callers that want a number, not
+a class. The old walker here also had a real blind spot — it recursed into
+list/tuple-valued eqn params only, silently skipping jaxprs nested under
+dict-valued params (custom_vjp bodies) — which the shared analyzer walk
+fixes.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, List, Tuple
+from typing import Callable, List, Tuple
 
+from repro.analysis.jaxpr_check import sub_jaxprs, trace_intermediates
 
-def _walk_jaxpr(jaxpr, seen: List[Tuple[Tuple[int, ...], str, int]]) -> None:
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            aval = getattr(v, "aval", None)
-            if aval is not None and hasattr(aval, "shape") and hasattr(aval, "dtype"):
-                nbytes = int(aval.size) * aval.dtype.itemsize
-                seen.append((tuple(aval.shape), str(aval.dtype), nbytes))
-        for val in eqn.params.values():
-            for sub in _sub_jaxprs(val):
-                _walk_jaxpr(sub, seen)
-
-
-def _sub_jaxprs(val: Any):
-    if hasattr(val, "jaxpr"):  # ClosedJaxpr
-        yield val.jaxpr
-    elif hasattr(val, "eqns"):  # raw Jaxpr
-        yield val
-    elif isinstance(val, (list, tuple)):
-        for item in val:
-            yield from _sub_jaxprs(item)
+# backward-compatible alias: the fixed walker (handles dict-valued params)
+_sub_jaxprs = sub_jaxprs
 
 
 def intermediate_report(fn: Callable, *args, top: int = 8, **kwargs):
     """The `top` largest intermediates of `fn(*args)` as
     [(shape, dtype, bytes)], largest first. Traces only — never executes."""
-    import jax
-
-    closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
-    seen: List[Tuple[Tuple[int, ...], str, int]] = []
-    _walk_jaxpr(closed.jaxpr, seen)
     best = {}
-    for shape, dtype, nbytes in seen:
+    for shape, dtype, nbytes, _, _ in trace_intermediates(fn, *args, **kwargs):
         best[(shape, dtype)] = nbytes
-    rows = sorted(((s, d, b) for (s, d), b in best.items()), key=lambda r: -r[2])
+    rows: List[Tuple[Tuple[int, ...], str, int]] = sorted(
+        ((s, d, b) for (s, d), b in best.items()), key=lambda r: -r[2])
     return rows[:top]
 
 

@@ -1,0 +1,39 @@
+"""Seeded pallas-audit violation: a kfu-style kernel whose OUTPUT BlockSpec
+has a constant index map over the ENTIRE (N, M) array — the whole result
+stays resident in VMEM across the grid instead of streaming tile by tile.
+The audit must report exactly one VMEM001 finding under a mock budget
+smaller than the resident block (and nothing under the real budget at
+these sizes, where the 4 MB residency still fits 16 MiB)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N, TILE_M = 32, 128
+
+
+def _kernel(x_ref, z_ref, o_ref, *, ct):
+    xs = x_ref[...].astype(ct)
+    zs = z_ref[...].astype(ct)
+    d2 = ((xs[:, None, :] - zs[None, :, :]) ** 2).sum(-1)
+    o_ref[...] = jnp.zeros(o_ref.shape, o_ref.dtype).at[:xs.shape[0],
+                                                        :zs.shape[0]].set(
+        jnp.exp(-0.5 * d2).astype(o_ref.dtype))
+
+
+@jax.jit
+def bloated_kfu(X, Z):
+    N, Q = X.shape
+    M = Z.shape[0]
+    grid = (N // TILE_N, M // TILE_M)
+    return pl.pallas_call(
+        functools.partial(_kernel, ct=jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_N, Q), lambda i, j: (i, 0)),
+                  pl.BlockSpec((TILE_M, Q), lambda i, j: (j, 0))],
+        # the bug: constant index map => the full (N, M) output is resident
+        out_specs=pl.BlockSpec((N, M), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, M), jnp.float32),
+        interpret=True,
+    )(X, Z)

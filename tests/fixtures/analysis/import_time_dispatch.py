@@ -1,0 +1,11 @@
+"""Seeded lint violation (ANL001): platform dispatch read at IMPORT time.
+The backend snapshot below goes stale under jax.distributed init or test
+reordering — exactly the bug class `interpret_mode()` exists to prevent.
+Linted as source text with a virtual repro/ path; never imported."""
+import jax
+
+BACKEND = jax.default_backend()  # ANL001: must be read at call time
+
+
+def uses_backend() -> str:
+    return BACKEND

@@ -1,0 +1,27 @@
+"""Seeded jaxpr-check violation: a chunked loss whose scan body LEAKS the
+per-chunk (chunk, M) kernel block through the scan's stacked ys — so the
+trace materializes an (N, M) residual even though the accumulation itself
+is chunked. `assert_no_scaling(..., worse_than="N*M")` must flag exactly
+this stacked output."""
+import jax
+import jax.numpy as jnp
+
+CHUNK = 256
+
+
+def leaky_chunked_loss(X, Z):
+    def body(acc, xb):
+        K = jnp.exp(-((xb[:, None, :] - Z[None, :, :]) ** 2).sum(-1))
+        return acc + K.sum(), K  # the leak: K rides out through ys
+
+    acc, Ks = jax.lax.scan(body, 0.0, X.reshape(-1, CHUNK, X.shape[-1]))
+    return acc + Ks.mean()
+
+
+def clean_chunked_loss(X, Z):
+    def body(acc, xb):
+        K = jnp.exp(-((xb[:, None, :] - Z[None, :, :]) ** 2).sum(-1))
+        return acc + K.sum(), None
+
+    acc, _ = jax.lax.scan(body, 0.0, X.reshape(-1, CHUNK, X.shape[-1]))
+    return acc

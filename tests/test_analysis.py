@@ -1,0 +1,294 @@
+"""The static-analysis subsystem itself: scaling classification against
+seeded leaks (and clean on the real tree), the Pallas audit against a
+kernel with a resident full-array block (and clean on the registry), the
+AST lint rules ANL001-ANL004 against seeded sources (and clean on the
+tree), plus the backward-compat `launch.memory` wrappers including the
+dict-valued sub-jaxpr recursion the old walker missed."""
+import importlib.util
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import analysis
+from repro.analysis import jaxpr_check, lint, pallas_audit
+from repro.launch.memory import intermediate_report, peak_intermediate_bytes
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "analysis"
+
+
+def _load_fixture(name):
+    spec = importlib.util.spec_from_file_location(name, FIXTURES / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _xz(N=2048, M=64, Q=3):
+    return (jax.ShapeDtypeStruct((N, Q), jnp.float32),
+            jax.ShapeDtypeStruct((M, Q), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# jaxpr invariant checker
+# ---------------------------------------------------------------------------
+
+def test_leaky_scan_fixture_flags_exactly_the_stacked_residual():
+    mod = _load_fixture("leaky_scan")
+    N, M, Q = 2048, 64, 3
+    X, Z = _xz(N, M, Q)
+    sizes = {"N": N, "M": M, "Q": Q}
+    with pytest.raises(analysis.ScalingViolation) as exc:
+        analysis.assert_no_scaling(mod.leaky_chunked_loss, X, Z,
+                                   axis="N", worse_than="N*M", sizes=sizes)
+    # the finding is the (N, M)-class stacked scan output, named with its
+    # source line in the fixture — and it is the only O(N*M)-class entry
+    viol = exc.value.violations
+    assert all(v.growth_exp == 1 and v.coeff >= M / 4 for v in viol), viol
+    assert any("leaky_scan.py" in v.source for v in viol), viol
+    assert any(v.label == "O(N*M)" for v in viol), viol
+    # the same loss without the leak passes the same bound
+    analysis.assert_no_scaling(mod.clean_chunked_loss, X, Z,
+                               axis="N", worse_than="N*M", sizes=sizes)
+
+
+def test_scaling_report_classes_and_worst():
+    X, Z = _xz()
+    sizes = {"N": 2048, "M": 64, "Q": 3}
+
+    def dense(X, Z):
+        return jnp.exp(-((X[:, None, :] - Z[None, :, :]) ** 2).sum(-1)).sum()
+
+    rep = analysis.scaling_report(dense, X, Z, axis="N", sizes=sizes)
+    assert rep.worst_class == "O(N*M*Q)"
+    assert rep.worst.growth_exp == 1
+    assert "O(N*M*Q)" in rep.format(top=3)
+    assert analysis.scaling_class(dense, X, Z, axis="N", sizes=sizes) == "O(N*M*Q)"
+
+
+def test_margin_semantics_allow_the_output_cotangent_itself():
+    """An exactly-(N, M) buffer violates the default margin=4 bound but
+    passes margin=0.5 ("nothing beyond 2x the (N, M) output")."""
+    X, Z = _xz()
+    sizes = {"N": 2048, "M": 64, "Q": 3}
+
+    def makes_nm(X, Z):
+        return (X @ Z.T).sum()
+
+    with pytest.raises(analysis.ScalingViolation):
+        analysis.assert_no_scaling(makes_nm, X, Z, axis="N",
+                                   worse_than="N*M", sizes=sizes)
+    analysis.assert_no_scaling(makes_nm, X, Z, axis="N", worse_than="N*M",
+                               margin=0.5, sizes=sizes)
+
+
+def test_bound_parsing_rejects_unknown_names_and_axisless_bounds():
+    X, Z = _xz()
+    sizes = {"N": 2048, "M": 64}
+    with pytest.raises(ValueError, match="neither the axis"):
+        analysis.assert_no_scaling(lambda x, z: x.sum(), X, Z,
+                                   axis="N", worse_than="N*K", sizes=sizes)
+    with pytest.raises(ValueError, match="must involve the grown axis"):
+        analysis.assert_no_scaling(lambda x, z: x.sum(), X, Z,
+                                   axis="N", worse_than="M", sizes=sizes)
+    with pytest.raises(ValueError, match="sizes="):
+        analysis.assert_no_scaling(lambda x, z: x.sum(), X, Z, axis="N")
+
+
+def test_structure_change_across_dispatch_boundary_is_an_analysis_error():
+    """A size-dependent python branch between the two trace sizes cannot be
+    classified — the analyzer must say so instead of mispairing equations."""
+    def dispatching(x):
+        if x.shape[0] > 1024:
+            return (2.0 * x * x).sum()
+        return x.sum()
+
+    x = jax.ShapeDtypeStruct((1024, 2), jnp.float32)
+    with pytest.raises(analysis.AnalysisError, match="structure changed"):
+        analysis.scaling_report(dispatching, x, axis="N", sizes={"N": 1024})
+
+
+def test_trace_intermediates_names_primitive_and_source():
+    def f(x):
+        return jnp.exp(x).sum()
+
+    rows = analysis.trace_intermediates(f, jnp.ones((8, 3)))
+    prims = [r[3] for r in rows]
+    assert "exp" in prims and "reduce_sum" in prims
+    exp_row = rows[prims.index("exp")]
+    assert exp_row[0] == (8, 3) and "test_analysis.py" in exp_row[4]
+
+
+def test_sub_jaxprs_recurses_into_dict_valued_params():
+    """The old launch.memory walker skipped dict-valued eqn params; the
+    shared walk must yield jaxprs from dicts (and nested containers)."""
+    closed = jax.make_jaxpr(lambda x: x * 2.0)(jnp.ones(3))
+    got = list(jaxpr_check.sub_jaxprs({"bwd": closed, "others": [closed]}))
+    assert len(got) == 2 and all(hasattr(j, "eqns") for j in got)
+
+
+def test_launch_memory_wrappers_still_serve_bytes():
+    def f(x):
+        return (x[:, None] * x[None, :]).sum()
+
+    x = jnp.ones(64)
+    rows = intermediate_report(f, x, top=2)
+    assert rows[0][0] == (64, 64)
+    assert peak_intermediate_bytes(f, x) == 64 * 64 * x.dtype.itemsize
+
+
+# ---------------------------------------------------------------------------
+# pallas kernel auditor
+# ---------------------------------------------------------------------------
+
+def test_clean_tree_kernel_registry_audits_clean():
+    audits = pallas_audit.audit_kernels()
+    assert [a.name for a in audits] == list(pallas_audit.KERNELS)
+    for a in audits:
+        assert a.fits and not a.findings, (a.name, a.findings)
+        assert a.vmem_estimate_bytes > 0
+    # the reverse kernels' dZ/dv/dl accumulators are detected as resident
+    by_name = {a.name: a for a in audits}
+    for name in ("suffstats_bwd_pallas", "psi1_bwd_pallas", "psi2_bwd_pallas"):
+        assert by_name[name].resident_bytes > 0, name
+
+
+def test_bloated_kernel_fixture_exceeds_mock_vmem_budget():
+    mod = _load_fixture("bloated_kernel")
+    N, M, Q = 4096, 256, 4
+    args = (jax.ShapeDtypeStruct((N, Q), jnp.float32),
+            jax.ShapeDtypeStruct((M, Q), jnp.float32))
+    # under the real budget these sizes still fit (4 MB resident < 16 MiB)
+    (ok,) = pallas_audit.audit_callable(mod.bloated_kfu, *args)
+    assert ok.fits and not ok.findings
+    assert ok.resident_bytes == N * M * 4  # the whole output, resident
+    # under a mock 1 MiB budget the audit reports exactly the VMEM finding
+    (bad,) = pallas_audit.audit_callable(mod.bloated_kfu, *args,
+                                         vmem_budget_bytes=2 ** 20)
+    assert [f.code for f in bad.findings] == ["VMEM001"]
+    assert "resident" in bad.findings[0].message
+    assert not bad.fits
+
+
+def test_audit_flags_non_divisible_tiles_and_oob_index_maps():
+    mod = _load_fixture("bloated_kernel")
+    # N not a multiple of TILE_N and M not a multiple of TILE_M: the
+    # fixture wrapper does NOT pad, so the audit must flag divisibility
+    args = (jax.ShapeDtypeStruct((100, 4), jnp.float32),
+            jax.ShapeDtypeStruct((192, 4), jnp.float32))
+    (a,) = pallas_audit.audit_callable(mod.bloated_kfu, *args)
+    assert any(f.code == "TILE001" for f in a.findings), a.findings
+
+
+def test_vmem_table_rows_are_json_ready():
+    import json
+
+    audits = pallas_audit.audit_kernels(
+        problem=pallas_audit.Problem(N=2048, M=256, Q=4, D=2))
+    rows = pallas_audit.vmem_table(audits)
+    assert len(rows) == len(pallas_audit.KERNELS)
+    for row in rows:
+        assert row["section"] == "vmem" and row["fits"] is True
+        assert row["vmem_estimate_bytes"] == (2 * row["streamed_bytes"]
+                                              + row["resident_bytes"]
+                                              + row["body_workspace_bytes"])
+    json.dumps(rows)  # must serialize as-is
+
+
+# ---------------------------------------------------------------------------
+# repo lint
+# ---------------------------------------------------------------------------
+
+def test_clean_tree_lints_clean():
+    assert lint.lint_paths() == []
+
+
+def test_import_time_dispatch_fixture_flags_exactly_anl001():
+    src = (FIXTURES / "import_time_dispatch.py").read_text()
+    findings = lint.lint_source(src, "repro/seeded/import_time_dispatch.py")
+    assert [f.code for f in findings] == ["ANL001"]
+    assert findings[0].line == 7  # the module-scope default_backend() call
+    assert "import time" in findings[0].message
+    assert "7" in findings[0].describe()
+
+
+def test_anl002_registry_access_outside_lock():
+    src = (
+        "class S:\n"
+        "    def __init__(self):\n"
+        "        self._models = {}\n"          # exempt: __init__
+        "    def bad(self, k):\n"
+        "        return self._models[k]\n"     # ANL002
+        "    def good(self, k):\n"
+        "        with self._registry_lock:\n"
+        "            return self._models[k]\n"
+    )
+    findings = lint.lint_source(src, "repro/serve/server.py")
+    assert [(f.code, f.line) for f in findings] == [("ANL002", 5)]
+
+
+def test_anl003_backward_registration_outside_dispatcher():
+    src = "import jax\nmy_op.defvjp(fwd, bwd)\n_, vjp = jax.vjp(f, x)\n"
+    findings = lint.lint_source(src, "repro/kernels/rogue.py")
+    assert [f.code for f in findings] == ["ANL003", "ANL003"]
+    # the same source is fine outside kernel files and in the dispatcher
+    assert lint.lint_source(src, "repro/models/moe.py") == []
+    assert lint.lint_source(src, "repro/kernels/ops.py") == []
+
+
+def test_anl004_literal_dtypes_only_in_kernel_files_outside_helpers():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def k():\n"
+        "    return jnp.zeros(3, dtype=jnp.float32)\n"       # ANL004
+        "def promote_helper():\n"
+        "    return jnp.zeros(3, dtype='float64')\n"          # exempt
+        "def j(x):\n"
+        "    return x.astype(jnp.float32)\n"                  # ANL004
+    )
+    findings = lint.lint_source(src, "repro/kernels/rogue.py")
+    assert [(f.code, f.line) for f in findings] == [("ANL004", 3),
+                                                    ("ANL004", 7)]
+    assert lint.lint_source(src, "repro/core/inference.py") == []
+
+
+def test_noqa_suppresses_a_named_finding():
+    src = "import jax\nB = jax.default_backend()  # noqa: ANL001\n"
+    assert lint.lint_source(src, "repro/foo.py") == []
+    src2 = "import jax\nB = jax.default_backend()  # noqa: ANL002\n"
+    assert [f.code for f in lint.lint_source(src2, "repro/foo.py")] == ["ANL001"]
+
+
+def test_syntax_errors_surface_as_findings_not_crashes():
+    findings = lint.lint_source("def broken(:\n", "repro/bad.py")
+    assert [f.code for f in findings] == ["ANL000"]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_lint_and_pallas_pass_on_clean_tree(capsys):
+    from repro.analysis.__main__ import main
+
+    assert main(["--lint", "--pallas-audit"]) == 0
+    out = capsys.readouterr().out
+    assert "0 finding(s)" in out and "7 kernel(s) audited" in out
+
+
+def test_cli_pallas_fails_under_tiny_budget(capsys):
+    from repro.analysis.__main__ import main
+
+    assert main(["--pallas-audit", "--vmem-budget", str(2 ** 18)]) > 0
+    out = capsys.readouterr().out
+    assert "VMEM001" in out and "FAIL" in out
+
+
+def test_cli_lint_fails_on_seeded_fixture_with_file_and_line(capsys):
+    from repro.analysis.__main__ import main
+
+    fixture = FIXTURES / "import_time_dispatch.py"
+    assert main(["--lint", str(fixture)]) == 1
+    out = capsys.readouterr().out
+    assert "import_time_dispatch.py:7: ANL001" in out

@@ -15,7 +15,7 @@ from repro import serve
 from repro.core.psi_stats import SuffStats
 from repro.gp import BayesianGPLVM, SparseGPRegression, get, suff_stats
 from repro.gp.stats import ExactBatch
-from repro.launch.memory import peak_intermediate_bytes
+from repro.analysis import assert_no_scaling
 from repro.serve import GPServer, online
 
 
@@ -389,13 +389,12 @@ def test_facade_caches_statistics_across_predict_calls():
 # million-point scale: update + submit without any (N, M) intermediate
 # ---------------------------------------------------------------------------
 
-def _no_nm_intermediate(fn, *args, N, M, itemsize=8, budget=64e6):
-    peak = peak_intermediate_bytes(fn, *args)
-    nm_bytes = N * M * itemsize
-    assert peak < budget, f"peak intermediate {peak/1e6:.1f} MB over budget"
-    assert peak < nm_bytes / 4, (
-        f"peak intermediate {peak/1e6:.1f} MB is within 4x of an (N, M) "
-        f"array ({nm_bytes/1e6:.0f} MB) — streaming is broken")
+def _no_nm_intermediate(fn, *args, N, M):
+    """The guarantee stated once, via the analyzer: no intermediate anywhere
+    in the trace scales like O(N*M) (default margin 4 reads "nothing within
+    4x of an (N, M) array" — streaming would be broken)."""
+    assert_no_scaling(fn, *args, axis="N", worse_than="N*M",
+                      sizes={"N": N, "M": M})
 
 
 def test_million_point_online_serving_round_trip():

@@ -12,7 +12,7 @@ from repro.core import distributed, gplvm, inference, psi_stats
 from repro.gp import BayesianGPLVM, SparseGPRegression, get, suff_stats
 from repro.gp.stats import ExactBatch, ExpectedBatch
 from repro.kernels import ops, ref
-from repro.launch.memory import peak_intermediate_bytes
+from repro.analysis import assert_no_scaling
 
 
 def _f64(tree):
@@ -222,13 +222,12 @@ def test_fused_backend_trains_under_fit():
 # million-point scale: nothing materializes an (N, M) array
 # ---------------------------------------------------------------------------
 
-def _no_nm_intermediate(fn, *args, N, M, itemsize=8, budget=64e6):
-    peak = peak_intermediate_bytes(fn, *args)
-    nm_bytes = N * M * itemsize
-    assert peak < budget, f"peak intermediate {peak/1e6:.1f} MB over budget"
-    assert peak < nm_bytes / 4, (
-        f"peak intermediate {peak/1e6:.1f} MB is within 4x of an (N, M) "
-        f"array ({nm_bytes/1e6:.0f} MB) — streaming is broken")
+def _no_nm_intermediate(fn, *args, N, M):
+    """The guarantee stated once, via the analyzer: no intermediate anywhere
+    in the trace scales like O(N*M) (default margin 4 reads "nothing within
+    4x of an (N, M) array" — streaming would be broken)."""
+    assert_no_scaling(fn, *args, axis="N", worse_than="N*M",
+                      sizes={"N": N, "M": M})
 
 
 def test_million_point_chunked_training_has_no_nm_workspace():
@@ -240,10 +239,9 @@ def test_million_point_chunked_training_has_no_nm_workspace():
     Y = jnp.sin(2.0 * X)
     gp = SparseGPRegression(kernel=get("rbf")(1), M=M, chunk=chunk)
     p = gp.init_params(X, Y)
-    _no_nm_intermediate(jax.value_and_grad(gp._loss_fn()), p, X, Y,
-                        N=N, M=M, itemsize=4)
+    _no_nm_intermediate(jax.value_and_grad(gp._loss_fn()), p, X, Y, N=N, M=M)
     # posterior/predict statistics pass too
-    _no_nm_intermediate(gp._build_stats(), p, X, Y, N=N, M=M, itemsize=4)
+    _no_nm_intermediate(gp._build_stats(), p, X, Y, N=N, M=M)
 
     # GP-LVM: same engine, expected statistics
     params = {
@@ -258,8 +256,7 @@ def test_million_point_chunked_training_has_no_nm_workspace():
     def lvm_loss(params, Y):
         return gplvm.loss(params, Y, kernel=get("rbf")(1), chunk=chunk)
 
-    _no_nm_intermediate(jax.value_and_grad(lvm_loss), params, Yl,
-                        N=N, M=M, itemsize=4)
+    _no_nm_intermediate(jax.value_and_grad(lvm_loss), params, Yl, N=N, M=M)
 
 
 @pytest.mark.slow

@@ -17,7 +17,7 @@ from repro.kernels.suffstats import (
     suffstats_bwd_pallas,
     suffstats_vjp_jnp,
 )
-from repro.launch.memory import peak_intermediate_bytes
+from repro.analysis import assert_no_scaling
 
 COTANGENT_NAMES = ("mu", "S", "Y", "Z", "variance", "lengthscale")
 
@@ -182,14 +182,12 @@ def test_matern_exact_stats_still_reject_fused():
 # trace-level memory guarantee for the kernelized grad path
 # ---------------------------------------------------------------------------
 
-def _assert_no_nm_intermediate(fn, *args, N, M, itemsize=8, budget=96e6):
-    peak = peak_intermediate_bytes(fn, *args)
-    nm_bytes = N * M * itemsize
-    assert peak < budget, f"peak intermediate {peak/1e6:.1f} MB over budget"
-    assert peak < nm_bytes / 4, (
-        f"peak intermediate {peak/1e6:.1f} MB is within 4x of an (N, M) "
-        f"array ({nm_bytes/1e6:.0f} MB) — the fused grad path is not "
-        f"streaming")
+def _assert_no_nm_intermediate(fn, *args, N, M):
+    """Stated once via the analyzer: no intermediate in the trace scales
+    like O(N*M) (default margin 4 — "nothing within 4x of an (N, M) array",
+    or the fused grad path is not streaming)."""
+    assert_no_scaling(fn, *args, axis="N", worse_than="N*M",
+                      sizes={"N": N, "M": M})
 
 
 def test_fused_grad_path_materializes_no_nm_intermediate():
@@ -211,7 +209,7 @@ def test_fused_grad_path_materializes_no_nm_intermediate():
         return jnp.sum(p2) + jnp.sum(pY)
 
     _assert_no_nm_intermediate(jax.value_and_grad(scalar), mu, S, Y, Z, var,
-                               ls, N=N, M=M, itemsize=4)
+                               ls, N=N, M=M)
 
     params = {
         "kern": get("rbf")(Q).init(),
@@ -225,7 +223,7 @@ def test_fused_grad_path_materializes_no_nm_intermediate():
         return gplvm.loss(params, Y, kernel=get("rbf")(Q), backend="fused")
 
     _assert_no_nm_intermediate(jax.value_and_grad(lvm_loss), params, Y,
-                               N=N, M=M, itemsize=4)
+                               N=N, M=M)
 
 
 # ---------------------------------------------------------------------------
