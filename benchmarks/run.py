@@ -25,7 +25,7 @@ import pathlib
 import sys
 
 SECTIONS = ("gp_scaling", "indistributable", "psi_kernels", "gp_stream",
-            "serve", "lm_step", "roofline", "analysis")
+            "serve", "lm_step", "roofline", "analysis", "tune")
 
 
 def validate_bench_files(root=None, *, exclude=()) -> list:
@@ -78,6 +78,10 @@ def main() -> None:
                     help="where to write the static VMEM budget table "
                          "(default: BENCH_vmem.json, or BENCH_vmem.smoke.json "
                          "under --smoke)")
+    ap.add_argument("--tune-out", default=None,
+                    help="where to write the autotuner tuned-vs-default "
+                         "table (default: BENCH_tune.json, or "
+                         "BENCH_tune.smoke.json under --smoke)")
     args = ap.parse_args()
     if args.out is None:
         args.out = "BENCH_gp.smoke.json" if args.fast else "BENCH_gp.json"
@@ -85,9 +89,12 @@ def main() -> None:
         args.serve_out = "BENCH_serve.smoke.json" if args.fast else "BENCH_serve.json"
     if args.vmem_out is None:
         args.vmem_out = "BENCH_vmem.smoke.json" if args.fast else "BENCH_vmem.json"
+    if args.tune_out is None:
+        args.tune_out = "BENCH_tune.smoke.json" if args.fast else "BENCH_tune.json"
 
     overwriting = {pathlib.Path(args.out).name, pathlib.Path(args.serve_out).name,
-                   pathlib.Path(args.vmem_out).name}
+                   pathlib.Path(args.vmem_out).name,
+                   pathlib.Path(args.tune_out).name}
     committed = validate_bench_files(exclude=overwriting)
     print(f"# committed bench files OK: {', '.join(committed) or '(none)'}",
           file=sys.stderr)
@@ -137,6 +144,14 @@ def main() -> None:
               file=sys.stderr)
         csv, vmem_doc = analysis_vmem.run(smoke=args.fast)
         rows += csv
+    tune_doc = None
+    if wanted("tune"):
+        from benchmarks import tune_bench
+
+        print("# autotuner - tuned-vs-default blocks + roofline check",
+              file=sys.stderr)
+        csv, tune_doc = tune_bench.run(smoke=args.fast)
+        rows += csv
     print("\n".join(rows))
 
     if wanted("gp_stream"):
@@ -168,6 +183,11 @@ def main() -> None:
         with open(args.vmem_out, "w") as f:
             json.dump(vmem_doc, f, indent=1)
         print(f"# wrote {args.vmem_out} ({len(vmem_doc['rows'])} rows)",
+              file=sys.stderr)
+    if tune_doc is not None:
+        with open(args.tune_out, "w") as f:
+            json.dump(tune_doc, f, indent=1)
+        print(f"# wrote {args.tune_out} ({len(tune_doc['rows'])} rows)",
               file=sys.stderr)
 
 

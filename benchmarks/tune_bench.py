@@ -1,0 +1,145 @@
+"""Autotuner benchmark: tuned-vs-default blocks per kernel + roofline check.
+
+For every registered Pallas kernel the section measures the auditor-
+admissible candidate blocks (`repro.tune.measure_blocks` — the same
+stopwatch `best_blocks` uses on a cold key), then reports the default
+block's time, the measured winner, the speedup, and the winner's achieved
+FLOP/s against `repro.launch.roofline.PEAK_FLOPS`. A final row does the
+same for the streaming-scan chunk ladder.
+
+The FLOP counts are the analytic models of the kernels' dominant
+contractions (MXU matmuls; the reverse passes re-walk the forward's tiles
+roughly three times). On a CPU host the kernels run in interpret mode, so
+achieved/roofline numbers are only meaningful on an accelerator — the rows
+still exercise the full tuned-vs-default machinery, which is what the CI
+smoke lane asserts on.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from benchmarks.common import SCHEMA_VERSION, row
+
+# candidate caps: keep the full lane bounded and the smoke lane 2-wide
+FULL_CANDIDATES = 4
+SMOKE_CANDIDATES = 2
+
+
+def _problem(smoke: bool):
+    from repro.analysis.pallas_audit import Problem
+
+    return Problem(N=128, M=128, Q=3, D=2) if smoke else \
+        Problem(N=512, M=256, Q=4, D=2)
+
+
+def _flops(kernel: str, N: int, M: int, Q: int, D: int) -> float:
+    """Dominant-term FLOP models of the kernels' MXU contractions."""
+    kfu = 2.0 * N * M * Q
+    psi1 = 4.0 * N * M * Q
+    psi2 = 2.0 * N * M * M * Q
+    fused = psi2 + psi1 + 2.0 * N * M * D
+    table = {
+        "kfu_pallas": kfu,
+        "psi1_pallas": psi1,
+        "psi2_pallas": psi2,
+        "suffstats_pallas": fused,
+        # reverse passes re-evaluate the forward tiles + two cotangent
+        # contractions: ~3x the forward's dominant term
+        "suffstats_bwd_pallas": 3.0 * fused,
+        "psi1_bwd_pallas": 3.0 * psi1,
+        "psi2_bwd_pallas": 3.0 * psi2,
+    }
+    return table[kernel]
+
+
+def run(smoke: bool = False) -> Tuple[List[str], Dict]:
+    import jax
+
+    from repro import tune
+    from repro.analysis.pallas_audit import KERNELS
+    from repro.launch.roofline import PEAK_FLOPS
+
+    prob = _problem(smoke)
+    limit = SMOKE_CANDIDATES if smoke else FULL_CANDIDATES
+    csv: List[str] = []
+    json_rows: List[Dict] = []
+
+    for kernel in KERNELS:
+        default = tune.default_blocks(kernel)
+        cands = tune.candidate_blocks(kernel, problem=prob, limit=limit)
+        if default not in cands:
+            cands = [default] + cands
+        timings = tune.measure_blocks(kernel, cands, problem=prob)
+        best = min(timings, key=timings.get)
+        t_default = timings[default]
+        t_best = timings[best]
+        flops = _flops(kernel, prob.N, prob.M, prob.Q, prob.D)
+        achieved = flops / t_best if t_best > 0 else 0.0
+        csv.append(row(
+            f"tune/{kernel}", t_best,
+            f"default={default[0]}x{default[1]} best={best[0]}x{best[1]} "
+            f"speedup={t_default / t_best:.2f}x"))
+        json_rows.append({
+            "section": "tune",
+            "kernel": kernel,
+            "problem": {"N": prob.N, "M": prob.M, "Q": prob.Q, "D": prob.D},
+            "dtype": "float32",
+            "candidates": len(cands),
+            "default_block": list(default),
+            "best_block": list(best),
+            "t_default_s": t_default,
+            "t_best_s": t_best,
+            "speedup_vs_default": t_default / t_best,
+            "flops": flops,
+            "achieved_flops": achieved,
+            "roofline_peak_flops": PEAK_FLOPS,
+            "roofline_frac": achieved / PEAK_FLOPS,
+        })
+
+    # streaming chunk ladder through the real lax.scan path
+    n_stream = 2048 if smoke else 16384
+    cands = tune.candidate_chunks(n_stream, limit=limit)
+    if tune.DEFAULT_CHUNK not in cands:
+        cands = [tune.DEFAULT_CHUNK] + cands
+    timings = tune.measure_chunks(cands, n=n_stream, m=prob.M, q=prob.Q,
+                                  d=prob.D, backend="jnp")
+    best_c = min(timings, key=timings.get)
+    t_default = timings[tune.DEFAULT_CHUNK]
+    t_best = timings[best_c]
+    flops = _flops("suffstats_pallas", n_stream, prob.M, prob.Q, prob.D)
+    achieved = flops / t_best if t_best > 0 else 0.0
+    csv.append(row(
+        "tune/streaming_chunk", t_best,
+        f"default={tune.DEFAULT_CHUNK} best={best_c} "
+        f"speedup={t_default / t_best:.2f}x"))
+    json_rows.append({
+        "section": "tune",
+        "kernel": "streaming_suff_stats",
+        "problem": {"N": n_stream, "M": prob.M, "Q": prob.Q, "D": prob.D},
+        "dtype": "float32",
+        "candidates": len(cands),
+        "default_chunk": tune.DEFAULT_CHUNK,
+        "best_chunk": int(best_c),
+        "t_default_s": t_default,
+        "t_best_s": t_best,
+        "speedup_vs_default": t_default / t_best,
+        "flops": flops,
+        "achieved_flops": achieved,
+        "roofline_peak_flops": PEAK_FLOPS,
+        "roofline_frac": achieved / PEAK_FLOPS,
+    })
+
+    doc = {
+        "meta": {
+            "bench": "tune",
+            "schema_version": SCHEMA_VERSION,
+            "jax_backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "smoke": bool(smoke),
+            "interpret_note": "off-accelerator rows time interpret-mode "
+                              "kernels; roofline fractions are only "
+                              "meaningful on TPU/GPU",
+        },
+        "rows": json_rows,
+    }
+    return csv, doc

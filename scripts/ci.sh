@@ -103,4 +103,39 @@ assert all(required <= set(r) for r in rows), "vmem rows malformed"
 print(f"vmem smoke JSON OK ({len(rows)} rows)")
 PY
 
+echo "== benchmark harness (autotuner tuned-vs-default, smoke mode) =="
+# the 2-candidate smoke grid: candidate generation, timing, winner pick and
+# roofline comparison all run on CPU interpret — fast, asserts the machinery
+TUNE_BENCH="$(mktemp -t BENCH_tune_smoke.XXXXXX.json)"
+TUNE_CACHE="$(mktemp -t tune_cache.XXXXXX.json)"
+REPRO_TUNE=1 REPRO_TUNE_CACHE="$TUNE_CACHE" REPRO_TUNE_MAX_CANDIDATES=2 \
+    python -m benchmarks.run --smoke --only tune --tune-out "$TUNE_BENCH" > /dev/null
+TUNE_BENCH="$TUNE_BENCH" python - <<'PY'
+import json
+import os
+
+doc = json.load(open(os.environ["TUNE_BENCH"]))
+rows = doc["rows"]
+from repro.analysis.pallas_audit import KERNELS
+kernels = [r["kernel"] for r in rows]
+assert kernels[:len(KERNELS)] == list(KERNELS), kernels
+assert kernels[-1] == "streaming_suff_stats", kernels
+block_req = {"default_block", "best_block", "t_default_s", "t_best_s",
+             "speedup_vs_default", "achieved_flops", "roofline_peak_flops",
+             "roofline_frac"}
+assert all(block_req <= set(r) for r in rows[:-1]), "tune rows malformed"
+assert {"default_chunk", "best_chunk", "speedup_vs_default"} <= set(rows[-1])
+assert all(r["t_best_s"] <= r["t_default_s"] for r in rows), \
+    "winner slower than default?"
+from benchmarks.common import SCHEMA_VERSION
+assert doc["meta"]["schema_version"] == SCHEMA_VERSION, doc["meta"]
+print(f"tune smoke JSON OK ({len(rows)} rows)")
+PY
+
+echo "== compiled-kernel parity lane (hardware-gated) =="
+# asserts compiled-vs-interpret numerics for every registered kernel in both
+# directions on TPU/GPU; on CPU-only hosts every test skips (still verifies
+# the marker wiring collects)
+python -m pytest -q -m compiled tests/test_compiled_parity.py
+
 echo "CI OK"

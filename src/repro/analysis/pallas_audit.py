@@ -44,8 +44,11 @@ __all__ = [
     "KERNELS",
     "VMEM_BUDGET_BYTES",
     "capture_pallas_calls",
+    "vmem_estimate",
     "audit_callable",
+    "audit_candidate",
     "audit_kernels",
+    "kernel_registry",
     "vmem_table",
 ]
 
@@ -55,6 +58,17 @@ VMEM_BUDGET_BYTES = 16 * 2 ** 20
 # Cap on exhaustive grid enumeration for the index-map checks; beyond it
 # only the corner points are evaluated.
 _MAX_GRID_POINTS = 8192
+
+
+def vmem_estimate(streamed_bytes: int, resident_bytes: int,
+                  body_workspace_bytes: int) -> int:
+    """THE per-grid-step VMEM residency model, in one place: streamed blocks
+    are double-buffered by the Pallas pipeline, constant-index blocks keep a
+    single resident copy, and the kernel body's largest intermediate rides on
+    top. `KernelAudit`, the audit findings, and the `repro.tune` candidate
+    filter all price a block configuration through this function — the
+    auditor and the autotuner cannot disagree about what fits."""
+    return 2 * streamed_bytes + resident_bytes + body_workspace_bytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,10 +119,8 @@ class KernelAudit:
 
     @property
     def vmem_estimate_bytes(self) -> int:
-        # streamed blocks are double-buffered by the Pallas pipeline;
-        # constant-index blocks keep a single resident copy
-        return (2 * self.streamed_bytes + self.resident_bytes
-                + self.body_workspace_bytes)
+        return vmem_estimate(self.streamed_bytes, self.resident_bytes,
+                             self.body_workspace_bytes)
 
     @property
     def fits(self) -> bool:
@@ -352,7 +364,7 @@ def audit_callable(fn: Callable, *args, name: Optional[str] = None,
             _check_dtype_rule(name, cap, input_dtype, findings)
         streamed = sum(b.nbytes for b in blocks if not b.resident)
         resident = sum(b.nbytes for b in blocks if b.resident)
-        estimate = 2 * streamed + resident + workspace
+        estimate = vmem_estimate(streamed, resident, workspace)
         if estimate > vmem_budget_bytes:
             findings.append(AuditFinding(name, "VMEM001",
                             f"per-grid-step VMEM estimate "
@@ -411,10 +423,12 @@ def _args_psi2_bwd(p: Problem, dt):
     return _args_psi2(p, dt) + (_sds((p.M, p.M), dt),)
 
 
-def _kernel_registry() -> List[Tuple[str, Callable, Callable]]:
+def kernel_registry() -> List[Tuple[str, Callable, Callable]]:
     """(name, wrapper fn, args builder) for every Pallas kernel in
     `repro.kernels`. `kfu_bwd_pallas` is the S -> 0 wrapper over
-    `psi1_bwd_pallas` and owns no pallas_call of its own."""
+    `psi1_bwd_pallas` and owns no pallas_call of its own. Shared by the
+    auditor (this module) and the tile autotuner (`repro.tune`) — one list
+    of kernels, one set of representative argument builders."""
     from repro.kernels import kfu, psi1, psi2, suffstats
 
     return [
@@ -429,7 +443,46 @@ def _kernel_registry() -> List[Tuple[str, Callable, Callable]]:
     ]
 
 
-KERNELS = tuple(name for name, _, _ in _kernel_registry())
+_kernel_registry = kernel_registry  # pre-tune name, kept for callers
+
+KERNELS = tuple(name for name, _, _ in kernel_registry())
+
+
+def registry_entry(kernel_name: str) -> Tuple[Callable, Callable]:
+    """(wrapper fn, args builder) for one registered kernel, or KeyError."""
+    for name, fn, build in kernel_registry():
+        if name == kernel_name:
+            return fn, build
+    raise KeyError(
+        f"unknown kernel {kernel_name!r}; registered: {list(KERNELS)}")
+
+
+def audit_candidate(kernel_name: str, block: Tuple[int, int], *,
+                    problem: Problem = Problem(), dtype=None,
+                    vmem_budget_bytes: int = VMEM_BUDGET_BYTES,
+                    ) -> KernelAudit:
+    """Audit one registered kernel at a CANDIDATE block configuration
+    ``block = (tile_n, tile_m)`` instead of its module-constant tiles.
+
+    This is the search-space gate of the `repro.tune` autotuner: a candidate
+    is admissible only if the returned audit `fits` the VMEM budget and
+    carries no TILE001/IDX001 finding — the same recorder trace, block
+    accounting, and `vmem_estimate` model the `--pallas-audit` CLI applies
+    to the shipped constants (nothing executes or lowers here either).
+    """
+    import jax.numpy as jnp
+
+    dtype = jnp.float32 if dtype is None else jnp.dtype(dtype)
+    fn, build = registry_entry(kernel_name)
+    # partial the UNWRAPPED python function: a partial of the jitted wrapper
+    # could hit jit's trace cache on repeat audits and skip the recorder
+    plain = getattr(fn, "__wrapped__", fn)
+    fn_b = functools.partial(plain, block=(int(block[0]), int(block[1])))
+    args = build(problem, dtype)
+    return audit_callable(
+        fn_b, *args, name=kernel_name, vmem_budget_bytes=vmem_budget_bytes,
+        input_dtype=dtype, check_dtype_rule=False,
+        body_workspace_args=args)[0]
 
 
 def audit_kernels(problem: Problem = Problem(),

@@ -19,7 +19,8 @@ expected statistics for the GP-LVM, exact ones for regression via S -> 0);
 backends — the fused op and the single-statistic pallas ops all backward
 through hand-derived Pallas reverse kernels or their streaming jnp twins
 ("auto" dispatches like the forward); `chunk=` streams the statistics over
-N in chunks of that size so
+N in chunks of that size (or `chunk="auto"`, sized by the `repro.tune`
+autotuner) so
 training AND prediction peak at O(chunk * M + M^2) memory regardless of N.
 All of these come from the constructor so serving/config code can pick them
 by string/int without touching model internals. See docs/api.md for the
@@ -28,7 +29,7 @@ full public surface and docs/architecture.md for how the layers fit.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -63,13 +64,22 @@ class _CollapsedGPModel:
 
     def __init__(self, kernel: Optional[Kernel], M: int, *,
                  mesh: Optional[Mesh] = None, backend: str = "jnp",
-                 chunk: Optional[int] = None, bwd_backend: str = "auto"):
+                 chunk: Optional[Union[int, str]] = None,
+                 bwd_backend: str = "auto"):
         self.kernel = kernel
         self.M = int(M)
         self.mesh = mesh
         self.backend = backend
         self.bwd_backend = bwd_backend
-        self.chunk = None if chunk is None else int(chunk)
+        # chunk: None (one shot), a positive int, or "auto" (resolved by the
+        # repro.tune autotuner inside gp.stats.streaming_suff_stats)
+        if chunk is None or chunk == "auto":
+            self.chunk = chunk
+        elif isinstance(chunk, str):
+            raise ValueError(
+                f'chunk must be None, a positive int or "auto", got {chunk!r}')
+        else:
+            self.chunk = int(chunk)
         self.params: Optional[Params] = None
         self.history: list = []
         self._loss_cache = None  # (kernel, built_loss): rebuilt if kernel changes
@@ -178,7 +188,8 @@ class SparseGPRegression(_CollapsedGPModel):
 
     def __init__(self, kernel: Optional[Kernel] = None, M: int = 32, *,
                  mesh: Optional[Mesh] = None, backend: str = "jnp",
-                 chunk: Optional[int] = None, bwd_backend: str = "auto"):
+                 chunk: Optional[Union[int, str]] = None,
+                 bwd_backend: str = "auto"):
         super().__init__(kernel, M, mesh=mesh, backend=backend, chunk=chunk,
                          bwd_backend=bwd_backend)
         self._data: Optional[Tuple[jax.Array, jax.Array]] = None
@@ -272,7 +283,8 @@ class BayesianGPLVM(_CollapsedGPModel):
     def __init__(self, kernel: Optional[Kernel] = None, M: int = 100,
                  Q: Optional[int] = None, *,
                  mesh: Optional[Mesh] = None, backend: str = "jnp",
-                 chunk: Optional[int] = None, bwd_backend: str = "auto"):
+                 chunk: Optional[Union[int, str]] = None,
+                 bwd_backend: str = "auto"):
         super().__init__(kernel, M, mesh=mesh, backend=backend, chunk=chunk,
                          bwd_backend=bwd_backend)
         if kernel is not None and Q is not None and Q != kernel.input_dim:

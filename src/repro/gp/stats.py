@@ -66,7 +66,7 @@ def _dispatch(kernel: Kernel, params: Params, batch: Batch, backend: str,
 
 
 def streaming_suff_stats(kernel: Kernel, params: Params, batch: Batch, *,
-                         backend: str = "jnp", chunk: int = 4096,
+                         backend: str = "jnp", chunk: Union[int, str] = 4096,
                          bwd_backend: str = "auto") -> SuffStats:
     """`suff_stats` as a chunked lax.scan over N: O(chunk * M + M^2) live.
 
@@ -76,11 +76,26 @@ def streaming_suff_stats(kernel: Kernel, params: Params, batch: Batch, *,
     chunk outside the scan (no padding/masking, so kernels need no weight
     plumbing). The scan body is rematerialized so the backward pass
     recomputes chunks instead of saving per-chunk intermediates.
+
+    ``chunk="auto"`` resolves the size through the `repro.tune` autotuner
+    (measured winner when tuned/cached, the historical default otherwise).
+    Every chunked caller — the facades, `serve.online`, the mesh path —
+    routes through here, so this is the single resolution point.
     """
-    if chunk <= 0:
-        raise ValueError(f"chunk must be positive, got {chunk}")
     if not isinstance(batch, (ExactBatch, ExpectedBatch)):
         raise TypeError(f"expected ExactBatch or ExpectedBatch, got {type(batch).__name__}")
+    if isinstance(chunk, str):
+        if chunk != "auto":
+            raise ValueError(f'chunk must be a positive int or "auto", got {chunk!r}')
+        from repro import tune
+
+        first = batch[0]
+        chunk = tune.best_chunk(
+            n=first.shape[0], m=batch.Z.shape[0], q=batch.Z.shape[1],
+            d=batch.Y.shape[1], dtype=first.dtype, backend=backend,
+            bwd_backend=bwd_backend)
+    if chunk <= 0:
+        raise ValueError(f"chunk must be positive, got {chunk}")
     per_point = [a for name, a in zip(batch._fields, batch) if name != "Z"]
     N = per_point[0].shape[0]
     rebuild = type(batch)
@@ -130,12 +145,13 @@ def streaming_suff_stats(kernel: Kernel, params: Params, batch: Batch, *,
 
 
 def suff_stats(kernel: Kernel, params: Params, batch: Batch, *,
-               backend: str = "jnp", chunk: Optional[int] = None,
+               backend: str = "jnp", chunk: Optional[Union[int, str]] = None,
                bwd_backend: str = "auto") -> SuffStats:
     """Sufficient statistics of `batch` under `kernel`, kernel-dispatched.
 
     `chunk=None` evaluates the statistics in one shot (full-batch
-    workspaces); an integer streams the datapoints in chunks of that size.
+    workspaces); an integer streams the datapoints in chunks of that size,
+    and ``"auto"`` streams with the `repro.tune`-resolved size.
     The "fused" backend is exempt: its op already streams internally (jnp
     twin / Pallas grid over N) with a streaming hand-derived VJP.
     `bwd_backend` selects the reverse-pass implementation of the kernelized

@@ -37,7 +37,7 @@ def _kfu_kernel(xs_ref, zs_ref, o_ref, *, ct=jnp.float32):
     o_ref[...] = jnp.exp(-0.5 * d2).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
 def kfu_pallas(
     X: jax.Array,
     Z: jax.Array,
@@ -45,33 +45,40 @@ def kfu_pallas(
     lengthscale: jax.Array,
     *,
     interpret: bool = False,
+    block: tuple | None = None,
 ) -> jax.Array:
-    """K_fu = variance * exp(-0.5 ||(x-z)/l||^2), tiled (TILE_N, TILE_M).
+    """K_fu = variance * exp(-0.5 ||(x-z)/l||^2), tiled (tile_n, tile_m).
 
     Compiled (TPU) execution computes in float32 — the hardware dtype the
     tiles are chosen for. Interpret mode computes in the input dtype promoted
     to at least f32 (same policy as the fused suffstats kernel): it exists to
     validate the kernel body, and under x64 that makes f64 parity checks
     meaningful.
+
+    `block=(tile_n, tile_m)` overrides the module-constant tiles — the knob
+    the `repro.tune` autotuner turns; None keeps (TILE_N, TILE_M). The
+    wrapper pads to whatever multiple the block demands, so any measured
+    winner is numerically identical to the defaults.
     """
+    tile_n, tile_m = block if block is not None else (TILE_N, TILE_M)
     N, Q = X.shape
     M = Z.shape[0]
     dtype = X.dtype
     ct = jnp.promote_types(dtype, jnp.float32) if interpret else jnp.float32
-    pad_n = (-N) % TILE_N
-    pad_m = (-M) % TILE_M
+    pad_n = (-N) % tile_n
+    pad_m = (-M) % tile_m
     Xs = jnp.pad((X / lengthscale).astype(ct), ((0, pad_n), (0, 0)))
     Zs = jnp.pad((Z / lengthscale).astype(ct), ((0, pad_m), (0, 0)))
 
-    grid = (Xs.shape[0] // TILE_N, Zs.shape[0] // TILE_M)
+    grid = (Xs.shape[0] // tile_n, Zs.shape[0] // tile_m)
     out = pl.pallas_call(
         functools.partial(_kfu_kernel, ct=ct),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((TILE_N, Q), lambda i, j: (i, 0)),
-            pl.BlockSpec((TILE_M, Q), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_n, Q), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_m, Q), lambda i, j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((TILE_N, TILE_M), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((tile_n, tile_m), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Xs.shape[0], Zs.shape[0]), ct),
         interpret=interpret,
     )(Xs, Zs)

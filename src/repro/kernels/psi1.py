@@ -41,7 +41,7 @@ def _psi1_kernel(mu_ref, s_ref, z_ref, l2_ref, o_ref, *, ct=jnp.float32):
     o_ref[...] = blk.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
 def psi1_pallas(
     mu: jax.Array,
     S: jax.Array,
@@ -50,7 +50,12 @@ def psi1_pallas(
     lengthscale: jax.Array,
     *,
     interpret: bool = False,
+    block: tuple | None = None,
 ) -> jax.Array:
+    # `block=(tile_n, tile_m)` overrides the module-constant tiles (the
+    # repro.tune knob); the wrapper pads to the block's multiple, so every
+    # candidate is numerically identical to the defaults.
+    tile_n, tile_m = block if block is not None else (TILE_N, TILE_M)
     N, Q = mu.shape
     M = Z.shape[0]
     dtype = mu.dtype
@@ -58,25 +63,25 @@ def psi1_pallas(
     # the input dtype promoted to at least f32 (same policy as the fused
     # suffstats kernel) so f64 parity tests exercise the kernel body itself
     ct = jnp.promote_types(dtype, jnp.float32) if interpret else jnp.float32
-    pad_n = (-N) % TILE_N
-    pad_m = (-M) % TILE_M
+    pad_n = (-N) % tile_n
+    pad_m = (-M) % tile_m
     mu_p = jnp.pad(mu.astype(ct), ((0, pad_n), (0, 0)))
     # pad S with 1.0: any positive value keeps log1p/division well-defined
     S_p = jnp.pad(S.astype(ct), ((0, pad_n), (0, 0)), constant_values=1.0)
     Z_p = jnp.pad(Z.astype(ct), ((0, pad_m), (0, 0)))
     l2 = (lengthscale.astype(ct) ** 2)[None, :]  # (1, Q)
 
-    grid = (mu_p.shape[0] // TILE_N, Z_p.shape[0] // TILE_M)
+    grid = (mu_p.shape[0] // tile_n, Z_p.shape[0] // tile_m)
     out = pl.pallas_call(
         functools.partial(_psi1_kernel, ct=ct),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((TILE_N, Q), lambda i, j: (i, 0)),
-            pl.BlockSpec((TILE_N, Q), lambda i, j: (i, 0)),
-            pl.BlockSpec((TILE_M, Q), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_n, Q), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, Q), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_m, Q), lambda i, j: (j, 0)),
             pl.BlockSpec((1, Q), lambda i, j: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((TILE_N, TILE_M), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((tile_n, tile_m), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mu_p.shape[0], Z_p.shape[0]), ct),
         interpret=interpret,
     )(mu_p, S_p, Z_p, l2)

@@ -70,7 +70,7 @@ def _psi2_kernel(mu_ref, s_ref, w_ref, z1_ref, z2_ref, l2_ref, o_ref, *,
         o_ref[...] += contrib
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
 def psi2_pallas(
     mu: jax.Array,
     S: jax.Array,
@@ -79,7 +79,12 @@ def psi2_pallas(
     lengthscale: jax.Array,
     *,
     interpret: bool = False,
+    block: tuple | None = None,
 ) -> jax.Array:
+    # `block=(tile_n, tile_m)` overrides the module-constant tiles (the
+    # repro.tune knob); the wrapper pads to the block's multiple, so every
+    # candidate is numerically identical to the defaults.
+    tile_n, tile_m = block if block is not None else (TILE_N, TILE_M)
     N, Q = mu.shape
     M = Z.shape[0]
     dtype = mu.dtype
@@ -87,8 +92,8 @@ def psi2_pallas(
     # the input dtype promoted to at least f32 (same policy as the fused
     # suffstats kernel) so f64 parity tests exercise the kernel body itself
     ct = jnp.promote_types(dtype, jnp.float32) if interpret else jnp.float32
-    pad_n = (-N) % TILE_N
-    pad_m = (-M) % TILE_M
+    pad_n = (-N) % tile_n
+    pad_m = (-M) % tile_m
     mu_p = jnp.pad(mu.astype(ct), ((0, pad_n), (0, 0)))
     S_p = jnp.pad(S.astype(ct), ((0, pad_n), (0, 0)), constant_values=1.0)
     w = jnp.pad(jnp.ones((N, 1), ct), ((0, pad_n), (0, 0)))
@@ -96,19 +101,19 @@ def psi2_pallas(
     l2 = (lengthscale.astype(ct) ** 2)[None, :]
 
     Mp = Z_p.shape[0]
-    grid = (Mp // TILE_M, Mp // TILE_M, mu_p.shape[0] // TILE_N)
+    grid = (Mp // tile_m, Mp // tile_m, mu_p.shape[0] // tile_n)
     acc = pl.pallas_call(
         functools.partial(_psi2_kernel, ct=ct),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((TILE_N, Q), lambda i, j, k: (k, 0)),
-            pl.BlockSpec((TILE_N, Q), lambda i, j, k: (k, 0)),
-            pl.BlockSpec((TILE_N, 1), lambda i, j, k: (k, 0)),
-            pl.BlockSpec((TILE_M, Q), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((TILE_M, Q), lambda i, j, k: (j, 0)),
+            pl.BlockSpec((tile_n, Q), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((tile_n, Q), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((tile_n, 1), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((tile_m, Q), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((tile_m, Q), lambda i, j, k: (j, 0)),
             pl.BlockSpec((1, Q), lambda i, j, k: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((TILE_M, TILE_M), lambda i, j, k: (i, j)),
+        out_specs=pl.BlockSpec((tile_m, tile_m), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Mp), ct),
         interpret=interpret,
     )(mu_p, S_p, w, Z_p, Z_p, l2)

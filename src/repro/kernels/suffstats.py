@@ -266,21 +266,27 @@ def _suffstats_kernel(mu_ref, s_ref, y_ref, w_ref, z1_ref, z2_ref, l2_ref,
             psiy_ref[...] += contribY
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def suffstats_pallas(mu, S, Y, Z, variance, lengthscale, *, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def suffstats_pallas(mu, S, Y, Z, variance, lengthscale, *,
+                     interpret: bool = False, block: tuple | None = None):
     """Returns (psi2 (M, M), psiY (M, D)) accumulated over all N.
 
     Compiled (TPU) execution computes in float32 — the hardware dtype the
     tile sizes are chosen for. Interpret mode keeps the input dtype instead:
     it exists to validate the kernel body, and under x64 that makes parity
     checks meaningful rather than epilogue-conditioning-limited.
+
+    `block=(tile_n, tile_m)` overrides the module-constant tiles (the
+    repro.tune knob); the wrapper pads to the block's multiple, so every
+    candidate is numerically identical to the defaults.
     """
+    tile_n, tile_m = block if block is not None else (TILE_N, TILE_M)
     N, Q = mu.shape
     M = Z.shape[0]
     D = Y.shape[1]
     ct = mu.dtype if interpret else jnp.float32
-    pad_n = (-N) % TILE_N
-    pad_m = (-M) % TILE_M
+    pad_n = (-N) % tile_n
+    pad_m = (-M) % tile_m
     mu_p = jnp.pad(mu.astype(ct), ((0, pad_n), (0, 0)))
     S_p = jnp.pad(S.astype(ct), ((0, pad_n), (0, 0)), constant_values=1.0)
     Y_p = jnp.pad(Y.astype(ct), ((0, pad_n), (0, 0)))
@@ -289,22 +295,22 @@ def suffstats_pallas(mu, S, Y, Z, variance, lengthscale, *, interpret: bool = Fa
     l2 = (lengthscale.astype(ct) ** 2)[None, :]
     Mp = Z_p.shape[0]
 
-    grid = (Mp // TILE_M, Mp // TILE_M, mu_p.shape[0] // TILE_N)
+    grid = (Mp // tile_m, Mp // tile_m, mu_p.shape[0] // tile_n)
     acc2, accY = pl.pallas_call(
         functools.partial(_suffstats_kernel, ct=ct),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((TILE_N, Q), lambda i, j, kn: (kn, 0)),
-            pl.BlockSpec((TILE_N, Q), lambda i, j, kn: (kn, 0)),
-            pl.BlockSpec((TILE_N, D), lambda i, j, kn: (kn, 0)),
-            pl.BlockSpec((TILE_N, 1), lambda i, j, kn: (kn, 0)),
-            pl.BlockSpec((TILE_M, Q), lambda i, j, kn: (i, 0)),
-            pl.BlockSpec((TILE_M, Q), lambda i, j, kn: (j, 0)),
+            pl.BlockSpec((tile_n, Q), lambda i, j, kn: (kn, 0)),
+            pl.BlockSpec((tile_n, Q), lambda i, j, kn: (kn, 0)),
+            pl.BlockSpec((tile_n, D), lambda i, j, kn: (kn, 0)),
+            pl.BlockSpec((tile_n, 1), lambda i, j, kn: (kn, 0)),
+            pl.BlockSpec((tile_m, Q), lambda i, j, kn: (i, 0)),
+            pl.BlockSpec((tile_m, Q), lambda i, j, kn: (j, 0)),
             pl.BlockSpec((1, Q), lambda i, j, kn: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((TILE_M, TILE_M), lambda i, j, kn: (i, j)),
-            pl.BlockSpec((TILE_M, D), lambda i, j, kn: (i, 0)),
+            pl.BlockSpec((tile_m, tile_m), lambda i, j, kn: (i, j)),
+            pl.BlockSpec((tile_m, D), lambda i, j, kn: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((Mp, Mp), ct),
@@ -409,9 +415,9 @@ def _suffstats_bwd_kernel(mu_ref, s_ref, y_ref, w_ref, z1_ref, z2_ref,
             dy_ref[...] += dy_c
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
 def suffstats_bwd_pallas(mu, S, Y, Z, variance, lengthscale, g2, gY, *,
-                         interpret: bool = False):
+                         interpret: bool = False, block: tuple | None = None):
     """Pallas reverse pass of ``(psi2, psiY) = suffstats(...)``.
 
     Returns cotangents ``(dmu, dS, dY, dZ, dvariance, dlengthscale)`` given
@@ -425,13 +431,17 @@ def suffstats_bwd_pallas(mu, S, Y, Z, variance, lengthscale, g2, gY, *,
     contribute nothing; gY is pre-scaled by v the same way. The variance
     cotangent leaves the kernel as the raw branch weight total
     sum W1 + 2 sum T (eq. (13)+(19)) and is divided by v here.
+
+    `block=(tile_n, tile_m)` overrides the module-constant tiles (the
+    repro.tune knob); padding makes any block choice numerically identical.
     """
+    tile_n, tile_m = block if block is not None else (TILE_N, TILE_M)
     N, Q = mu.shape
     M = Z.shape[0]
     D = Y.shape[1]
     ct = mu.dtype if interpret else jnp.float32
-    pad_n = (-N) % TILE_N
-    pad_m = (-M) % TILE_M
+    pad_n = (-N) % tile_n
+    pad_m = (-M) % tile_m
     mu_p = jnp.pad(mu.astype(ct), ((0, pad_n), (0, 0)))
     S_p = jnp.pad(S.astype(ct), ((0, pad_n), (0, 0)), constant_values=1.0)
     Y_p = jnp.pad(Y.astype(ct), ((0, pad_n), (0, 0)))
@@ -449,25 +459,25 @@ def suffstats_bwd_pallas(mu, S, Y, Z, variance, lengthscale, g2, gY, *,
 
     Np = mu_p.shape[0]
     Mp = Z_p.shape[0]
-    grid = (Np // TILE_N, Mp // TILE_M, Mp // TILE_M)
+    grid = (Np // tile_n, Mp // tile_m, Mp // tile_m)
     dmu, dS, dY, dZ, dvraw, dl = pl.pallas_call(
-        functools.partial(_suffstats_bwd_kernel, tile_m=TILE_M, ct=ct),
+        functools.partial(_suffstats_bwd_kernel, tile_m=tile_m, ct=ct),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # mu
-            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # S
-            pl.BlockSpec((TILE_N, D), lambda kn, i, j: (kn, 0)),  # Y
-            pl.BlockSpec((TILE_N, 1), lambda kn, i, j: (kn, 0)),  # w
-            pl.BlockSpec((TILE_M, Q), lambda kn, i, j: (i, 0)),  # Z (slot a)
-            pl.BlockSpec((TILE_M, Q), lambda kn, i, j: (j, 0)),  # Z (slot b)
+            pl.BlockSpec((tile_n, Q), lambda kn, i, j: (kn, 0)),  # mu
+            pl.BlockSpec((tile_n, Q), lambda kn, i, j: (kn, 0)),  # S
+            pl.BlockSpec((tile_n, D), lambda kn, i, j: (kn, 0)),  # Y
+            pl.BlockSpec((tile_n, 1), lambda kn, i, j: (kn, 0)),  # w
+            pl.BlockSpec((tile_m, Q), lambda kn, i, j: (i, 0)),  # Z (slot a)
+            pl.BlockSpec((tile_m, Q), lambda kn, i, j: (j, 0)),  # Z (slot b)
             pl.BlockSpec((1, Q), lambda kn, i, j: (0, 0)),  # l^2
-            pl.BlockSpec((TILE_M, TILE_M), lambda kn, i, j: (i, j)),  # G2p
-            pl.BlockSpec((TILE_M, D), lambda kn, i, j: (i, 0)),  # v * gY
+            pl.BlockSpec((tile_m, tile_m), lambda kn, i, j: (i, j)),  # G2p
+            pl.BlockSpec((tile_m, D), lambda kn, i, j: (i, 0)),  # v * gY
         ],
         out_specs=[
-            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # dmu
-            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # dS
-            pl.BlockSpec((TILE_N, D), lambda kn, i, j: (kn, 0)),  # dY
+            pl.BlockSpec((tile_n, Q), lambda kn, i, j: (kn, 0)),  # dmu
+            pl.BlockSpec((tile_n, Q), lambda kn, i, j: (kn, 0)),  # dS
+            pl.BlockSpec((tile_n, D), lambda kn, i, j: (kn, 0)),  # dY
             pl.BlockSpec((Mp, Q), lambda kn, i, j: (0, 0)),  # dZ (resident)
             pl.BlockSpec((1, 1), lambda kn, i, j: (0, 0)),  # dv_raw
             pl.BlockSpec((1, Q), lambda kn, i, j: (0, 0)),  # dl
@@ -543,9 +553,9 @@ def _psi1_bwd_kernel(mu_ref, s_ref, z_ref, l2_ref, gv_ref,
     dl_ref[...] += dl_c
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
 def psi1_bwd_pallas(mu, S, Z, variance, lengthscale, g, *,
-                    interpret: bool = False):
+                    interpret: bool = False, block: tuple | None = None):
     """Pallas reverse pass of ``psi1 = psi1_pallas(...)``.
 
     Returns cotangents ``(dmu, dS, dZ, dvariance, dlengthscale)`` given the
@@ -557,12 +567,16 @@ def psi1_bwd_pallas(mu, S, Z, variance, lengthscale, g, *,
     kernel; the raw variance weight sum W1 is divided by v here (eq. (13)).
     Interpret-mode dtype policy matches the single-statistic forwards:
     computes in the input dtype promoted to at least f32.
+
+    `block=(tile_n, tile_m)` overrides the module-constant tiles (the
+    repro.tune knob); padding makes any block choice numerically identical.
     """
+    tile_n, tile_m = block if block is not None else (TILE_N, TILE_M)
     N, Q = mu.shape
     M = Z.shape[0]
     ct = jnp.promote_types(mu.dtype, jnp.float32) if interpret else jnp.float32
-    pad_n = (-N) % TILE_N
-    pad_m = (-M) % TILE_M
+    pad_n = (-N) % tile_n
+    pad_m = (-M) % tile_m
     mu_p = jnp.pad(mu.astype(ct), ((0, pad_n), (0, 0)))
     S_p = jnp.pad(S.astype(ct), ((0, pad_n), (0, 0)), constant_values=1.0)
     Z_p = jnp.pad(Z.astype(ct), ((0, pad_m), (0, 0)))
@@ -572,20 +586,20 @@ def psi1_bwd_pallas(mu, S, Z, variance, lengthscale, g, *,
 
     Np = mu_p.shape[0]
     Mp = Z_p.shape[0]
-    grid = (Np // TILE_N, Mp // TILE_M)
+    grid = (Np // tile_n, Mp // tile_m)
     dmu, dS, dZ, dvraw, dl = pl.pallas_call(
-        functools.partial(_psi1_bwd_kernel, tile_m=TILE_M, ct=ct),
+        functools.partial(_psi1_bwd_kernel, tile_m=tile_m, ct=ct),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((TILE_N, Q), lambda kn, i: (kn, 0)),  # mu
-            pl.BlockSpec((TILE_N, Q), lambda kn, i: (kn, 0)),  # S
-            pl.BlockSpec((TILE_M, Q), lambda kn, i: (i, 0)),  # Z
+            pl.BlockSpec((tile_n, Q), lambda kn, i: (kn, 0)),  # mu
+            pl.BlockSpec((tile_n, Q), lambda kn, i: (kn, 0)),  # S
+            pl.BlockSpec((tile_m, Q), lambda kn, i: (i, 0)),  # Z
             pl.BlockSpec((1, Q), lambda kn, i: (0, 0)),  # l^2
-            pl.BlockSpec((TILE_N, TILE_M), lambda kn, i: (kn, i)),  # v * g
+            pl.BlockSpec((tile_n, tile_m), lambda kn, i: (kn, i)),  # v * g
         ],
         out_specs=[
-            pl.BlockSpec((TILE_N, Q), lambda kn, i: (kn, 0)),  # dmu
-            pl.BlockSpec((TILE_N, Q), lambda kn, i: (kn, 0)),  # dS
+            pl.BlockSpec((tile_n, Q), lambda kn, i: (kn, 0)),  # dmu
+            pl.BlockSpec((tile_n, Q), lambda kn, i: (kn, 0)),  # dS
             pl.BlockSpec((Mp, Q), lambda kn, i: (0, 0)),  # dZ (resident)
             pl.BlockSpec((1, 1), lambda kn, i: (0, 0)),  # dv_raw
             pl.BlockSpec((1, Q), lambda kn, i: (0, 0)),  # dl
@@ -604,13 +618,15 @@ def psi1_bwd_pallas(mu, S, Z, variance, lengthscale, g, *,
             dl[0].astype(lengthscale.dtype))
 
 
-def kfu_bwd_pallas(X, Z, variance, lengthscale, g, *, interpret: bool = False):
+def kfu_bwd_pallas(X, Z, variance, lengthscale, g, *, interpret: bool = False,
+                   block: tuple | None = None):
     """Pallas reverse pass of ``Kfu = kfu_pallas(...)``: the S -> 0
     specialization of the psi1 reverse kernel (K_fu is psi1 with zero
     latent variance; suffstats_vjp.md §"Exact statistics"). Returns
     ``(dX, dZ, dvariance, dlengthscale)``."""
     dX, _, dZ, dv, dl = psi1_bwd_pallas(X, jnp.zeros_like(X), Z, variance,
-                                        lengthscale, g, interpret=interpret)
+                                        lengthscale, g, interpret=interpret,
+                                        block=block)
     return dX, dZ, dv, dl
 
 
@@ -658,9 +674,9 @@ def _psi2_bwd_kernel(mu_ref, s_ref, w_ref, z1_ref, z2_ref, l2_ref, g2p_ref,
     dl_ref[...] += dl_c
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
 def psi2_bwd_pallas(mu, S, Z, variance, lengthscale, g2, *,
-                    interpret: bool = False):
+                    interpret: bool = False, block: tuple | None = None):
     """Pallas reverse pass of ``psi2 = psi2_pallas(...)``.
 
     Returns cotangents ``(dmu, dS, dZ, dvariance, dlengthscale)`` given the
@@ -669,12 +685,16 @@ def psi2_bwd_pallas(mu, S, Z, variance, lengthscale, g2, *,
     VMEM-resident output split, same folded prefactor
     G2p = g2 * v^2 exp(zterm) (eq. (9)) padded with zeros. Interpret-mode
     dtype policy matches the single-statistic forwards.
+
+    `block=(tile_n, tile_m)` overrides the module-constant tiles (the
+    repro.tune knob); padding makes any block choice numerically identical.
     """
+    tile_n, tile_m = block if block is not None else (TILE_N, TILE_M)
     N, Q = mu.shape
     M = Z.shape[0]
     ct = jnp.promote_types(mu.dtype, jnp.float32) if interpret else jnp.float32
-    pad_n = (-N) % TILE_N
-    pad_m = (-M) % TILE_M
+    pad_n = (-N) % tile_n
+    pad_m = (-M) % tile_m
     mu_p = jnp.pad(mu.astype(ct), ((0, pad_n), (0, 0)))
     S_p = jnp.pad(S.astype(ct), ((0, pad_n), (0, 0)), constant_values=1.0)
     w = jnp.pad(jnp.ones((N, 1), ct), ((0, pad_n), (0, 0)))
@@ -690,22 +710,22 @@ def psi2_bwd_pallas(mu, S, Z, variance, lengthscale, g2, *,
 
     Np = mu_p.shape[0]
     Mp = Z_p.shape[0]
-    grid = (Np // TILE_N, Mp // TILE_M, Mp // TILE_M)
+    grid = (Np // tile_n, Mp // tile_m, Mp // tile_m)
     dmu, dS, dZ, dvraw, dl = pl.pallas_call(
-        functools.partial(_psi2_bwd_kernel, tile_m=TILE_M, ct=ct),
+        functools.partial(_psi2_bwd_kernel, tile_m=tile_m, ct=ct),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # mu
-            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # S
-            pl.BlockSpec((TILE_N, 1), lambda kn, i, j: (kn, 0)),  # w
-            pl.BlockSpec((TILE_M, Q), lambda kn, i, j: (i, 0)),  # Z (slot a)
-            pl.BlockSpec((TILE_M, Q), lambda kn, i, j: (j, 0)),  # Z (slot b)
+            pl.BlockSpec((tile_n, Q), lambda kn, i, j: (kn, 0)),  # mu
+            pl.BlockSpec((tile_n, Q), lambda kn, i, j: (kn, 0)),  # S
+            pl.BlockSpec((tile_n, 1), lambda kn, i, j: (kn, 0)),  # w
+            pl.BlockSpec((tile_m, Q), lambda kn, i, j: (i, 0)),  # Z (slot a)
+            pl.BlockSpec((tile_m, Q), lambda kn, i, j: (j, 0)),  # Z (slot b)
             pl.BlockSpec((1, Q), lambda kn, i, j: (0, 0)),  # l^2
-            pl.BlockSpec((TILE_M, TILE_M), lambda kn, i, j: (i, j)),  # G2p
+            pl.BlockSpec((tile_m, tile_m), lambda kn, i, j: (i, j)),  # G2p
         ],
         out_specs=[
-            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # dmu
-            pl.BlockSpec((TILE_N, Q), lambda kn, i, j: (kn, 0)),  # dS
+            pl.BlockSpec((tile_n, Q), lambda kn, i, j: (kn, 0)),  # dmu
+            pl.BlockSpec((tile_n, Q), lambda kn, i, j: (kn, 0)),  # dS
             pl.BlockSpec((Mp, Q), lambda kn, i, j: (0, 0)),  # dZ (resident)
             pl.BlockSpec((1, 1), lambda kn, i, j: (0, 0)),  # dv_raw
             pl.BlockSpec((1, Q), lambda kn, i, j: (0, 0)),  # dl

@@ -1,0 +1,113 @@
+"""Search-space construction for the tile autotuner.
+
+Candidates are NOT guessed freely: the per-axis tile ladders below are
+crossed and then filtered through the auditor's VMEM residency model and
+tiling rules (`repro.analysis.pallas_audit.audit_candidate`) — only blocks
+that fit the ~16 MiB/core budget and break no TILE001/IDX001 rule ever
+reach the stopwatch. The auditor and the tuner therefore share ONE pricing
+model (`vmem_estimate`); they cannot disagree about what is admissible.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Optional, Tuple
+
+from repro.analysis.pallas_audit import Problem, audit_candidate
+
+__all__ = [
+    "TILE_N_CANDIDATES",
+    "TILE_M_CANDIDATES",
+    "CHUNK_CANDIDATES",
+    "DEFAULT_CHUNK",
+    "default_blocks",
+    "admissible",
+    "candidate_blocks",
+    "candidate_chunks",
+]
+
+# f32 minimum TPU tile is (8, 128): datapoint tiles climb in multiples of 8
+# from the VPU sublane count, inducing-point tiles in lane (=128) multiples.
+TILE_N_CANDIDATES = (32, 64, 128, 256, 512)
+TILE_M_CANDIDATES = (128, 256)
+
+# lax.scan streaming chunk ladder; DEFAULT_CHUNK is the historical constant
+# every chunked path used before chunk="auto" existed.
+CHUNK_CANDIDATES = (1024, 2048, 4096, 8192)
+DEFAULT_CHUNK = 4096
+
+# env knob the CI smoke lane uses to cap grid size (candidate COUNT, not
+# tile extent); unset means the full ladder cross-product
+_ENV_MAX_CANDIDATES = "REPRO_TUNE_MAX_CANDIDATES"
+
+
+def default_blocks(kernel_name: str) -> Tuple[int, int]:
+    """The module-constant (TILE_N, TILE_M) a kernel falls back to when no
+    tuned winner exists — also always the first candidate measured."""
+    from repro.kernels import kfu, psi1, psi2, suffstats
+
+    mod = {
+        "kfu_pallas": kfu,
+        "psi1_pallas": psi1,
+        "psi2_pallas": psi2,
+    }.get(kernel_name, suffstats)
+    return (int(mod.TILE_N), int(mod.TILE_M))
+
+
+def admissible(kernel_name: str, block: Tuple[int, int], *,
+               problem: Problem = Problem(), dtype=None) -> bool:
+    """Does `block` pass the auditor's gate — VMEM fits, no tiling/index
+    finding — at these problem sizes? Nothing executes or lowers."""
+    audit = audit_candidate(kernel_name, block, problem=problem, dtype=dtype)
+    clean = not any(f.code in ("TILE001", "IDX001") for f in audit.findings)
+    return audit.fits and clean
+
+
+def _max_candidates(limit: Optional[int]) -> Optional[int]:
+    if limit is not None:
+        return int(limit)
+    env = os.environ.get(_ENV_MAX_CANDIDATES)
+    return int(env) if env else None
+
+
+def candidate_blocks(kernel_name: str, *, problem: Problem = Problem(),
+                     dtype=None, limit: Optional[int] = None,
+                     ) -> List[Tuple[int, int]]:
+    """Admissible (tile_n, tile_m) candidates worth timing, defaults first.
+
+    `limit` (or $REPRO_TUNE_MAX_CANDIDATES) caps the list AFTER the default
+    block, so even the 2-candidate CI smoke grid compares the shipped
+    constant against one alternative.
+    """
+    limit = _max_candidates(limit)
+    default = default_blocks(kernel_name)
+    ladder = [default] + [
+        (tn, tm)
+        for tn in TILE_N_CANDIDATES
+        for tm in TILE_M_CANDIDATES
+        if (tn, tm) != default
+    ]
+    out: List[Tuple[int, int]] = []
+    for blk in ladder:
+        if limit is not None and len(out) >= limit:
+            break
+        if admissible(kernel_name, blk, problem=problem, dtype=dtype):
+            out.append(blk)
+    return out
+
+
+def candidate_chunks(n: int, *, limit: Optional[int] = None) -> List[int]:
+    """Streaming-chunk candidates for a length-N scan, defaults first.
+    Chunks beyond N are pointless (a single ragged tail); N itself is added
+    so small problems still get a one-chunk candidate."""
+    limit = _max_candidates(limit)
+    ladder = [DEFAULT_CHUNK] + [c for c in CHUNK_CANDIDATES
+                                if c != DEFAULT_CHUNK]
+    out: List[int] = []
+    for c in ladder:
+        if c <= n or c == DEFAULT_CHUNK:
+            out.append(int(c))
+    if n > 0 and int(n) not in out:
+        out.append(int(n))
+    if limit is not None:
+        out = out[:limit]
+    return out
