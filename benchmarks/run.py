@@ -25,7 +25,16 @@ import pathlib
 import sys
 
 SECTIONS = ("gp_scaling", "indistributable", "psi_kernels", "gp_stream",
-            "serve", "lm_step", "roofline", "analysis", "tune")
+            "serve", "serve_load", "lm_step", "roofline", "analysis", "tune")
+
+# every serve_load row must carry these keys (validate_bench_files checks the
+# committed BENCH_serve.json against this, so the sustained-load trajectory
+# can't silently lose its acceptance columns)
+SERVE_LOAD_ROW_KEYS = frozenset({
+    "section", "op", "path", "models", "clients", "duration_s",
+    "budget_bytes", "requests", "qps", "p50_us", "p99_us", "updates",
+    "evictions", "lazy_loads", "peak_resident_bytes", "under_budget",
+})
 
 
 def validate_bench_files(root=None, *, exclude=()) -> list:
@@ -55,6 +64,24 @@ def validate_bench_files(root=None, *, exclude=()) -> list:
                 f"{SCHEMA_VERSION} — regenerate with `python -m benchmarks.run`")
         if not isinstance(doc.get("rows"), list) or not doc["rows"]:
             raise ValueError(f"{path.name}: missing or empty rows list")
+        if path.name == "BENCH_serve.json":
+            load_rows = [r for r in doc["rows"]
+                         if isinstance(r, dict) and r.get("section") == "serve_load"]
+            if not load_rows:
+                raise ValueError(
+                    f"{path.name}: no serve_load rows — regenerate with "
+                    "`python -m benchmarks.run --only serve_load`")
+            for r in load_rows:
+                missing = SERVE_LOAD_ROW_KEYS - r.keys()
+                if missing:
+                    raise ValueError(
+                        f"{path.name}: serve_load row missing keys "
+                        f"{sorted(missing)}")
+                if r.get("budget_bytes") is not None and not r.get("under_budget"):
+                    raise ValueError(
+                        f"{path.name}: budgeted serve_load row exceeded its "
+                        f"budget (peak {r.get('peak_resident_bytes')} > "
+                        f"{r.get('budget_bytes')})")
         names.append(path.name)
     return names
 
@@ -130,6 +157,14 @@ def main() -> None:
               file=sys.stderr)
         csv, serve_doc = serve_latency.run(smoke=args.fast)
         rows += csv
+    load_rows = None
+    if wanted("serve_load"):
+        from benchmarks import serve_load
+
+        print("# serving path - sustained load: QPS, tail latency, eviction "
+              "traffic under a byte budget", file=sys.stderr)
+        csv, load_rows = serve_load.run(smoke=args.fast)
+        rows += csv
     if wanted("lm_step"):
         print("# LM smoke step bench", file=sys.stderr)
         rows += lm_step.run(archs=["smollm-360m", "rwkv6-7b"] if args.fast else ARCH_IDS)
@@ -174,10 +209,36 @@ def main() -> None:
         with open(args.out, "w") as f:
             json.dump(doc, f, indent=1)
         print(f"# wrote {args.out} ({len(json_rows)} rows)", file=sys.stderr)
-    if serve_doc is not None:
+    if serve_doc is not None or load_rows is not None:
+        # BENCH_serve.json holds both the latency sweep and the sustained-load
+        # rows; whichever section didn't run this invocation keeps its rows
+        # from the existing file, so `--only serve_load` never clobbers the
+        # latency trajectory (and vice versa).
+        from benchmarks.common import SCHEMA_VERSION
+
+        existing = {}
+        if serve_doc is None or load_rows is None:
+            try:
+                with open(args.serve_out) as f:
+                    existing = json.load(f)
+            except (OSError, ValueError):
+                existing = {}
+        ex_rows = existing.get("rows") or []
+        if serve_doc is not None:
+            meta, latency_rows = serve_doc["meta"], serve_doc["rows"]
+        else:
+            meta = existing.get("meta") or {
+                "bench": "serve_latency", "schema_version": SCHEMA_VERSION,
+                "smoke": bool(args.fast)}
+            latency_rows = [r for r in ex_rows
+                            if r.get("section") != "serve_load"]
+        if load_rows is None:
+            load_rows = [r for r in ex_rows
+                         if r.get("section") == "serve_load"]
+        merged = {"meta": meta, "rows": latency_rows + load_rows}
         with open(args.serve_out, "w") as f:
-            json.dump(serve_doc, f, indent=1)
-        print(f"# wrote {args.serve_out} ({len(serve_doc['rows'])} rows)",
+            json.dump(merged, f, indent=1)
+        print(f"# wrote {args.serve_out} ({len(merged['rows'])} rows)",
               file=sys.stderr)
     if vmem_doc is not None:
         with open(args.vmem_out, "w") as f:

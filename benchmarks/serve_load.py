@@ -1,0 +1,177 @@
+"""Sustained-load serving benchmark (the BENCH_serve.json `serve_load` rows).
+
+The "millions of users" scenario reduced to a measurable harness: MODELS
+registered models served by one `GPServer` under a byte budget that only
+fits about half of them, driven by CLIENTS concurrent `submit()` streams
+(each hammering its own model mix) plus one concurrent `update()` stream,
+for DURATION seconds, with the states spilling to a scratch `StateStore`.
+
+Two configurations of the same traffic:
+
+  * budgeted   — `budget_bytes` ~ half the total state bytes: the LRU
+                 evicts cold states to the checkpoint store and lazily
+                 reloads them on access. The acceptance bar:
+                 `peak_resident_bytes <= budget_bytes` for the whole run
+                 (the server makes room BEFORE loading, so the budget is a
+                 true ceiling, not a soft target).
+  * unbounded  — same traffic with no budget: the QPS/latency baseline that
+                 prices what eviction+reload costs.
+
+Each row carries QPS, p50/p99 request latency, eviction / lazy-reload
+counts, update throughput, and the peak resident state bytes — all from
+`GPServer.metrics()`. Regenerate with
+`python -m benchmarks.run --only serve_load`.
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+
+MODELS = 6
+N_FIT, M, STEPS = 1024, 24, 30
+BATCH = 16
+CLIENTS, SMOKE_CLIENTS = 8, 4
+DURATION_S, SMOKE_DURATION_S = 8.0, 2.0
+# budget sized to hold about half the registered states resident
+BUDGET_FRACTION = 0.5
+
+
+def _fit_states(smoke: bool):
+    """MODELS distinct fitted states over shifted copies of one dataset —
+    cheap to build, genuinely different posteriors (distinct predictions,
+    so cross-model cache bugs would show as wrong answers)."""
+    from repro.gp import SparseGPRegression, get
+
+    key = jax.random.PRNGKey(0)
+    X = jnp.sort(jax.random.uniform(key, (N_FIT, 1), minval=-3.0, maxval=3.0),
+                 axis=0)
+    states = []
+    kernel = get("rbf")(1)
+    for i in range(MODELS):
+        Y = jnp.sin(2.0 * X + 0.37 * i) + 0.1 * jax.random.normal(
+            jax.random.fold_in(key, i + 1), X.shape)
+        gp = SparseGPRegression(kernel=kernel, M=M).fit(
+            X, Y, steps=5 if smoke else STEPS)
+        states.append(gp.export_state())
+    return kernel, states, X
+
+
+def _drive(srv, names, X, *, clients: int, duration: float):
+    """Concurrent submit() streams + one update() stream for `duration`
+    seconds; returns (latencies_s, requests, updates, errors)."""
+    latencies, errors = [], []
+    lock = threading.Lock()
+    stop = time.monotonic() + duration
+    updates = [0]
+
+    def client(cid: int):
+        # each client walks the model list from its own offset, so every
+        # model stays warm-ish but the working set exceeds the budget
+        i = cid
+        while time.monotonic() < stop:
+            name = names[i % len(names)]
+            i += 1
+            t0 = time.perf_counter()
+            try:
+                srv.submit(name, X[:BATCH], timeout=30.0).result(timeout=60)
+            except Exception as e:  # pragma: no cover - surfaced in the row
+                with lock:
+                    errors.append(repr(e))
+                continue
+            dt = time.perf_counter() - t0
+            with lock:
+                latencies.append(dt)
+
+    def updater():
+        key = jax.random.PRNGKey(99)
+        j = 0
+        while time.monotonic() < stop:
+            name = names[j % len(names)]
+            j += 1
+            Xu = jax.random.uniform(jax.random.fold_in(key, j), (64, 1),
+                                    minval=-3.0, maxval=3.0)
+            try:
+                srv.update(name, Xu, jnp.sin(2.0 * Xu))
+            except Exception as e:  # pragma: no cover
+                with lock:
+                    errors.append(repr(e))
+                continue
+            updates[0] += 1
+
+    threads = [threading.Thread(target=client, args=(c,)) for c in range(clients)]
+    threads.append(threading.Thread(target=updater))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return latencies, len(latencies), updates[0], errors
+
+
+def _percentile(sorted_xs, q):
+    return sorted_xs[min(int(len(sorted_xs) * q), len(sorted_xs) - 1)]
+
+
+def run(*, smoke: bool = False):
+    """Returns (csv_rows, json_rows). Rows land in BENCH_serve.json with
+    section="serve_load" (benchmarks.run merges them with the latency
+    section's rows)."""
+    from repro.serve import GPServer, StateStore
+
+    clients = SMOKE_CLIENTS if smoke else CLIENTS
+    duration = SMOKE_DURATION_S if smoke else DURATION_S
+    kernel, states, X = _fit_states(smoke)
+    state_bytes = states[0].nbytes
+    budget = int(MODELS * state_bytes * BUDGET_FRACTION)
+    names = [f"m{i}" for i in range(MODELS)]
+
+    csv, rows = [], []
+    for path, budget_bytes in (("budgeted", budget), ("unbounded", None)):
+        with tempfile.TemporaryDirectory(prefix="serve_load_") as scratch:
+            srv = GPServer(store=StateStore(scratch), budget_bytes=budget_bytes)
+            for name, st in zip(names, states):
+                srv.register(name, kernel=kernel, state=st)
+            # warm the compile caches outside the measured window
+            for name in names:
+                srv.submit(name, X[:BATCH]).result(timeout=60)
+            lat, requests, updates, errors = _drive(
+                srv, names, X, clients=clients, duration=duration)
+            metrics = srv.metrics()
+            srv.close()
+        lat.sort()
+        row = {
+            "section": "serve_load", "op": "load", "path": path,
+            "models": MODELS, "M": M, "B": BATCH, "clients": clients,
+            "duration_s": float(duration),
+            "state_bytes": int(state_bytes),
+            "budget_bytes": budget_bytes,
+            "requests": int(requests),
+            "qps": float(requests / duration),
+            "p50_us": float(_percentile(lat, 0.50) * 1e6) if lat else None,
+            "p99_us": float(_percentile(lat, 0.99) * 1e6) if lat else None,
+            "updates": int(updates),
+            "errors": len(errors),
+            "evictions": int(metrics["evictions"]),
+            "lazy_loads": int(metrics["lazy_loads"]),
+            "peak_resident_bytes": int(metrics["peak_resident_bytes"]),
+            "under_budget": bool(
+                budget_bytes is None
+                or metrics["peak_resident_bytes"] <= budget_bytes),
+        }
+        rows.append(row)
+        csv.append(
+            f"serve_load_{path},{row['p50_us'] or 0:.1f},"
+            f"qps={row['qps']:.0f} p99_us={row['p99_us'] or 0:.0f} "
+            f"evictions={row['evictions']} "
+            f"peak_resident={row['peak_resident_bytes']}")
+        if errors:  # pragma: no cover - debugging aid, not the happy path
+            csv.append(f"serve_load_{path}_errors,{len(errors)},{errors[0]}")
+    return csv, rows
+
+
+if __name__ == "__main__":
+    out, _ = run(smoke=True)
+    print("\n".join(out))

@@ -85,6 +85,33 @@ assert any(r.get("op") == "submit" for r in rows), "missing submit rows"
 print(f"serve smoke JSON OK ({len(rows)} rows)")
 PY
 
+echo "== benchmark harness (serving sustained load, smoke mode) =="
+# small concurrent predict+update streams against a scratch checkpoint
+# store: asserts the budgeted run's peak resident bytes stayed UNDER the
+# budget (the serving tier's hard acceptance bar) and that eviction/reload
+# traffic actually happened
+LOAD_BENCH="$(mktemp -t BENCH_serve_load_smoke.XXXXXX.json)"
+python -m benchmarks.run --smoke --only serve_load --serve-out "$LOAD_BENCH" > /dev/null
+LOAD_BENCH="$LOAD_BENCH" python - <<'PY'
+import json
+import os
+
+doc = json.load(open(os.environ["LOAD_BENCH"]))
+rows = [r for r in doc["rows"] if r.get("section") == "serve_load"]
+assert {r["path"] for r in rows} == {"budgeted", "unbounded"}, rows
+from benchmarks.run import SERVE_LOAD_ROW_KEYS
+assert all(SERVE_LOAD_ROW_KEYS <= set(r) for r in rows), "load rows malformed"
+assert all(r["errors"] == 0 for r in rows), rows
+budgeted = next(r for r in rows if r["path"] == "budgeted")
+assert budgeted["under_budget"], budgeted
+assert budgeted["peak_resident_bytes"] <= budgeted["budget_bytes"], budgeted
+assert budgeted["evictions"] > 0 and budgeted["lazy_loads"] > 0, budgeted
+assert all(r["requests"] > 0 and r["updates"] > 0 for r in rows), rows
+print(f"serve_load smoke JSON OK ({len(rows)} rows, "
+      f"peak {budgeted['peak_resident_bytes']} <= budget "
+      f"{budgeted['budget_bytes']})")
+PY
+
 echo "== benchmark harness (static VMEM budget table, smoke mode) =="
 VMEM_BENCH="$(mktemp -t BENCH_vmem_smoke.XXXXXX.json)"
 python -m benchmarks.run --smoke --only analysis --vmem-out "$VMEM_BENCH" > /dev/null

@@ -34,10 +34,34 @@ import numpy as np
 PyTree = Any
 
 
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint directory that exists but cannot be trusted: manifest
+    that does not parse, arrays file missing or truncated, or arrays that
+    disagree with the manifest's declared shapes/dtypes. Raised instead of
+    handing back garbage leaves — a torn restore must fail loudly."""
+
+
+def leaf_key(path) -> str:
+    """The manifest/npz key for one pytree leaf path — shared by save and
+    every restore path so the two can never drift."""
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a manifest dtype name, including the ml_dtypes ones numpy
+    does not know natively (bfloat16, float8_*)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
     out = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        key = leaf_key(path)
         arr = np.asarray(leaf)
         if arr.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
             # npz can't round-trip ml_dtypes: store widened; manifest keeps
@@ -112,6 +136,64 @@ class CheckpointManager:
             shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
 
     # ------------------------------------------------------------------
+    def load_manifest(self, step: Optional[int] = None) -> Dict:
+        """The validated manifest of a step: must exist, parse as JSON, and
+        carry a leaves table. Raises CheckpointCorruptError otherwise —
+        cheap enough to call for metadata alone (no array I/O)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step}"
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+        except FileNotFoundError:
+            raise CheckpointCorruptError(f"{d}: manifest.json missing") from None
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise CheckpointCorruptError(
+                f"{d}/manifest.json does not parse as JSON ({e})") from None
+        if not isinstance(manifest.get("leaves"), dict):
+            raise CheckpointCorruptError(
+                f"{d}/manifest.json carries no leaves table")
+        return manifest
+
+    def load_arrays(self, step: Optional[int] = None
+                    ) -> tuple[Dict[str, np.ndarray], Dict]:
+        """Validated raw read: (path-keyed numpy leaves, manifest).
+
+        Every failure mode of a torn or corrupt checkpoint — unparseable
+        manifest, missing/truncated arrays.npz, leaves absent from the
+        archive, shapes disagreeing with the manifest — raises
+        CheckpointCorruptError naming the offending piece; callers never
+        see garbage arrays. Leaves saved widened (ml_dtypes) are cast back
+        to their manifest dtype, so the dict carries the true dtypes."""
+        step = step if step is not None else self.latest_step()
+        manifest = self.load_manifest(step)
+        d = self.dir / f"step_{step}"
+        try:
+            with np.load(d / "arrays.npz") as npz:
+                arrays = {k: npz[k] for k in npz.files}
+        except FileNotFoundError:
+            raise CheckpointCorruptError(f"{d}: arrays.npz missing") from None
+        except Exception as e:
+            raise CheckpointCorruptError(
+                f"{d}/arrays.npz unreadable — truncated or corrupt ({e})"
+            ) from None
+        out = {}
+        for key, meta in manifest["leaves"].items():
+            if key not in arrays:
+                raise CheckpointCorruptError(
+                    f"{d}: leaf {key!r} missing from arrays.npz")
+            arr = arrays[key]
+            if list(arr.shape) != list(meta["shape"]):
+                raise CheckpointCorruptError(
+                    f"{d}: leaf {key!r} has shape {list(arr.shape)}, manifest "
+                    f"declares {meta['shape']}")
+            dtype = _np_dtype(meta["dtype"])
+            if arr.dtype != dtype:
+                arr = arr.astype(dtype)
+            out[key] = arr
+        return out, manifest
+
     def restore(self, target: PyTree, step: Optional[int] = None,
                 shardings: Optional[PyTree] = None) -> tuple[PyTree, Dict]:
         """Restore into the structure of `target`; `shardings` (same structure)
@@ -120,9 +202,7 @@ class CheckpointManager:
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
-        d = self.dir / f"step_{step}"
-        manifest = json.loads((d / "manifest.json").read_text())
-        arrays = np.load(d / "arrays.npz")
+        arrays, manifest = self.load_arrays(step)
 
         flat_target, treedef = jax.tree_util.tree_flatten_with_path(target)
         shard_leaves = None
@@ -131,7 +211,7 @@ class CheckpointManager:
                 shardings, is_leaf=lambda x: hasattr(x, "spec") or x is None)[0]
         leaves = []
         for i, (path, leaf) in enumerate(flat_target):
-            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            key = leaf_key(path)
             if key not in arrays:
                 raise KeyError(f"checkpoint step {step} missing leaf {key}")
             arr = arrays[key]

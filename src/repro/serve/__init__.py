@@ -7,17 +7,30 @@ sufficient-statistics updates, batched low-latency serving.
     mean, var = server.predict("demand", Xt) # bucket-padded, jit-cached
     server.update("demand", X_new, Y_new)    # monoid fold + O(M^3) refold
 
+Persistence and budgeting ride the same state pytree:
+
+    store = StateStore("/srv/gp-states")
+    server = GPServer(store=store, budget_bytes=64 << 20)
+    server.register("demand", gp)            # resident, byte-accounted
+    server.save_all()                        # durable: survives restarts
+    server = GPServer.load(store)            # restart: bit-identical serving
+
 Layering: `state` (the cached-posterior pytree + jitted predict epilogue),
-`online` (update / downdate / refit on the SuffStats monoid), `server` (the
-named-model registry, bucket compile cache, and micro-batching queue). See
+`online` (update / downdate / refit on the SuffStats monoid), `persist`
+(the durable named store over repro.checkpoint.manager + kernel specs),
+`server` (the named-model registry, bucket compile cache, micro-batching
+queue, byte-budgeted LRU residency, and admission control). See
 docs/serving.md.
 """
 from repro.serve.online import batch_stats, downdate, refit, refold, update
-from repro.serve.server import GPServer
+from repro.serve.persist import (PERSIST_SCHEMA, StateStore, kernel_from_spec,
+                                 kernel_spec)
+from repro.serve.server import GPServer, QueueFullError, ServerClosedError
 from repro.serve.state import PosteriorState, build_state, predict
 
 __all__ = [
     "PosteriorState", "build_state", "predict",
     "update", "downdate", "refit", "refold", "batch_stats",
-    "GPServer",
+    "GPServer", "QueueFullError", "ServerClosedError",
+    "StateStore", "PERSIST_SCHEMA", "kernel_spec", "kernel_from_spec",
 ]

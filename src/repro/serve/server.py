@@ -21,12 +21,35 @@ Two serving problems the raw jitted predict does not solve:
 State is swapped atomically under a per-model lock by `update()` /
 `downdate()`, so readers never see a half-written posterior — a predict
 either uses the old state or the new one, both self-consistent.
+
+Three production concerns layered on top (docs/serving.md):
+
+* **Durability** — `store=` names a `repro.serve.persist.StateStore`;
+  `save_all()` persists every dirty state and `GPServer.load(store)`
+  rebuilds a server after a restart that serves bit-identical predictions.
+* **Memory budgeting** — `budget_bytes=` (or `REPRO_SERVE_BUDGET_BYTES`)
+  bounds the bytes of resident `PosteriorState`s with a byte-accounted LRU:
+  cold states are evicted to the store (persisted first if dirty) and
+  lazily reloaded on their next predict/update. The model being touched is
+  never its own victim, so a single state larger than the budget still
+  serves (documented overshoot); everything else stays under budget.
+* **Admission + deadlines** — `max_pending=` bounds queue depth
+  (`QueueFullError` on overflow, in the caller), `timeout=` per submit (or
+  `default_timeout=`) expires requests still queued past their deadline
+  with `TimeoutError` on just their own future — claimed via
+  `set_running_or_notify_cancel` first, so an expiry can never race a
+  caller's cancel or poison the rest of a coalesced group. `close()` is
+  idempotent, drains every accepted request before returning, and
+  register/submit afterwards raise `ServerClosedError`.
 """
 from __future__ import annotations
 
+import os
 import threading
-from collections import deque
+import time
+from collections import OrderedDict, deque
 from concurrent.futures import Future
+from pathlib import Path
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -34,43 +57,66 @@ import jax.numpy as jnp
 
 from repro.gp.kernels import Kernel
 from repro.serve import online
+from repro.serve.persist import StateStore
 from repro.serve.state import PosteriorState, _predict_closure
 
 DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+BUDGET_ENV = "REPRO_SERVE_BUDGET_BYTES"
+
+
+class ServerClosedError(RuntimeError):
+    """register()/submit() after close(): the worker is gone; nothing may
+    be enqueued. The message contains "closed" for RuntimeError matchers."""
+
+
+class QueueFullError(RuntimeError):
+    """Admission control: the submit queue is at max_pending. Rejected in
+    the calling thread — the request never entered the queue."""
 
 
 class _Entry:
-    """A registered model: kernel (static), state (swapped atomically), and
-    a per-entry dict of jitted predict closures keyed (diag,) — a plain
-    attribute lookup on the request hot path instead of hashing the kernel
-    through a global cache on every call. The jits are OWNED by the entry
-    (not the module-level lru cache), so re-registering a name drops the
-    old kernel's executables with the old entry instead of pinning them
-    for the life of the process."""
+    """A registered model: kernel (static), state (swapped atomically, or
+    None while evicted to the store), and a per-entry dict of jitted predict
+    closures keyed (diag,) — a plain attribute lookup on the request hot
+    path instead of hashing the kernel through a global cache on every
+    call. The jits are OWNED by the entry (not the module-level lru cache),
+    so re-registering a name drops the old kernel's executables with the
+    old entry instead of pinning them for the life of the process.
 
-    __slots__ = ("kernel", "state", "lock", "fns")
+    `nbytes` is the resident cost of the state pytree — constant per
+    registration, because every field's shape is fixed by (M, Q, D) and
+    update/downdate only swap same-shaped arrays. `dirty` marks state the
+    store has not seen yet (fresh registration, or mutated since the last
+    save); eviction persists dirty state before dropping it."""
 
-    def __init__(self, kernel: Kernel, state: PosteriorState):
+    __slots__ = ("kernel", "state", "lock", "fns", "nbytes", "dirty")
+
+    def __init__(self, kernel: Kernel, state: Optional[PosteriorState], *,
+                 nbytes: Optional[int] = None, dirty: bool = True):
         self.kernel = kernel
         self.state = state
+        self.nbytes = int(state.nbytes if nbytes is None else nbytes)
+        self.dirty = dirty
         self.lock = threading.Lock()
         self.fns = {True: jax.jit(_predict_closure(kernel, True)),
                     False: jax.jit(_predict_closure(kernel, False))}
 
 
 class _Request:
-    __slots__ = ("name", "X", "diag", "future")
+    __slots__ = ("name", "X", "diag", "future", "deadline")
 
-    def __init__(self, name: str, X: jax.Array, diag: bool, future: Future):
+    def __init__(self, name: str, X: jax.Array, diag: bool, future: Future,
+                 deadline: Optional[float] = None):
         self.name = name
         self.X = X
         self.diag = diag
         self.future = future
+        self.deadline = deadline  # time.monotonic() timestamp, or None
 
 
 class GPServer:
     """Register `PosteriorState`s by name; serve batched low-latency
-    predictions; fold new data in online.
+    predictions; fold new data in online; optionally persist and budget.
 
     Args:
       buckets: allowed padded batch sizes, ascending. Each (model, bucket,
@@ -78,16 +124,60 @@ class GPServer:
       use_buckets: `False` disables padding (every distinct request shape
         compiles its own executable) — exists for the latency benchmark's
         buckets-on/off comparison, not for production use.
+      store: a `StateStore` (or directory path) for persistence: the
+        `save_all()` target, the eviction spill space, and the lazy-reload
+        source. Required when `budget_bytes` is set.
+      budget_bytes: byte cap on resident states (LRU eviction past it).
+        `None` reads the REPRO_SERVE_BUDGET_BYTES env var; unset means
+        unbounded.
+      max_pending: admission bound on submit-queue depth; a submit that
+        would exceed it raises `QueueFullError` in the caller.
+      default_timeout: seconds a submitted request may wait in the queue
+        before expiring with `TimeoutError` (per-call `timeout=` overrides).
     """
 
     def __init__(self, *, buckets: Sequence[int] = DEFAULT_BUCKETS,
-                 use_buckets: bool = True):
+                 use_buckets: bool = True,
+                 store: StateStore | str | Path | None = None,
+                 budget_bytes: Optional[int] = None,
+                 max_pending: Optional[int] = None,
+                 default_timeout: Optional[float] = None):
         if not buckets or list(buckets) != sorted(set(int(b) for b in buckets)):
             raise ValueError(f"buckets must be ascending and unique, got {buckets!r}")
         self.buckets = tuple(int(b) for b in buckets)
         self.use_buckets = bool(use_buckets)
+        if isinstance(store, (str, Path)):
+            store = StateStore(store)
+        self.store = store
+        if budget_bytes is None and os.environ.get(BUDGET_ENV):
+            budget_bytes = int(os.environ[BUDGET_ENV])
+        if budget_bytes is not None:
+            if budget_bytes <= 0:
+                raise ValueError(f"budget_bytes must be positive, got {budget_bytes}")
+            if store is None:
+                raise ValueError(
+                    "budget_bytes needs a store= to evict cold states into "
+                    "(pass a repro.serve.StateStore or a directory path)")
+        self.budget_bytes = budget_bytes
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        self.max_pending = max_pending
+        self.default_timeout = default_timeout
         self._models: Dict[str, _Entry] = {}
         self._registry_lock = threading.Lock()
+        # residency: _lru maps name -> entry for RESIDENT states only, in
+        # least-recently-used order; _resident_bytes is their byte sum.
+        # Both are guarded by _registry_lock (a leaf lock: nothing else is
+        # acquired while holding it). _budget_lock serializes residency
+        # transitions (evict / lazy reload) and orders BEFORE entry locks.
+        self._lru: "OrderedDict[str, _Entry]" = OrderedDict()
+        self._resident_bytes = 0
+        self._budget_lock = threading.Lock()
+        self._evictions = 0
+        self._lazy_loads = 0
+        self._peak_resident = 0
+        self._rejected = 0
+        self._expired = 0
         # micro-batching queue (worker started lazily on first submit)
         self._queue: deque = deque()
         self._cv = threading.Condition()
@@ -109,11 +199,43 @@ class GPServer:
             kernel, state = model.kernel, model.export_state()
         if kernel is None or state is None:
             raise ValueError("register needs a fitted model or both kernel= and state=")
-        with self._registry_lock:
-            self._models[name] = _Entry(kernel, state)
+        with self._cv:
+            if self._closed:
+                raise ServerClosedError(
+                    "GPServer is closed: register() after close() would pair "
+                    "a model with a dead worker")
+        self._insert(name, _Entry(kernel, state))
+
+    def _register_cold(self, name: str) -> None:
+        """Register a persisted model WITHOUT loading its state: the kernel
+        comes from the stored spec, the byte charge from the manifest, and
+        the state stays on disk until the first predict/update touches it.
+        This is how `load()` restarts within budget regardless of how many
+        models the store holds."""
+        kernel, _ = self.store.load_meta(name)
+        entry = _Entry(kernel, None, nbytes=self.store.nbytes(name), dirty=False)
+        self._insert(name, entry)
+
+    def _insert(self, name: str, entry: _Entry) -> None:
+        with self._budget_lock:
+            if entry.state is not None:
+                # make room FIRST: resident bytes never overshoot the budget,
+                # not even transiently (the load-benchmark asserts peak)
+                self._make_room(entry.nbytes, exclude=name)
+            with self._registry_lock:
+                old = self._models.pop(name, None)
+                if old is not None and self._lru.pop(name, None) is not None:
+                    self._resident_bytes -= old.nbytes
+                self._models[name] = entry
+                if entry.state is not None:
+                    self._lru[name] = entry
+                    self._resident_bytes += entry.nbytes
+                    self._peak_resident = max(self._peak_resident,
+                                              self._resident_bytes)
 
     def state(self, name: str) -> PosteriorState:
-        return self._entry(name).state
+        entry = self._entry(name)
+        return self._resident_state(name, entry)
 
     def models(self) -> Tuple[str, ...]:
         # iterating the registry unlocked races a concurrent register():
@@ -131,6 +253,151 @@ class GPServer:
             raise KeyError(
                 f"no model {name!r} registered; have {self.models()}")
         return entry
+
+    # ------------------------------------------------------------------ #
+    # residency: byte-accounted LRU over the store
+    # ------------------------------------------------------------------ #
+
+    def _touch(self, name: str, entry: _Entry) -> None:
+        """Refresh the LRU position of a resident entry."""
+        with self._registry_lock:
+            if entry.state is not None and self._models.get(name) is entry:
+                self._lru[name] = entry
+                self._lru.move_to_end(name)
+
+    def _load_locked(self, name: str, entry: _Entry) -> PosteriorState:
+        """Reload an evicted state from the store and account it resident.
+        Caller holds _budget_lock AND entry.lock (every residency
+        transition is serialized through _budget_lock, so accounting can
+        never tear); takes only the leaf registry lock inside."""
+        _, state = self.store.load(name)
+        entry.state = state
+        entry.dirty = False  # disk copy is exactly what we just loaded
+        with self._registry_lock:
+            self._lazy_loads += 1
+            self._resident_bytes += entry.nbytes
+            self._peak_resident = max(self._peak_resident, self._resident_bytes)
+            self._lru[name] = entry
+            self._lru.move_to_end(name)
+        return state
+
+    def _resident_state(self, name: str, entry: _Entry) -> PosteriorState:
+        """The entry's state, lazily reloaded if evicted. Room is made
+        BEFORE the reload, so resident bytes never overshoot the budget.
+        Lock order on the slow path: _budget_lock -> entry.lock ->
+        _registry_lock."""
+        state = entry.state  # one atomic read: the hot path takes no lock
+        if state is None:
+            with self._budget_lock:
+                if entry.state is None:
+                    self._make_room(entry.nbytes, exclude=name)
+                with entry.lock:
+                    state = entry.state
+                    if state is None:
+                        state = self._load_locked(name, entry)
+        self._touch(name, entry)
+        return state
+
+    def _make_room(self, incoming: int = 0, exclude: Optional[str] = None) -> None:
+        """Evict least-recently-used states until `incoming` more resident
+        bytes fit the budget. Caller holds _budget_lock. `exclude` protects
+        the entry being served right now from becoming its own victim — if
+        it alone exceeds the budget it still serves (the one documented
+        overshoot, see docs/serving.md) rather than thrashing."""
+        if self.budget_bytes is None:
+            return
+        while True:
+            with self._registry_lock:
+                if self._resident_bytes + incoming <= self.budget_bytes:
+                    return
+                victim = next((n for n in self._lru if n != exclude), None)
+            if victim is None:
+                return
+            self._evict(victim)
+
+    def _evict(self, name: str) -> None:
+        """Persist (if dirty) and drop one resident state. Caller holds
+        _budget_lock; the victim's entry lock excludes concurrent
+        update()/reload, and the accounting happens inside it so a reload
+        racing right behind the eviction can never double-count."""
+        with self._registry_lock:
+            entry = self._models.get(name)
+        if entry is None:
+            return
+        with entry.lock:
+            state = entry.state
+            if state is None:
+                return
+            if entry.dirty:
+                self.store.save(name, entry.kernel, state)
+                entry.dirty = False
+            entry.state = None
+            with self._registry_lock:
+                if self._lru.pop(name, None) is not None:
+                    self._resident_bytes -= entry.nbytes
+                self._evictions += 1
+
+    def metrics(self) -> Dict[str, Optional[int]]:
+        """Residency and admission counters, snapshotted: registered /
+        resident model counts, resident / peak-resident / budget bytes,
+        evictions, lazy reloads, admission rejections, queue expiries."""
+        with self._registry_lock:
+            return {
+                "registered": len(self._models),
+                "resident_models": len(self._lru),
+                "resident_bytes": self._resident_bytes,
+                "peak_resident_bytes": self._peak_resident,
+                "budget_bytes": self.budget_bytes,
+                "evictions": self._evictions,
+                "lazy_loads": self._lazy_loads,
+                "rejected": self._rejected,
+                "expired": self._expired,
+            }
+
+    # ------------------------------------------------------------------ #
+    # persistence: save_all / load
+    # ------------------------------------------------------------------ #
+
+    def _require_store(self) -> StateStore:
+        if self.store is None:
+            raise ValueError(
+                "GPServer has no store= — construct it with a "
+                "repro.serve.StateStore (or directory path) to persist")
+        return self.store
+
+    def save_all(self) -> Tuple[str, ...]:
+        """Persist every registered model whose state the store has not
+        seen; returns the names written. Evicted entries are clean by
+        construction (eviction persists dirty state first), so a
+        save_all() + process death loses nothing."""
+        store = self._require_store()
+        saved = []
+        for name in self.models():
+            with self._registry_lock:
+                entry = self._models.get(name)
+            if entry is None:
+                continue
+            with entry.lock:
+                if entry.state is not None and entry.dirty:
+                    store.save(name, entry.kernel, entry.state)
+                    entry.dirty = False
+                    saved.append(name)
+        return tuple(saved)
+
+    @classmethod
+    def load(cls, store: StateStore | str | Path, **kwargs) -> "GPServer":
+        """Rebuild a server from a checkpoint store after a restart.
+
+        Every persisted model is registered COLD — kernel and jit closures
+        live, state still on disk — so the restarted process starts within
+        any budget no matter how many models the store holds, and pays one
+        lazy reload per model on first use. Predictions after the reload
+        are bit-identical to the pre-restart server's
+        (tests/test_serve_persist.py)."""
+        srv = cls(store=store, **kwargs)
+        for name in srv.store.names():
+            srv._register_cold(name)
+        return srv
 
     # ------------------------------------------------------------------ #
     # bucketed predict
@@ -151,14 +418,15 @@ class GPServer:
                 f"requests must be non-empty (B, Q) batches, got shape {X.shape}")
         return X
 
-    def _predict_padded(self, entry: _Entry, X: jax.Array, diag: bool):
+    def _predict_padded(self, name: str, entry: _Entry, X: jax.Array, diag: bool):
         """One device call at a bucket shape; returns unpadded (mean, var).
         Padding repeats the last row — benign values (no 0/0 in the kernel
         math), and the padded rows are sliced away. Row results are
         independent, so padding cannot perturb the real rows. The state is
-        read ONCE here: oversized requests served in slices all use the
-        same posterior even if a concurrent update() swaps it mid-request."""
-        state = entry.state  # one atomic read per request
+        read ONCE here (lazily reloaded if evicted): oversized requests
+        served in slices all use the same posterior even if a concurrent
+        update() swaps it mid-request."""
+        state = self._resident_state(name, entry)
         fn = entry.fns[diag]
         if not self.use_buckets:
             return fn(state, X)
@@ -188,21 +456,38 @@ class GPServer:
     def predict(self, name: str, X, *, diag: bool = True):
         """Synchronous predict through the bucket cache: mean (B, D) and
         marginal variance (B,) (or (B, B) covariance with diag=False)."""
-        return self._predict_padded(self._entry(name), self._check_batch(X), diag)
+        return self._predict_padded(name, self._entry(name),
+                                    self._check_batch(X), diag)
 
     # ------------------------------------------------------------------ #
     # micro-batching submit
     # ------------------------------------------------------------------ #
 
-    def submit(self, name: str, X, *, diag: bool = True) -> Future:
+    def submit(self, name: str, X, *, diag: bool = True,
+               timeout: Optional[float] = None) -> Future:
         """Enqueue a predict; returns a Future of (mean, var). Concurrent
-        submissions against the same model coalesce into one device call."""
+        submissions against the same model coalesce into one device call.
+
+        `timeout` (seconds, default `default_timeout`) bounds how long the
+        request may WAIT IN THE QUEUE: a request still queued past its
+        deadline fails with TimeoutError on its own future only. Raises
+        QueueFullError if the queue is at max_pending (admission control)
+        and ServerClosedError after close()."""
         self._entry(name)  # fail fast on unknown names, in the caller
+        if timeout is None:
+            timeout = self.default_timeout
+        deadline = None if timeout is None else time.monotonic() + float(timeout)
         fut: Future = Future()
-        req = _Request(name, self._check_batch(X), bool(diag), fut)
+        req = _Request(name, self._check_batch(X), bool(diag), fut, deadline)
         with self._cv:
             if self._closed:
-                raise RuntimeError("GPServer is closed")
+                raise ServerClosedError("GPServer is closed")
+            if self.max_pending is not None and len(self._queue) >= self.max_pending:
+                self._rejected += 1
+                raise QueueFullError(
+                    f"GPServer queue is full ({len(self._queue)} pending >= "
+                    f"max_pending={self.max_pending}); retry later or raise "
+                    f"max_pending")
             self._queue.append(req)
             if self._worker is None:
                 self._worker = threading.Thread(
@@ -210,6 +495,32 @@ class GPServer:
                 self._worker.start()
             self._cv.notify()
         return fut
+
+    def _claim(self, pending: list) -> list:
+        """Claim each dequeued request and weed out the dead ones.
+
+        A caller may have cancel()ed while the request sat in the queue, and
+        set_result on a cancelled Future raises InvalidStateError — which
+        would abort delivery for every later request in the same coalesced
+        group. set_running_or_notify_cancel marks the survivors RUNNING,
+        which also makes them uncancellable, so neither expiry here nor
+        delivery below can race another cancel(). Requests whose deadline
+        passed while queued expire with TimeoutError on their own future —
+        the rest of the group is untouched."""
+        claimed = []
+        now = time.monotonic()
+        for r in pending:
+            if not r.future.set_running_or_notify_cancel():
+                continue  # caller cancelled while queued
+            if r.deadline is not None and now > r.deadline:
+                r.future.set_exception(TimeoutError(
+                    f"request for {r.name!r} expired after waiting past its "
+                    f"deadline in the GPServer queue"))
+                with self._registry_lock:
+                    self._expired += 1
+                continue
+            claimed.append(r)
+        return claimed
 
     def _serve_loop(self) -> None:
         while True:
@@ -220,14 +531,7 @@ class GPServer:
                     return
                 pending = list(self._queue)
                 self._queue.clear()
-            # claim each dequeued future: a caller may have cancel()ed while
-            # the request sat in the queue, and set_result on a cancelled
-            # Future raises InvalidStateError — which would abort delivery
-            # for every later request in the same coalesced group. Marking
-            # the survivors RUNNING here also makes them uncancellable, so
-            # delivery below cannot race another cancel().
-            pending = [r for r in pending
-                       if r.future.set_running_or_notify_cancel()]
+            pending = self._claim(pending)
             # coalesce by (model, diag, feature-dim, dtype) — mixing dtypes
             # would silently promote the concatenated batch and hand some
             # callers a different dtype than predict() returns; diag=False
@@ -251,28 +555,37 @@ class GPServer:
                     if not diag or len(reqs) == 1:
                         for r in reqs:
                             r.future.set_result(
-                                self._predict_padded(entry, r.X, diag))
+                                self._predict_padded(name, entry, r.X, diag))
                         continue
                     X = jnp.concatenate([r.X for r in reqs])
-                    mean, var = self._predict_padded(entry, X, True)
+                    mean, var = self._predict_padded(name, entry, X, True)
                     off = 0
                     for r in reqs:
                         b = r.X.shape[0]
                         r.future.set_result((mean[off:off + b], var[off:off + b]))
                         off += b
                 except Exception as e:  # noqa: BLE001 — delivered to callers
+                    # a device failure mid-batch fails ITS OWN group only:
+                    # other groups in this drain keep going, and the worker
+                    # survives to serve the next drain
                     for r in reqs:
                         if not r.future.done():
                             r.future.set_exception(e)
 
-    def close(self) -> None:
-        """Drain the queue and stop the worker thread."""
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Drain the queue and stop the worker thread. Idempotent. Every
+        request accepted before close() completes (the worker processes the
+        remaining queue before exiting — graceful drain); register() and
+        submit() afterwards raise ServerClosedError. `timeout` bounds the
+        drain wait (None = wait for full drain)."""
         with self._cv:
             self._closed = True
             self._cv.notify_all()
-        if self._worker is not None:
-            self._worker.join(timeout=5.0)
-            self._worker = None
+            worker = self._worker
+        if worker is not None:
+            worker.join(timeout)
+            if not worker.is_alive():
+                self._worker = None
 
     def __enter__(self) -> "GPServer":
         return self
@@ -284,31 +597,55 @@ class GPServer:
     # online learning
     # ------------------------------------------------------------------ #
 
+    def _mutate(self, name: str, fn):
+        """Shared update/downdate/refit skeleton: swap the state atomically
+        under the entry lock, reloading an evicted state first through the
+        budgeted `_resident_state` path (never while holding the entry
+        lock, which would invert the _budget_lock -> entry.lock order). The
+        retry handles the rare eviction that lands between the reload and
+        the lock; the swap keeps nbytes constant, so no room-making is
+        needed afterwards."""
+        entry = self._entry(name)
+        while True:
+            if entry.state is None:
+                self._resident_state(name, entry)
+            with entry.lock:
+                state = entry.state
+                if state is None:
+                    continue  # evicted under our feet — reload and retry
+                result = fn(entry, state)
+                entry.dirty = True
+                self._touch(name, entry)
+                return result
+
     def update(self, name: str, X_new, Y_new, *, backend: str = "jnp",
                chunk: Optional[int] = None, bwd_backend: str = "auto") -> None:
         """Fold new observations into the named state (monoid combine +
-        O(M^3) refold) and swap it in atomically."""
-        entry = self._entry(name)
-        with entry.lock:
+        O(M^3) refold) and swap it in atomically. Reloads an evicted state
+        first; the result is dirty until the next save/eviction persists it."""
+        def fold(entry, state):
             entry.state = online.update(
-                entry.kernel, entry.state, jnp.asarray(X_new),
-                jnp.asarray(Y_new), backend=backend, chunk=chunk,
-                bwd_backend=bwd_backend)
+                entry.kernel, state, jnp.asarray(X_new), jnp.asarray(Y_new),
+                backend=backend, chunk=chunk, bwd_backend=bwd_backend)
+
+        self._mutate(name, fold)
 
     def downdate(self, name: str, X_old, Y_old, *, backend: str = "jnp",
                  chunk: Optional[int] = None) -> None:
         """Subtract previously-absorbed observations (guarded refold)."""
-        entry = self._entry(name)
-        with entry.lock:
+        def fold(entry, state):
             entry.state = online.downdate(
-                entry.kernel, entry.state, jnp.asarray(X_old),
-                jnp.asarray(Y_old), backend=backend, chunk=chunk)
+                entry.kernel, state, jnp.asarray(X_old), jnp.asarray(Y_old),
+                backend=backend, chunk=chunk)
+
+        self._mutate(name, fold)
 
     def refit(self, name: str, *, steps: int = 50, lr: float = 5e-2) -> list:
         """Noise-precision touch-up from the cached statistics (see
         repro.serve.online.refit); returns the loss history."""
-        entry = self._entry(name)
-        with entry.lock:
-            entry.state, history = online.refit(entry.kernel, entry.state,
+        def fold(entry, state):
+            entry.state, history = online.refit(entry.kernel, state,
                                                 steps=steps, lr=lr)
-        return history
+            return history
+
+        return self._mutate(name, fold)

@@ -56,6 +56,14 @@ class PosteriorState(NamedTuple):
     def D(self) -> int:
         return self.Kuu_inv_mean.shape[1]
 
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes of the whole state pytree — what the server's
+        byte-budgeted LRU charges per model. Constant for a registration:
+        every field's shape is fixed by (M, Q, D), and online
+        update/downdate swap same-shaped arrays."""
+        return int(sum(x.nbytes for x in jax.tree_util.tree_leaves(self)))
+
 
 def build_state(kernel: Kernel, params: Params, stats: SuffStats, *,
                 jitter: float = svgp.DEFAULT_JITTER) -> PosteriorState:

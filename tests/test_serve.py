@@ -5,6 +5,7 @@ micro-batching server round-trip, the facade posterior cache, and the
 million-point no-(N, M)-materialization guarantee — same trace-assertion
 style as tests/test_streaming.py."""
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -363,6 +364,169 @@ def test_server_online_update_shifts_predictions():
                                rtol=1e-7, atol=1e-9)
     hist = srv.refit("m", steps=5)
     assert len(hist) >= 2 and np.isfinite(hist[-1])
+
+
+# ---------------------------------------------------------------------------
+# fault injection: a production queue must degrade per-request, never
+# per-server (the worker survives everything a request can throw at it)
+# ---------------------------------------------------------------------------
+
+def _gate_model(srv, name):
+    """Wrap a registered entry's predict closures behind a gate: the worker
+    blocks inside the device call until `release.set()`, and `started` flags
+    that the worker has dequeued (so the queue length is deterministic)."""
+    entry = srv._models[name]
+    orig = dict(entry.fns)
+    started, release = threading.Event(), threading.Event()
+
+    def gated(state, X):
+        started.set()
+        assert release.wait(30), "test gate never released"
+        return orig[True](state, X)
+
+    entry.fns = {True: gated, False: orig[False]}
+    return started, release
+
+
+def test_poisoned_device_call_fails_only_its_own_futures():
+    """An exception out of one model's device call lands on that group's
+    futures; other groups in the same drain complete, and the worker is
+    alive for the next drain."""
+    gp, X, _ = _fitted_gp(jax.random.PRNGKey(20), steps=5)
+    st = gp.export_state()
+    boom = RuntimeError("injected device failure")
+    with GPServer() as srv:
+        srv.register("ok", kernel=gp.kernel, state=st)
+        srv.register("bad", kernel=gp.kernel, state=st)
+        srv._models["bad"].fns = {True: _raiser(boom), False: _raiser(boom)}
+        # hold the worker so both models' requests land in ONE drain
+        started, release = _gate_model(srv, "ok")
+        first = srv.submit("ok", X[:2])
+        assert started.wait(30)
+        bad_futs = [srv.submit("bad", X[:3]) for _ in range(3)]
+        ok_futs = [srv.submit("ok", X[3 * i: 3 * i + 3]) for i in range(3)]
+        release.set()
+        for fut in bad_futs:  # the poisoned group: ITS futures fail
+            with pytest.raises(RuntimeError, match="injected"):
+                fut.result(timeout=30)
+        for i, fut in enumerate(ok_futs):  # siblings in the drain complete
+            mean, _ = fut.result(timeout=30)
+            want, _ = serve.predict(gp.kernel, st, X[3 * i: 3 * i + 3])
+            np.testing.assert_allclose(np.asarray(mean), np.asarray(want),
+                                       rtol=1e-12, atol=1e-14)
+        first.result(timeout=30)
+        # worker survived: a fresh healthy request round-trips
+        srv.submit("ok", X[:2]).result(timeout=30)
+
+
+def _raiser(exc):
+    def fn(state, X):
+        raise exc
+
+    return fn
+
+
+def test_expired_deadline_fails_only_its_own_future():
+    """A request that waits past its deadline gets TimeoutError on its own
+    future at claim time; the rest of the coalesced group is served. Expiry
+    happens AFTER set_running_or_notify_cancel, so it can never race a
+    caller-side cancel() into InvalidStateError."""
+    from concurrent.futures import Future
+
+    from repro.serve.server import _Request
+
+    gp, X, _ = _fitted_gp(jax.random.PRNGKey(21), steps=5)
+    st = gp.export_state()
+    with GPServer() as srv:
+        srv.register("gp", kernel=gp.kernel, state=st)
+        # enqueue an already-expired request by hand BEFORE the worker
+        # exists (same trick as the cancelled-future regression test): the
+        # next submit() starts the worker, which drains both as one group
+        expired = Future()
+        with srv._cv:
+            srv._queue.append(_Request("gp", X[:2], True, expired,
+                                       deadline=-1.0))
+        live = [srv.submit("gp", X[3 * i: 3 * i + 3]) for i in range(3)]
+        for i, fut in enumerate(live):
+            mean, _ = fut.result(timeout=30)
+            want, _ = srv.predict("gp", X[3 * i: 3 * i + 3])
+            np.testing.assert_allclose(np.asarray(mean), np.asarray(want),
+                                       rtol=1e-12, atol=1e-14)
+        with pytest.raises(TimeoutError, match="deadline"):
+            expired.result(timeout=30)
+        assert srv.metrics()["expired"] == 1
+        # the queue is not wedged: the next submit round-trips
+        srv.submit("gp", X[:2]).result(timeout=30)
+
+
+def test_admission_control_rejects_at_max_pending():
+    """Submits past max_pending fail fast with QueueFullError in the CALLER
+    (the request never enters the queue); accepted requests are unaffected
+    and complete once the worker unblocks."""
+    from repro.serve import QueueFullError
+
+    gp, X, _ = _fitted_gp(jax.random.PRNGKey(22), steps=5)
+    with GPServer(max_pending=2) as srv:
+        srv.register("gp", gp)
+        started, release = _gate_model(srv, "gp")
+        first = srv.submit("gp", X[:2])  # worker dequeues this and blocks
+        assert started.wait(30)
+        accepted = [srv.submit("gp", X[:2]) for _ in range(2)]  # fills queue
+        with pytest.raises(QueueFullError, match="max_pending"):
+            srv.submit("gp", X[:2])
+        assert srv.metrics()["rejected"] == 1
+        release.set()
+        for fut in (first, *accepted):  # rejection did not poison anyone
+            mean, var = fut.result(timeout=30)
+            assert mean.shape == (2, 1) and var.shape == (2,)
+    # queue empties after the drain -> no lingering admission debt
+    assert srv.metrics()["rejected"] == 1
+
+
+def test_close_drains_inflight_submits_deterministically():
+    """close() during in-flight submits: every accepted Future completes
+    (graceful drain), late submits fail with ServerClosedError, and close()
+    is idempotent."""
+    from repro.serve import ServerClosedError
+
+    gp, X, _ = _fitted_gp(jax.random.PRNGKey(23), steps=5)
+    srv = GPServer()
+    srv.register("gp", gp)
+    started, release = _gate_model(srv, "gp")
+    first = srv.submit("gp", X[:2])
+    assert started.wait(30)
+    queued = [srv.submit("gp", X[:3]) for _ in range(8)]  # sit in the queue
+    closer = threading.Thread(target=srv.close)
+    closer.start()
+    release.set()
+    closer.join(timeout=30)
+    assert not closer.is_alive()
+    for fut in (first, *queued):  # accepted before close() => completed
+        mean, _ = fut.result(timeout=30)
+        assert np.all(np.isfinite(np.asarray(mean)))
+    srv.close()  # idempotent: second close is a no-op, not an error
+    with pytest.raises(ServerClosedError, match="closed"):
+        srv.submit("gp", X[:2])
+    with pytest.raises(ServerClosedError, match="closed"):
+        srv.register("gp2", gp)
+
+
+def test_default_timeout_applies_to_submits(tmp_path):
+    """ctor default_timeout stamps a deadline on every submit: a request
+    stuck behind a blocked worker past it expires with TimeoutError."""
+    gp, X, _ = _fitted_gp(jax.random.PRNGKey(24), steps=5)
+    with GPServer(default_timeout=0.05) as srv:
+        srv.register("gp", gp)
+        started, release = _gate_model(srv, "gp")
+        first = srv.submit("gp", X[:2], timeout=30.0)  # explicit override
+        assert started.wait(30)
+        doomed = srv.submit("gp", X[:2])  # inherits the 50ms default
+        time.sleep(0.2)  # let the deadline lapse while queued
+        release.set()
+        first.result(timeout=30)
+        with pytest.raises(TimeoutError, match="deadline"):
+            doomed.result(timeout=30)
+        assert srv.metrics()["expired"] == 1
 
 
 # ---------------------------------------------------------------------------

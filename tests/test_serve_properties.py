@@ -1,0 +1,142 @@
+"""Property tests for the online-update algebra (`repro.serve.online`).
+
+The serving tier's durability story leans on one algebraic fact: SuffStats
+is a commutative monoid over datapoints, so streaming arbitrary chunkings of
+a dataset through `serve.online.update` must land on the same posterior as
+the one-shot build — regardless of partition, order, or statistics backend.
+These tests state that as properties over RANDOM partitions rather than the
+hand-picked splits in tests/test_serve.py.
+
+Runs under real `hypothesis` when installed; otherwise the deterministic
+fallback in tests/_hypothesis_compat.py draws a fixed pseudo-random spread
+of examples (no shrinking, same properties).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+from repro import serve
+from repro.core.psi_stats import SuffStats
+from repro.gp import get, suff_stats
+from repro.gp.stats import ExactBatch
+from repro.serve import online
+
+Q, D, M = 2, 2, 8
+
+
+def _f64(tree):
+    return jax.tree.map(lambda x: x.astype(jnp.float64), tree)
+
+
+def _data(seed: int, N: int):
+    key = jax.random.PRNGKey(seed)
+    X = jax.random.normal(key, (N, Q), jnp.float64)
+    w = jnp.arange(1, D + 1, dtype=jnp.float64)
+    Y = jnp.sin(X.sum(axis=1))[:, None] * w + 0.05 * jax.random.normal(
+        jax.random.fold_in(key, 1), (N, D), jnp.float64)
+    Z = X[:: max(N // M, 1)][:M]
+    kern = _f64(get("rbf")(Q).init(1.3, 0.8))
+    params = {"kern": kern, "Z": Z,
+              "log_beta": jnp.asarray(2.0, jnp.float64)}
+    return X, Y, params
+
+
+def _one_shot(kernel, params, X, Y):
+    stats = suff_stats(kernel, params["kern"], ExactBatch(X, Y, params["Z"]))
+    return serve.build_state(kernel, params, stats)
+
+
+def _partition(n: int, pieces: int, seed: int):
+    """Split range(n) into `pieces` non-empty contiguous chunks at
+    pseudo-random cut points, then shuffle the chunk order."""
+    rng = np.random.default_rng(seed)
+    cuts = np.sort(rng.choice(np.arange(1, n), size=pieces - 1, replace=False))
+    bounds = [0, *cuts.tolist(), n]
+    chunks = [(bounds[i], bounds[i + 1]) for i in range(pieces)]
+    rng.shuffle(chunks)
+    return chunks
+
+
+def _assert_states_close(a, b, rtol=1e-8, atol=1e-8):
+    for x, y, name in zip(a.stats, b.stats, SuffStats._fields):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=rtol,
+                                   atol=atol, err_msg=f"stats.{name}")
+    for name in ("L", "LA", "Kuu_inv_mean"):
+        np.testing.assert_allclose(np.asarray(getattr(a, name)),
+                                   np.asarray(getattr(b, name)), rtol=1e-6,
+                                   atol=1e-6, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# streamed chunk folds commute/associate with the one-shot build
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(40, 90),
+       pieces=st.integers(2, 5),
+       backend=st.sampled_from(["jnp", "fused"]))
+def test_streamed_partition_matches_one_shot(seed, n, pieces, backend):
+    """Any partition of the data, streamed chunk-by-chunk in any order
+    through online.update, equals the one-shot fit: the monoid fold is
+    associative and commutative, so the serving tier may absorb data in
+    whatever order requests arrive."""
+    X, Y, params = _data(seed, n)
+    kernel = get("rbf")(Q)
+    chunks = _partition(n, pieces, seed + 1)
+    lo, hi = chunks[0]
+    state = _one_shot(kernel, params, X[lo:hi], Y[lo:hi])
+    for lo, hi in chunks[1:]:
+        state = online.update(kernel, state, X[lo:hi], Y[lo:hi],
+                              backend=backend)
+    scratch = _one_shot(kernel, params, X, Y)
+    assert float(state.stats.n) == float(scratch.stats.n) == n
+    _assert_states_close(state, scratch)
+    # and the served predictions agree where it matters
+    Xt = X[: min(9, n)]
+    mean_a, var_a = serve.predict(kernel, state, Xt)
+    mean_b, var_b = serve.predict(kernel, scratch, Xt)
+    np.testing.assert_allclose(np.asarray(mean_a), np.asarray(mean_b),
+                               rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(var_a), np.asarray(var_b),
+                               rtol=1e-6, atol=1e-8)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(40, 80),
+       pieces=st.integers(2, 4))
+def test_fold_order_is_immaterial(seed, n, pieces):
+    """Two different shuffles of the same chunk set reach bitwise-close
+    states: update is a fold over a commutative monoid, not a sequence-
+    sensitive recursion."""
+    X, Y, params = _data(seed, n)
+    kernel = get("rbf")(Q)
+    chunks = _partition(n, pieces, seed + 1)
+
+    def fold(order):
+        lo, hi = order[0]
+        s = _one_shot(kernel, params, X[lo:hi], Y[lo:hi])
+        for lo, hi in order[1:]:
+            s = online.update(kernel, s, X[lo:hi], Y[lo:hi])
+        return s
+
+    _assert_states_close(fold(chunks), fold(list(reversed(chunks))))
+
+
+# ---------------------------------------------------------------------------
+# update then downdate is the identity (monoid inverse)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(40, 80),
+       b=st.integers(5, 30), backend=st.sampled_from(["jnp", "fused"]))
+def test_update_downdate_roundtrip(seed, n, b, backend):
+    """downdate(update(s, chunk), chunk) == s to f64 tolerance, for random
+    base sets and random extra chunks on both statistics backends."""
+    X, Y, params = _data(seed, n + b)
+    kernel = get("rbf")(Q)
+    base = _one_shot(kernel, params, X[:n], Y[:n])
+    up = online.update(kernel, base, X[n:], Y[n:], backend=backend)
+    back = online.downdate(kernel, up, X[n:], Y[n:], backend=backend)
+    assert float(back.stats.n) == float(base.stats.n) == n
+    _assert_states_close(back, base)
