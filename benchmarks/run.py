@@ -25,7 +25,8 @@ import pathlib
 import sys
 
 SECTIONS = ("gp_scaling", "indistributable", "psi_kernels", "gp_stream",
-            "serve", "serve_load", "lm_step", "roofline", "analysis", "tune")
+            "serve", "serve_load", "temporal", "lm_step", "roofline",
+            "analysis", "tune")
 
 # every serve_load row must carry these keys (validate_bench_files checks the
 # committed BENCH_serve.json against this, so the sustained-load trajectory
@@ -109,6 +110,11 @@ def main() -> None:
                     help="where to write the autotuner tuned-vs-default "
                          "table (default: BENCH_tune.json, or "
                          "BENCH_tune.smoke.json under --smoke)")
+    ap.add_argument("--temporal-out", default=None,
+                    help="where to write the temporal-backend parallel-vs-"
+                         "sequential scan table (default: "
+                         "BENCH_temporal.json, or BENCH_temporal.smoke.json "
+                         "under --smoke)")
     args = ap.parse_args()
     if args.out is None:
         args.out = "BENCH_gp.smoke.json" if args.fast else "BENCH_gp.json"
@@ -118,10 +124,14 @@ def main() -> None:
         args.vmem_out = "BENCH_vmem.smoke.json" if args.fast else "BENCH_vmem.json"
     if args.tune_out is None:
         args.tune_out = "BENCH_tune.smoke.json" if args.fast else "BENCH_tune.json"
+    if args.temporal_out is None:
+        args.temporal_out = ("BENCH_temporal.smoke.json" if args.fast
+                             else "BENCH_temporal.json")
 
     overwriting = {pathlib.Path(args.out).name, pathlib.Path(args.serve_out).name,
                    pathlib.Path(args.vmem_out).name,
-                   pathlib.Path(args.tune_out).name}
+                   pathlib.Path(args.tune_out).name,
+                   pathlib.Path(args.temporal_out).name}
     committed = validate_bench_files(exclude=overwriting)
     print(f"# committed bench files OK: {', '.join(committed) or '(none)'}",
           file=sys.stderr)
@@ -156,6 +166,14 @@ def main() -> None:
         print("# serving path - predict latency p50/p95 + update throughput",
               file=sys.stderr)
         csv, serve_doc = serve_latency.run(smoke=args.fast)
+        rows += csv
+    temporal_doc = None
+    if wanted("temporal"):
+        from benchmarks import temporal_bench
+
+        print("# temporal backend - parallel associative scan vs sequential "
+              "lax.scan (lml + predict)", file=sys.stderr)
+        csv, temporal_doc = temporal_bench.run(smoke=args.fast)
         rows += csv
     load_rows = None
     if wanted("serve_load"):
@@ -249,6 +267,11 @@ def main() -> None:
         with open(args.tune_out, "w") as f:
             json.dump(tune_doc, f, indent=1)
         print(f"# wrote {args.tune_out} ({len(tune_doc['rows'])} rows)",
+              file=sys.stderr)
+    if temporal_doc is not None:
+        with open(args.temporal_out, "w") as f:
+            json.dump(temporal_doc, f, indent=1)
+        print(f"# wrote {args.temporal_out} ({len(temporal_doc['rows'])} rows)",
               file=sys.stderr)
 
 

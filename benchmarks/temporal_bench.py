@@ -1,0 +1,108 @@
+"""Temporal (state-space GP) backend benchmark (BENCH_temporal.json).
+
+Wall-clock of the two scan paths over the SAME per-step model arrays, at
+N in {16k, 64k, 256k, 1M} (Matern-3/2, d = 2):
+
+  * lml      — `kalman_filter(...).lml`: the training objective
+               (what every optimizer step evaluates);
+  * predict  — filter + RTS smoother: the posterior-marginals pass behind
+               `TemporalGPRegression.predict` / `.posterior`.
+
+`path=parallel` is the `jax.lax.associative_scan` formulation (O(N) work,
+O(log N) depth); `path=sequential` is the `lax.scan` textbook recursion
+(O(N) work AND depth). Each parallel row carries `speedup_vs_sequential` —
+the paper's parallelization story measured along time. On a serial backend
+(CPU) the parallel path's ~2x work overhead can outweigh the depth win, so
+speedups below 1 are expected there and recorded honestly; the depth win
+needs parallel hardware (GPU/TPU), same as the paper's.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import SCHEMA_VERSION, row, time_call
+
+SIZES = (16_384, 65_536, 262_144, 1_048_576)
+SMOKE_SIZES = (4_096, 16_384)
+D_STATE = 2  # Matern32
+
+
+def _model_arrays(n: int):
+    """Per-step (A, Q, H, R, y, m0, P0) for a Matern-3/2 over n
+    non-uniformly spaced timestamps (the session default dtype)."""
+    from repro.gp import kernels as gpk
+    from repro.temporal import discretize
+
+    kernel = gpk.Matern32(1)
+    params = {
+        "log_variance": jnp.asarray(0.0),
+        "log_lengthscale": jnp.full((1,), -1.0),
+    }
+    key = jax.random.PRNGKey(0)
+    gaps = jax.random.uniform(key, (n,), minval=0.5e-4, maxval=1.5e-4)
+    t = jnp.cumsum(gaps)
+    y = jnp.sin(40.0 * t)[:, None] + 0.1 * jax.random.normal(
+        jax.random.fold_in(key, 1), (n, 1))
+    model = kernel.to_sde(params)
+    dt = jnp.concatenate([jnp.zeros_like(t[:1]), jnp.diff(t)])
+    A, Q = discretize(model, dt)
+    m0 = jnp.zeros((model.d, 1), A.dtype)
+    return A, Q, model.H, jnp.asarray(0.01), y, m0, model.Pinf
+
+
+def run(smoke: bool = False):
+    """Returns (csv_rows, doc) — doc is the BENCH_temporal.json payload."""
+    from repro.temporal import kalman_filter, rts_smoother
+
+    sizes = SMOKE_SIZES if smoke else SIZES
+    iters = 3 if smoke else 5
+    csv, json_rows = [], []
+    for n in sizes:
+        args = _model_arrays(n)
+
+        def lml_fn(parallel):
+            def fn(A, Q, H, R, y, m0, P0):
+                return kalman_filter(A, Q, H, R, y, m0, P0,
+                                     parallel=parallel).lml
+            return jax.jit(fn)
+
+        def predict_fn(parallel):
+            def fn(A, Q, H, R, y, m0, P0):
+                res = kalman_filter(A, Q, H, R, y, m0, P0, parallel=parallel)
+                ms, Ps = rts_smoother(A, Q, res.means, res.covs,
+                                      parallel=parallel)
+                return jnp.einsum("i,nid->nd", H, ms), \
+                    jnp.einsum("i,nij,j->n", H, Ps, H)
+            return jax.jit(fn)
+
+        for op, make in (("lml", lml_fn), ("predict", predict_fn)):
+            secs = {}
+            for parallel in (False, True):
+                path = "parallel" if parallel else "sequential"
+                s = time_call(make(parallel), *args, warmup=1, iters=iters)
+                secs[path] = s
+                r = {"section": "temporal", "op": op, "path": path,
+                     "N": int(n), "d": D_STATE,
+                     "us_per_call": float(s * 1e6),
+                     "ns_per_point": float(s / n * 1e9), "iters": iters}
+                if parallel:
+                    r["speedup_vs_sequential"] = float(
+                        secs["sequential"] / s)
+                json_rows.append(r)
+                derived = (f"speedup={r['speedup_vs_sequential']:.2f}x"
+                           if parallel else f"{r['ns_per_point']:.0f}ns/pt")
+                csv.append(row(f"temporal_{op}_{path}_n{n}", s, derived))
+    doc = {
+        "meta": {
+            "bench": "temporal",
+            "schema_version": SCHEMA_VERSION,
+            "jax_backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "smoke": bool(smoke),
+            "kernel": "matern32",
+            "d_state": D_STATE,
+        },
+        "rows": json_rows,
+    }
+    return csv, doc

@@ -32,6 +32,9 @@ python examples/quickstart.py --n 512 --steps 60 --backend fused --max-rmse 0.35
 echo "== serve quickstart (online serving: export + submit + update) =="
 python examples/serve_quickstart.py --steps 120 --n 1024
 
+echo "== temporal quickstart (state-space GP: fit + stream + forecast) =="
+python examples/temporal_quickstart.py --n 20000 --steps 40
+
 echo "== gplvm_synthetic (Bayesian GP-LVM, facade, smoke size) =="
 # smoke bar: at N=512 the latent-recovery correlation is draw-limited (~0.7
 # even for the pre-facade code); the 0.95 bar is the full-size (default-args)
@@ -110,6 +113,26 @@ assert all(r["requests"] > 0 and r["updates"] > 0 for r in rows), rows
 print(f"serve_load smoke JSON OK ({len(rows)} rows, "
       f"peak {budgeted['peak_resident_bytes']} <= budget "
       f"{budgeted['budget_bytes']})")
+PY
+
+echo "== benchmark harness (temporal parallel-vs-sequential, smoke mode) =="
+TEMPORAL_BENCH="$(mktemp -t BENCH_temporal_smoke.XXXXXX.json)"
+python -m benchmarks.run --smoke --only temporal --temporal-out "$TEMPORAL_BENCH" > /dev/null
+TEMPORAL_BENCH="$TEMPORAL_BENCH" python - <<'PY'
+import json
+import os
+
+doc = json.load(open(os.environ["TEMPORAL_BENCH"]))
+rows = doc["rows"]
+assert {r["op"] for r in rows} == {"lml", "predict"}, rows
+assert {r["path"] for r in rows} == {"sequential", "parallel"}, rows
+required = {"section", "op", "path", "N", "d", "us_per_call", "ns_per_point"}
+assert all(required <= set(r) for r in rows), "temporal rows malformed"
+assert all("speedup_vs_sequential" in r for r in rows
+           if r["path"] == "parallel"), "missing speedup on parallel rows"
+from benchmarks.common import SCHEMA_VERSION
+assert doc["meta"]["schema_version"] == SCHEMA_VERSION, doc["meta"]
+print(f"temporal smoke JSON OK ({len(rows)} rows)")
 PY
 
 echo "== benchmark harness (static VMEM budget table, smoke mode) =="

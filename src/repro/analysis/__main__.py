@@ -69,6 +69,31 @@ def _run_jaxpr_check() -> int:
         return 1
     print(f"[jaxpr] quickstart SGPR value_and_grad: worst intermediate "
           f"{report.worst_class} — below the O(N*M) bound")
+
+    # the temporal backend's sequential training loss must stay O(N): no
+    # (N, N) Gram matrix may appear anywhere in value_and_grad. (The
+    # parallel path can't be traced at two sizes — associative_scan's tree
+    # changes structure with N — so the scan lanes in tests/test_temporal.py
+    # cover it via single-trace intermediates instead.)
+    from repro.gp import regression
+
+    n = 2048
+    gaps = jax.random.uniform(jax.random.fold_in(key, 2), (n,),
+                              minval=0.5e-3, maxval=1.5e-3)
+    t = jnp.cumsum(gaps)  # the loss core takes flat (N,) times
+    y = jnp.sin(4.0 * t)[:, None]
+    tgp = regression(get("matern32")(1), backend="temporal", parallel=False)
+    tp = tgp.init_params(t[:, None], y)
+    loss = tgp._loss_fn()
+    try:
+        report = assert_no_scaling(
+            jax.value_and_grad(loss), tp, t, y,
+            axis="N", worse_than="N^2", sizes={"N": n})
+    except ScalingViolation as exc:
+        print(f"[jaxpr] FAIL: {exc}")
+        return 1
+    print(f"[jaxpr] temporal sequential value_and_grad: worst intermediate "
+          f"{report.worst_class} — below the O(N^2) bound")
     return 0
 
 

@@ -14,16 +14,17 @@ Model classes load lazily (PEP 562) so importing `repro.gp.kernels` from the
 core layers never drags in the model/optimizer stack.
 """
 from repro.gp import kernels
-from repro.gp.kernels import Kernel, available, get, register
+from repro.gp.kernels import (Kernel, available, capabilities, get, register)
 from repro.gp.stats import ExactBatch, ExpectedBatch, suff_stats
 
 __all__ = [
-    "Kernel", "available", "get", "register", "kernels",
+    "Kernel", "available", "capabilities", "get", "register", "kernels",
     "ExactBatch", "ExpectedBatch", "suff_stats",
-    "SparseGPRegression", "BayesianGPLVM", "models",
+    "SparseGPRegression", "BayesianGPLVM", "TemporalGPRegression",
+    "regression", "models",
 ]
 
-_LAZY = ("SparseGPRegression", "BayesianGPLVM", "models")
+_LAZY = ("SparseGPRegression", "BayesianGPLVM", "regression", "models")
 
 
 def __getattr__(name):
@@ -32,4 +33,8 @@ def __getattr__(name):
 
         models = importlib.import_module("repro.gp.models")
         return models if name == "models" else getattr(models, name)
+    if name == "TemporalGPRegression":
+        import importlib
+
+        return importlib.import_module("repro.temporal").TemporalGPRegression
     raise AttributeError(f"module 'repro.gp' has no attribute {name!r}")

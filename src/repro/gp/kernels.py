@@ -154,6 +154,26 @@ class Kernel:
             f"Sum/Product of them) for Bayesian GP-LVM models."
         )
 
+    # -- capability queries (what facades dispatch on) -----------------------
+    def supports_psi(self) -> bool:
+        """True when the closed-form expected (psi) statistics path exists."""
+        return type(self).psi0 is not Kernel.psi0
+
+    def supports_sde(self) -> bool:
+        """True when `to_sde()` works: the kernel has an exact state-space
+        (LTI SDE) form, i.e. the temporal backend can train/serve it."""
+        return False
+
+    def to_sde(self, params: Params):
+        """The kernel's exact LTI SDE (`repro.temporal.sde.LTISDE`) at the
+        given hyperparameters — the hook the temporal backend dispatches
+        through, so the string registry keeps working for both backends."""
+        raise NotImplementedError(
+            f"kernel {type(self).__name__!r} has no state-space (SDE) form; "
+            f"backend='temporal' supports 'matern12'/'matern32'/'matern52' "
+            f"on 1-D inputs, and Sum/Product compositions of those"
+        )
+
 
 # ---------------------------------------------------------------------------
 # leaf kernels
@@ -328,6 +348,33 @@ class _Matern(Kernel):
     def Kdiag(self, params: Params, X: jax.Array) -> jax.Array:
         return jnp.full((X.shape[0],), self.variance(params))
 
+    def _no_psi(self) -> str:
+        return (
+            f"closed-form psi statistics under Gaussian q(X) do not exist for "
+            f"the {type(self).__name__!r} kernel (the expectation of exp(-r) "
+            f"has no elementary form), so the collapsed-bound expected path "
+            f"cannot use it. On 1-D inputs the Matern family has an exact "
+            f"O(N) state-space path instead: use backend='temporal' "
+            f"(repro.gp.regression(kernel, backend='temporal') / "
+            f"repro.gp.TemporalGPRegression)."
+        )
+
+    def supports_sde(self) -> bool:
+        # the kernel -> SDE duality is a property of STATIONARY 1-D priors
+        return self.input_dim == 1
+
+    def to_sde(self, params: Params):
+        if self.input_dim != 1:
+            raise NotImplementedError(
+                f"{type(self).__name__} with input_dim={self.input_dim} has "
+                f"no state-space form; the kernel -> LTI SDE duality is 1-D "
+                f"(temporal). Use input_dim=1 for backend='temporal'."
+            )
+        from repro.temporal import sde as _sde  # lazy: avoid import cycle
+
+        builder = getattr(_sde, f"{self.name}_sde")
+        return builder(self.variance(params), self.lengthscale(params))
+
 
 @register("matern12")
 @dataclasses.dataclass(frozen=True)
@@ -411,6 +458,12 @@ def _cross_psi2(ka: Kernel, pa: Params, kb: Kernel, pb: Params, mu, S, Z) -> jax
     )
 
 
+def _has_cross_psi2(ka: Kernel, kb: Kernel) -> bool:
+    """Mirror of `_cross_psi2`'s dispatch table, for capability queries."""
+    return (isinstance(ka, RBF) and isinstance(kb, Linear)) or (
+        isinstance(ka, Linear) and isinstance(kb, (RBF, Linear)))
+
+
 # ---------------------------------------------------------------------------
 # composite kernels
 # ---------------------------------------------------------------------------
@@ -487,6 +540,20 @@ class Sum(_Composite):
                 total = total + cross + cross.T
         return total
 
+    def supports_psi(self) -> bool:
+        # a sum needs every part's psi stats AND every pairwise cross term
+        return all(p.supports_psi() for p in self.parts) and all(
+            _has_cross_psi2(pa, pb)
+            for i, pa in enumerate(self.parts) for pb in self.parts[i + 1:])
+
+    def supports_sde(self) -> bool:
+        return all(p.supports_sde() for p in self.parts)
+
+    def to_sde(self, params: Params):
+        from repro.temporal import sde as _sde  # lazy: avoid import cycle
+
+        return _sde.sum_sde(*[p.to_sde(pp) for p, pp in self._split(params)])
+
 
 @register("product")
 class Product(_Composite):
@@ -540,3 +607,38 @@ class Product(_Composite):
         k, p = self._equivalent_rbf(params)
         return k.expected_suff_stats(p, mu, S, Y, Z, backend=backend,
                                      bwd_backend=bwd_backend)
+
+    def supports_psi(self) -> bool:
+        # closed form only when the product is itself an RBF (all-RBF parts)
+        return all(isinstance(p, RBF) for p in self.parts)
+
+    def supports_sde(self) -> bool:
+        return all(p.supports_sde() for p in self.parts)
+
+    def to_sde(self, params: Params):
+        from repro.temporal import sde as _sde  # lazy: avoid import cycle
+
+        return _sde.product_sde(
+            *[p.to_sde(pp) for p, pp in self._split(params)])
+
+
+# ---------------------------------------------------------------------------
+# registry-level capability query
+# ---------------------------------------------------------------------------
+
+
+def capabilities(kernel: "Kernel | str", input_dim: int = 1) -> Dict[str, bool]:
+    """What inference paths a kernel supports, for fail-fast facade dispatch.
+
+    Accepts a kernel instance or a registry name (instantiated at
+    `input_dim`, which matters: e.g. Materns are SDE-capable only in 1-D).
+    Keys: "exact" (collapsed bound, deterministic X — always true), "psi"
+    (collapsed bound under Gaussian q(X)), "sde" (backend="temporal").
+    """
+    if isinstance(kernel, str):
+        kernel = get(kernel)(input_dim)
+    return {
+        "exact": True,
+        "psi": kernel.supports_psi(),
+        "sde": kernel.supports_sde(),
+    }

@@ -347,3 +347,39 @@ class BayesianGPLVM(_CollapsedGPModel):
         post = self.posterior()
         return svgp.predict_f(post, self.kernel.K(p["kern"], Xstar, p["Z"]),
                               self.kernel.Kdiag(p["kern"], Xstar))
+
+
+# ---------------------------------------------------------------------------
+# backend dispatch
+# ---------------------------------------------------------------------------
+
+_BACKENDS = ("collapsed", "temporal")
+
+
+def regression(kernel: Optional[Kernel] = None, *, backend: str = "collapsed",
+               **kwargs):
+    """GP regression facade picked by compute backend.
+
+    backend="collapsed" (default) -> `SparseGPRegression`: the paper's
+    distributed collapsed bound, any kernel/input_dim, O(N M^2) via
+    inducing points; kwargs = (M, mesh, backend, chunk, bwd_backend) —
+    note the statistics-path knob is the SparseGPRegression constructor's
+    own `backend=`, spelled `stats_backend=` here to avoid clashing.
+
+    backend="temporal" -> `repro.temporal.TemporalGPRegression`: exact
+    state-space inference for 1-D stationary kernels (Matern family and
+    Sum/Product of it — `kernel.supports_sde()`), O(N) with a parallel
+    associative-scan path; kwargs = (parallel,).
+
+    Fails fast with the capability error of the chosen backend (e.g. an
+    RBF kernel under backend="temporal", or psi-less Materns in a GP-LVM).
+    """
+    if backend == "collapsed":
+        if "stats_backend" in kwargs:
+            kwargs["backend"] = kwargs.pop("stats_backend")
+        return SparseGPRegression(kernel, **kwargs)
+    if backend == "temporal":
+        from repro.temporal import TemporalGPRegression
+
+        return TemporalGPRegression(kernel, **kwargs)
+    raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")

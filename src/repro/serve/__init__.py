@@ -21,16 +21,24 @@ Layering: `state` (the cached-posterior pytree + jitted predict epilogue),
 `server` (the named-model registry, bucket compile cache, micro-batching
 queue, byte-budgeted LRU residency, and admission control). See
 docs/serving.md.
+
+Temporal models serve through the same tier: register a fitted
+`TemporalGPRegression` (its `TemporalState` is the O(d^2) analogue of
+`PosteriorState`), `predict` forecasts marginals at new timestamps, and
+`update` filters new observations forward — streaming forecasting, see
+docs/temporal.md.
 """
 from repro.serve.online import batch_stats, downdate, refit, refold, update
 from repro.serve.persist import (PERSIST_SCHEMA, StateStore, kernel_from_spec,
-                                 kernel_spec)
+                                 kernel_spec, state_kind)
 from repro.serve.server import GPServer, QueueFullError, ServerClosedError
 from repro.serve.state import PosteriorState, build_state, predict
+from repro.temporal.model import TemporalState
 
 __all__ = [
-    "PosteriorState", "build_state", "predict",
+    "PosteriorState", "TemporalState", "build_state", "predict",
     "update", "downdate", "refit", "refold", "batch_stats",
     "GPServer", "QueueFullError", "ServerClosedError",
     "StateStore", "PERSIST_SCHEMA", "kernel_spec", "kernel_from_spec",
+    "state_kind",
 ]

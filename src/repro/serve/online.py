@@ -66,7 +66,17 @@ def update(kernel: Kernel, state: PosteriorState, X_new: jax.Array,
     tests assert at 1e-8. Pure and traceable: adding datapoints only adds
     PSD mass to Kuu + beta Psi2, so no conditioning guard is needed (unlike
     `downdate`).
+
+    A `repro.temporal.TemporalState` dispatches to the Kalman path instead:
+    filter forward from the stored terminal (m, P) — X_new must be sorted
+    timestamps strictly after the state's forecast origin, and the
+    statistics knobs (backend/chunk/bwd_backend/jitter) are ignored (the
+    O(B d^3) sequential filter has no statistics pass to configure).
     """
+    from repro.temporal.model import TemporalState, update_state
+
+    if isinstance(state, TemporalState):
+        return update_state(kernel, state, X_new, Y_new)
     batch = ExactBatch(X_new, _as_2d(Y_new), state.Z)
     new = batch_stats(kernel, state, batch, backend=backend, chunk=chunk,
                       bwd_backend=bwd_backend)
@@ -115,6 +125,14 @@ def downdate(kernel: Kernel, state: PosteriorState, X_old: jax.Array,
     statistics contribution (SuffStats.subtract), then refold behind the
     condition guard. `downdate(update(s, b), b)` round-trips to `s` up to
     floating cancellation (tested at 1e-8 in f64)."""
+    from repro.temporal.model import TemporalState
+
+    if isinstance(state, TemporalState):
+        raise TypeError(
+            "downdate is a statistics-monoid operation; a TemporalState is "
+            "a filtered terminal state with no per-chunk inverse (the "
+            "Kalman recursion only runs forward) — re-fit "
+            "TemporalGPRegression on the surviving data instead")
     batch = ExactBatch(X_old, _as_2d(Y_old), state.Z)
     old = batch_stats(kernel, state, batch, backend=backend, chunk=chunk)
     return refold(kernel, state, SuffStats.subtract(state.stats, old),
@@ -132,6 +150,13 @@ def refit(kernel: Kernel, state: PosteriorState, *, steps: int = 50,
     `steps` Adam steps on the bound, warm-started at the served value, and
     refolds. Returns (new_state, loss_history)."""
     from repro.core import inference
+    from repro.temporal.model import TemporalState
+
+    if isinstance(state, TemporalState):
+        raise TypeError(
+            "refit re-optimizes log_beta against cached SuffStats; a "
+            "TemporalState caches no statistics (its likelihood needs the "
+            "whole timeline) — re-fit TemporalGPRegression instead")
 
     Kuu = kernel.K(state.kern, state.Z)
     D = state.D

@@ -1,6 +1,8 @@
-"""Durable `PosteriorState` storage: the serving tier's checkpoint store.
+"""Durable servable-state storage: the serving tier's checkpoint store.
 
-A fitted model is (kernel, PosteriorState) — the state a plain O(M²) pytree
+A fitted model is (kernel, state) — a `PosteriorState` (collapsed bound,
+O(M²)) or a `repro.temporal.TemporalState` (state-space forecaster, O(d²)),
+tagged by `state_kind` in the manifest — the state a plain pytree
 of arrays, the kernel static code addressable by registry name. So the
 store needs no new format: states ride `repro.checkpoint.manager.
 CheckpointManager` (atomic rename, retention, manifest-validated reads)
@@ -39,11 +41,17 @@ from repro.core.psi_stats import SuffStats
 from repro.gp import kernels as gp_kernels
 from repro.gp.kernels import Kernel
 from repro.serve.state import PosteriorState
+from repro.temporal.model import TemporalState
 
 # Stamped into every saved manifest's extra; load() rejects mismatches so a
-# field added to PosteriorState (or a meaning change) can never be silently
-# reinterpreted from an old file. Bump when the state schema changes.
-PERSIST_SCHEMA = 1
+# field added to a state (or a meaning change) can never be silently
+# reinterpreted from an old file. Bump when a state schema changes.
+# Schema history: 1 = PosteriorState only; 2 = adds `state_kind`
+# ("posterior" | "temporal") — schema-1 manifests still load (no
+# `state_kind` implies "posterior", the only kind that existed).
+PERSIST_SCHEMA = 2
+_READABLE_SCHEMAS = (1, 2)
+_STATE_KINDS = ("posterior", "temporal")
 
 # model names double as directory names — keep them filesystem-safe
 _NAME_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
@@ -87,20 +95,38 @@ def _dict_skeleton(d: Dict) -> Dict:
             for k, v in d.items()}
 
 
-def _skeleton(kern_tree: Dict) -> PosteriorState:
-    """A structure-only PosteriorState whose flatten order (and therefore
-    leaf keys) matches the saved state's — dict keys sort identically, and
-    NamedTuple fields flatten in declaration order. `kern_tree` is the
-    saved `_dict_skeleton` of the kernel params (nested for composites)."""
+def state_kind(state) -> str:
+    """The manifest tag for a servable state's pytree schema."""
+    if isinstance(state, TemporalState):
+        return "temporal"
+    if isinstance(state, PosteriorState):
+        return "posterior"
+    raise TypeError(
+        f"not a servable state: {type(state).__name__} (expected "
+        f"PosteriorState or TemporalState)")
+
+
+def _skeleton(kern_tree: Dict, kind: str = "posterior"):
+    """A structure-only state (of the named kind) whose flatten order (and
+    therefore leaf keys) matches the saved state's — dict keys sort
+    identically, and NamedTuple fields flatten in declaration order.
+    `kern_tree` is the saved `_dict_skeleton` of the kernel params (nested
+    for composites)."""
     z = np.zeros(())
 
     def fill(tree):
         return {k: fill(v) if isinstance(v, dict) else z
                 for k, v in tree.items()}
 
-    return PosteriorState(kern=fill(kern_tree), Z=z, log_beta=z,
-                          stats=SuffStats(z, z, z, z, z),
-                          L=z, LA=z, Kuu_inv_mean=z)
+    if kind == "temporal":
+        return TemporalState(kern=fill(kern_tree), log_beta=z, t_last=z,
+                             m=z, P=z, n=z)
+    if kind == "posterior":
+        return PosteriorState(kern=fill(kern_tree), Z=z, log_beta=z,
+                              stats=SuffStats(z, z, z, z, z),
+                              L=z, LA=z, Kuu_inv_mean=z)
+    raise CheckpointCorruptError(
+        f"unknown state_kind {kind!r}; this build reads {_STATE_KINDS}")
 
 
 class StateStore:
@@ -131,7 +157,8 @@ class StateStore:
 
     # -- write ---------------------------------------------------------------
 
-    def save(self, name: str, kernel: Kernel, state: PosteriorState) -> int:
+    def save(self, name: str, kernel: Kernel,
+             state: "PosteriorState | TemporalState") -> int:
         """Persist one model atomically; returns the step written. Each save
         gets a fresh monotone step so retention keeps `keep` versions."""
         with self._lock:
@@ -139,6 +166,7 @@ class StateStore:
             step = (mgr.latest_step() or 0) + 1
             extra = {
                 "persist_schema": PERSIST_SCHEMA,
+                "state_kind": state_kind(state),
                 "kernel": kernel_spec(kernel),
                 "kern_tree": _dict_skeleton(state.kern),
             }
@@ -164,13 +192,19 @@ class StateStore:
     def _extra(self, manifest: Dict, name: str) -> Dict:
         extra = manifest.get("extra") or {}
         schema = extra.get("persist_schema")
-        if schema != PERSIST_SCHEMA:
+        if schema not in _READABLE_SCHEMAS:
             raise CheckpointCorruptError(
                 f"model {name!r}: persist_schema is {schema!r}, this build "
-                f"reads {PERSIST_SCHEMA} — refusing to reinterpret the state")
+                f"reads {_READABLE_SCHEMAS} — refusing to reinterpret the "
+                f"state")
         if "kernel" not in extra or "kern_tree" not in extra:
             raise CheckpointCorruptError(
                 f"model {name!r}: manifest extra is missing the kernel spec")
+        kind = extra.get("state_kind", "posterior")  # schema 1: pre-temporal
+        if kind not in _STATE_KINDS:
+            raise CheckpointCorruptError(
+                f"model {name!r}: unknown state_kind {kind!r}; this build "
+                f"reads {_STATE_KINDS}")
         return extra
 
     def load_meta(self, name: str) -> Tuple[Kernel, Dict]:
@@ -181,7 +215,7 @@ class StateStore:
             extra = self._extra(manifest, name)
             return kernel_from_spec(extra["kernel"]), manifest
 
-    def load(self, name: str) -> Tuple[Kernel, PosteriorState]:
+    def load(self, name: str) -> Tuple[Kernel, "PosteriorState | TemporalState"]:
         """Bit-exact restore of (kernel, state). Raises FileNotFoundError if
         the model was never saved, CheckpointCorruptError if its newest
         checkpoint cannot be trusted."""
@@ -191,7 +225,8 @@ class StateStore:
             extra = self._extra(manifest, name)
             kernel = kernel_from_spec(extra["kernel"])
             flat, treedef = jax.tree_util.tree_flatten_with_path(
-                _skeleton(extra["kern_tree"]))
+                _skeleton(extra["kern_tree"],
+                          extra.get("state_kind", "posterior")))
             leaves = []
             for path, _ in flat:
                 key = leaf_key(path)

@@ -56,7 +56,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.gp.kernels import Kernel
-from repro.serve import online
+from repro.serve import online, persist
 from repro.serve.persist import StateStore
 from repro.serve.state import PosteriorState, _predict_closure
 
@@ -83,23 +83,47 @@ class _Entry:
     so re-registering a name drops the old kernel's executables with the
     old entry instead of pinning them for the life of the process.
 
+    `kind` selects the state schema and its predict closure: "posterior"
+    (collapsed bound, diag or full covariance) or "temporal" (state-space
+    forecaster — marginal forecasts only, diag=False raises per request).
+    Inferred from the state object, or passed explicitly for cold
+    registrations (state still on disk) from the manifest's `state_kind`.
+
     `nbytes` is the resident cost of the state pytree — constant per
-    registration, because every field's shape is fixed by (M, Q, D) and
-    update/downdate only swap same-shaped arrays. `dirty` marks state the
-    store has not seen yet (fresh registration, or mutated since the last
-    save); eviction persists dirty state before dropping it."""
+    registration, because every field's shape is fixed by (M, Q, D) (or
+    (d, D) for temporal) and online mutation only swaps same-shaped
+    arrays. `dirty` marks state the store has not seen yet (fresh
+    registration, or mutated since the last save); eviction persists dirty
+    state before dropping it."""
 
-    __slots__ = ("kernel", "state", "lock", "fns", "nbytes", "dirty")
+    __slots__ = ("kernel", "state", "lock", "fns", "nbytes", "dirty", "kind")
 
-    def __init__(self, kernel: Kernel, state: Optional[PosteriorState], *,
-                 nbytes: Optional[int] = None, dirty: bool = True):
+    def __init__(self, kernel: Kernel, state=None, *,
+                 nbytes: Optional[int] = None, dirty: bool = True,
+                 kind: Optional[str] = None):
         self.kernel = kernel
         self.state = state
         self.nbytes = int(state.nbytes if nbytes is None else nbytes)
         self.dirty = dirty
         self.lock = threading.Lock()
-        self.fns = {True: jax.jit(_predict_closure(kernel, True)),
-                    False: jax.jit(_predict_closure(kernel, False))}
+        if kind is None:
+            kind = persist.state_kind(state)
+        self.kind = kind
+        if kind == "temporal":
+            from repro.temporal.model import forecast_closure
+
+            def _no_full(state, Xt):
+                raise ValueError(
+                    "diag=False (full predictive covariance) is not "
+                    "available for a temporal model: the served forecast "
+                    "state carries per-timestamp marginals only; use "
+                    "TemporalGPRegression.predict on the fitted model")
+
+            self.fns = {True: jax.jit(forecast_closure(kernel)),
+                        False: _no_full}
+        else:
+            self.fns = {True: jax.jit(_predict_closure(kernel, True)),
+                        False: jax.jit(_predict_closure(kernel, False))}
 
 
 class _Request:
@@ -189,10 +213,11 @@ class GPServer:
     # ------------------------------------------------------------------ #
 
     def register(self, name: str, model=None, *, kernel: Kernel | None = None,
-                 state: PosteriorState | None = None) -> None:
+                 state=None) -> None:
         """Register a fitted model under `name`: either a facade exposing
-        `export_state()` (SparseGPRegression / BayesianGPLVM) or an explicit
-        (kernel, state) pair."""
+        `export_state()` (SparseGPRegression / BayesianGPLVM /
+        TemporalGPRegression) or an explicit (kernel, state) pair — the
+        state a `PosteriorState` or a `repro.temporal.TemporalState`."""
         if model is not None:
             if kernel is not None or state is not None:
                 raise ValueError("pass either a fitted model or kernel=+state=, not both")
@@ -212,8 +237,10 @@ class GPServer:
         the state stays on disk until the first predict/update touches it.
         This is how `load()` restarts within budget regardless of how many
         models the store holds."""
-        kernel, _ = self.store.load_meta(name)
-        entry = _Entry(kernel, None, nbytes=self.store.nbytes(name), dirty=False)
+        kernel, manifest = self.store.load_meta(name)
+        kind = (manifest.get("extra") or {}).get("state_kind", "posterior")
+        entry = _Entry(kernel, None, nbytes=self.store.nbytes(name),
+                       dirty=False, kind=kind)
         self._insert(name, entry)
 
     def _insert(self, name: str, entry: _Entry) -> None:

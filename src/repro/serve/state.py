@@ -117,14 +117,29 @@ def _predict_fn(kernel: Kernel, diag: bool):
     return jax.jit(_predict_closure(kernel, bool(diag)))
 
 
-def predict(kernel: Kernel, state: PosteriorState, Xt: jax.Array, *,
+def predict(kernel: Kernel, state, Xt: jax.Array, *,
             diag: bool = True) -> Tuple[jax.Array, jax.Array]:
     """Posterior p(f*) at Xt from the cached state: mean (B, D) plus either
     the marginal variance (B,) (`diag=True`) or the full (B, B) covariance.
 
-    O(M B + M^2 B) per call — cross-covariances and triangular solves
-    against the cached Cholesky factors; no per-request factorization. The
-    jitted closure is cached per (kernel, diag), so repeated calls at the
-    same batch shape reuse one XLA executable.
+    For a `PosteriorState`: O(M B + M^2 B) per call — cross-covariances and
+    triangular solves against the cached Cholesky factors; no per-request
+    factorization. For a `repro.temporal.TemporalState`: O(B d^3) marginal
+    forecasts from the terminal filtered state (diag only — per-row
+    forecasts are independent, so there is no full joint to return without
+    the training timeline; use `TemporalGPRegression.predict`). The jitted
+    closure is cached per (kernel, diag) either way, so repeated calls at
+    the same batch shape reuse one XLA executable.
     """
+    from repro.temporal.model import TemporalState, forecast
+
+    if isinstance(state, TemporalState):
+        if not diag:
+            raise ValueError(
+                "diag=False (full predictive covariance) is not available "
+                "for a TemporalState: the served forecast state carries "
+                "per-timestamp marginals only; use "
+                "TemporalGPRegression.predict on the fitted model for "
+                "smoothed joint structure")
+        return forecast(kernel, state, Xt)
     return _predict_fn(kernel, bool(diag))(state, Xt)

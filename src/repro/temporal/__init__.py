@@ -1,0 +1,25 @@
+"""`repro.temporal` — state-space GP backend: kernel -> LTI SDE -> parallel
+associative-scan Kalman filter/smoother (log depth), with a sequential twin.
+
+The second compute backend beside the collapsed bound: exact O(N) inference
+for 1-D stationary kernels (Matern12/32/52 + Sum/Product), selected via
+`repro.gp.regression(backend="temporal")`, served through `repro.serve`
+via `TemporalState`. See docs/temporal.md.
+"""
+from repro.temporal.model import (TemporalGPRegression, TemporalState,
+                                  forecast, forecast_closure, update_state)
+from repro.temporal.pskf import FilterResult, kalman_filter, rts_smoother
+from repro.temporal.sde import LTISDE, discretize
+
+__all__ = [
+    "LTISDE",
+    "discretize",
+    "FilterResult",
+    "kalman_filter",
+    "rts_smoother",
+    "TemporalGPRegression",
+    "TemporalState",
+    "forecast",
+    "forecast_closure",
+    "update_state",
+]

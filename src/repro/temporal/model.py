@@ -1,0 +1,382 @@
+"""`TemporalGPRegression`: the state-space GP facade, plus the O(d^2)
+`TemporalState` the serving tier ships.
+
+The facade matches the `SparseGPRegression` surface (fit / elbo / predict /
+posterior / export_state) but swaps the collapsed-bound engine for the
+kernel->SDE->Kalman path of `repro.temporal.sde` / `repro.temporal.pskf`:
+O(N d^3) work, O(N d^2) memory, EXACT inference (elbo() == lml() — the
+"bound" is tight), and `parallel=` picks log-depth associative scans or
+the sequential twin. Select it through `repro.gp.models.regression(...,
+backend="temporal")` or construct it directly.
+
+Serving: `export_state()` freezes the TERMINAL filtered state — kernel
+hyperparameters, noise, last timestamp, m (d, D), P (d, d) — which is all
+a forecaster needs. `forecast()` predicts the latent marginal at any
+future timestamp in O(d^3) per row (rows independent, so `GPServer`'s
+batch coalescing/padding apply unchanged), and `update_state()` folds new
+observations by filtering forward from the stored terminal state: the
+streamed state is EXACTLY the one-shot fit's (tested <= 1e-10), which is
+what makes `serve.online` a true streaming forecaster. Timestamps earlier
+than the forecast origin are answered with the origin's nowcast (dt
+clamped to 0) — interpolation into the past needs the smoother and
+therefore the training data, i.e. the facade's `predict`, not the served
+state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import inference
+from repro.gp.kernels import Kernel, Matern32
+from repro.temporal import pskf, sde
+
+Params = Dict[str, jax.Array]
+
+_OPTIMIZERS = ("adam", "lbfgs")
+
+
+def _as_2d(Y: jax.Array) -> jax.Array:
+    return Y[:, None] if Y.ndim == 1 else Y
+
+
+def _as_times(X) -> jax.Array:
+    """Accept (N,) timestamps or the facade-standard (N, 1) column."""
+    X = jnp.asarray(X)
+    if X.ndim == 2 and X.shape[1] == 1:
+        return X[:, 0]
+    if X.ndim == 1:
+        return X
+    raise ValueError(
+        f"temporal models take 1-D inputs: X must be (N,) or (N, 1) "
+        f"timestamps, got shape {X.shape}")
+
+
+def _validate_times(t: jax.Array, *, what: str = "X") -> None:
+    """Eager sort-order/duplicate validation (host-side, fit/update time)."""
+    tn = np.asarray(t)
+    if tn.size < 1:
+        raise ValueError(f"{what} must contain at least one timestamp")
+    d = np.diff(tn)
+    if np.any(d < 0):
+        i = int(np.argmax(d < 0))
+        raise ValueError(
+            f"{what} timestamps must be sorted ascending; {what}[{i + 1}] = "
+            f"{tn[i + 1]!r} < {what}[{i}] = {tn[i]!r} (sort the series — the "
+            f"Kalman recursion runs in time order)")
+    if np.any(d == 0):
+        i = int(np.argmax(d == 0))
+        raise ValueError(
+            f"duplicate timestamp in {what}: {what}[{i}] == {what}[{i + 1}] "
+            f"== {tn[i]!r}; aggregate duplicate observations (e.g. average "
+            f"them) before fitting — a zero gap makes the transition "
+            f"degenerate (Q_k = 0)")
+
+
+class TemporalState(NamedTuple):
+    """Everything a fitted temporal GP needs to FORECAST and to keep
+    learning online: O(d^2) regardless of how many points were absorbed.
+    A pure pytree (jit-traceable, checkpointable) — the kernel object
+    stays outside, exactly like `repro.serve.state.PosteriorState`."""
+
+    kern: Params  # kernel hyperparameters (log-transformed)
+    log_beta: jax.Array  # scalar log noise precision
+    t_last: jax.Array  # scalar: the forecast origin (last absorbed time)
+    m: jax.Array  # (d, D) terminal filtered state mean, one column per output
+    P: jax.Array  # (d, d) terminal filtered state covariance
+    n: jax.Array  # scalar: datapoints absorbed so far
+
+    @property
+    def d(self) -> int:
+        return self.P.shape[-1]
+
+    @property
+    def D(self) -> int:
+        return self.m.shape[-1]
+
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes of the state pytree — what `GPServer`'s LRU
+        charges. Constant per registration: forecasting state never grows
+        with the data absorbed."""
+        return int(sum(x.nbytes for x in jax.tree_util.tree_leaves(self)))
+
+
+def _require_sde(kernel: Kernel) -> None:
+    if not kernel.supports_sde():
+        raise ValueError(
+            f"kernel {kernel!r} has no state-space (SDE) form: temporal "
+            f"models need kernel.supports_sde() — matern12/matern32/"
+            f"matern52 on input_dim=1, or Sum/Product of those. For other "
+            f"kernels use SparseGPRegression (the collapsed bound).")
+
+
+def forecast_closure(kernel: Kernel):
+    """The (unjitted) marginal forecast epilogue closed over a kernel —
+    the temporal analogue of `repro.serve.state._predict_closure`. Each
+    row of Xt is an independent forecast from the stored terminal state
+    (mean = H A(dt) m, var = H (A P A^T + Q) H^T), so batches need no
+    ordering and `GPServer` padding/coalescing is safe; dt clamps at 0
+    (see module docstring)."""
+
+    def fn(state: TemporalState, Xt: jax.Array):
+        model = kernel.to_sde(state.kern)
+        dt = jnp.maximum(Xt[:, 0] - state.t_last, 0.0)
+        A, Q = sde.discretize(model, dt)
+        mean = jnp.einsum("i,bij,jd->bd", model.H, A, state.m)
+        P = jnp.einsum("bij,jk,blk->bil", A, state.P, A) + Q
+        var = jnp.einsum("i,bij,j->b", model.H, P, model.H)
+        return mean, var
+
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _forecast_fn(kernel: Kernel):
+    return jax.jit(forecast_closure(kernel))
+
+
+def forecast(kernel: Kernel, state: TemporalState,
+             Xt: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Latent marginal forecast at Xt (B, 1) timestamps: mean (B, D) and
+    variance (B,). O(B d^3); jitted per kernel."""
+    return _forecast_fn(kernel)(state, jnp.asarray(Xt))
+
+
+@functools.lru_cache(maxsize=None)
+def _update_fn(kernel: Kernel):
+    def core(state: TemporalState, t_new: jax.Array,
+             Y_new: jax.Array) -> TemporalState:
+        model = kernel.to_sde(state.kern)
+        dt = jnp.concatenate([t_new[:1] - state.t_last, jnp.diff(t_new)])
+        A, Q = sde.discretize(model, dt)
+        res = pskf.kalman_filter(A, Q, model.H, jnp.exp(-state.log_beta),
+                                 Y_new, state.m, state.P, parallel=False)
+        return TemporalState(kern=state.kern, log_beta=state.log_beta,
+                             t_last=t_new[-1], m=res.means[-1],
+                             P=res.covs[-1],
+                             n=state.n + t_new.shape[0])
+
+    return jax.jit(core)
+
+
+def update_state(kernel: Kernel, state: TemporalState, X_new,
+                 Y_new) -> TemporalState:
+    """Fold new observations into a served state by filtering forward from
+    the stored terminal (m, P): O(B d^3), no access to past data, and the
+    result is EXACTLY the state a one-shot fit over the concatenated
+    series would produce (the Kalman recursion is the same arithmetic).
+    New timestamps must be sorted and strictly after `state.t_last`."""
+    t_new = _as_times(X_new)
+    _validate_times(t_new, what="X_new")
+    if float(np.asarray(t_new[0])) <= float(np.asarray(state.t_last)):
+        raise ValueError(
+            f"X_new must start strictly after the state's forecast origin "
+            f"t_last = {float(np.asarray(state.t_last))!r}, got first new "
+            f"timestamp {float(np.asarray(t_new[0]))!r}; a temporal state "
+            f"only filters FORWARD (re-fit to revise the past)")
+    Y_new = _as_2d(jnp.asarray(Y_new))
+    if Y_new.shape[1] != state.D:
+        raise ValueError(
+            f"Y_new has {Y_new.shape[1]} output column(s), state carries "
+            f"D={state.D}")
+    return _update_fn(kernel)(state, t_new, Y_new)
+
+
+class TemporalGPRegression:
+    """Exact GP regression on 1-D (temporal) inputs via the state-space
+    path: kernel -> LTI SDE -> Kalman filter/smoother, O(N) in the number
+    of datapoints with no (N, N) — or even (N, M) — intermediate.
+
+    Args:
+      kernel: a kernel with `supports_sde()` (matern12/32/52 on 1-D input,
+        or Sum/Product of those); default Matern32(1).
+      parallel: True (default) runs filter and smoother as
+        `jax.lax.associative_scan` associative operators (O(log N) depth —
+        the paper's parallelization story applied along time); False runs
+        the sequential `lax.scan` twin (same arithmetic, O(N) depth).
+
+    Surface parity with `SparseGPRegression`: fit / elbo / predict /
+    posterior / export_state (+ lml, the honest name here: the state-space
+    likelihood is exact, so elbo() == lml()).
+    """
+
+    def __init__(self, kernel: Optional[Kernel] = None, *,
+                 parallel: bool = True):
+        self.kernel = kernel if kernel is not None else Matern32(1)
+        _require_sde(self.kernel)
+        self.parallel = bool(parallel)
+        self.params: Optional[Params] = None
+        self.history: list = []
+        self._data: Optional[Tuple[jax.Array, jax.Array]] = None
+        self._loss_cache = None  # (kernel, parallel, built loss)
+        self._smooth_cache = None  # (kernel, parallel, built smoother core)
+
+    # -- loss / smoother builders (jit-cached per kernel) --------------------
+
+    def _build_loss(self):
+        kernel, parallel = self.kernel, self.parallel
+
+        def loss(params: Params, t: jax.Array, Y: jax.Array) -> jax.Array:
+            model = kernel.to_sde(params["kern"])
+            dt = jnp.concatenate([jnp.zeros_like(t[:1]), jnp.diff(t)])
+            A, Q = sde.discretize(model, dt)
+            m0 = jnp.zeros((model.d, Y.shape[1]), dtype=A.dtype)
+            res = pskf.kalman_filter(A, Q, model.H,
+                                     jnp.exp(-params["log_beta"]), Y, m0,
+                                     model.Pinf, parallel=parallel)
+            return -res.lml / t.shape[0]
+
+        return loss
+
+    def _loss_fn(self):
+        key = (self.kernel, self.parallel)
+        if self._loss_cache is None or self._loss_cache[0] != key:
+            self._loss_cache = (key, self._build_loss())
+        return self._loss_cache[1]
+
+    def _build_smooth(self):
+        """Smoothed latent marginals over a merged (train + query) timeline:
+        (params, t_all, Y_all, mask) -> (mean (N_all, D), var (N_all,)).
+        Masked steps carry no observation — that is how query timestamps
+        interpolate exactly."""
+        kernel, parallel = self.kernel, self.parallel
+
+        def smooth(params: Params, t_all, Y_all, mask):
+            model = kernel.to_sde(params["kern"])
+            dt = jnp.concatenate([jnp.zeros_like(t_all[:1]), jnp.diff(t_all)])
+            A, Q = sde.discretize(model, dt)
+            m0 = jnp.zeros((model.d, Y_all.shape[1]), dtype=A.dtype)
+            res = pskf.kalman_filter(A, Q, model.H,
+                                     jnp.exp(-params["log_beta"]), Y_all, m0,
+                                     model.Pinf, mask=mask, parallel=parallel)
+            ms, Ps = pskf.rts_smoother(A, Q, res.means, res.covs,
+                                       parallel=parallel)
+            mean = jnp.einsum("i,nid->nd", model.H, ms)
+            var = jnp.einsum("i,nij,j->n", model.H, Ps, model.H)
+            return mean, var
+
+        return smooth
+
+    def _smooth_fn(self):
+        key = (self.kernel, self.parallel)
+        if self._smooth_cache is None or self._smooth_cache[0] != key:
+            self._smooth_cache = (key, jax.jit(self._build_smooth()))
+        return self._smooth_cache[1]
+
+    # -- SparseGPRegression-parity surface -----------------------------------
+
+    def init_params(self, X, Y, *, log_beta: float = 2.0) -> Params:
+        t = _as_times(X)
+        return {
+            "kern": self.kernel.init(),
+            "log_beta": jnp.asarray(log_beta, t.dtype),
+        }
+
+    def _require_fitted(self):
+        if self.params is None:
+            raise RuntimeError(
+                f"{type(self).__name__} is not fitted yet — call .fit() first")
+
+    def fit(self, X, Y, *, optimizer: str = "adam", steps: int = 300,
+            lr: float = 3e-2, log_every: int = 0,
+            params: Optional[Params] = None) -> "TemporalGPRegression":
+        """Maximize the EXACT log marginal likelihood over kernel
+        hyperparameters + noise with the shared optimizer drivers
+        (`repro.core.inference.fit_adam` / `fit_lbfgs`). X must be sorted,
+        duplicate-free timestamps ((N,) or (N, 1)); Y is (N,) or (N, D)."""
+        t = _as_times(X)
+        _validate_times(t)
+        Y = _as_2d(jnp.asarray(Y))
+        if Y.shape[0] != t.shape[0]:
+            raise ValueError(f"X has {t.shape[0]} rows, Y has {Y.shape[0]}")
+        if params is None:
+            params = self.init_params(t, Y)
+        self._data = (t, Y)
+        loss = self._loss_fn()
+        if optimizer == "adam":
+            self.params, self.history = inference.fit_adam(
+                loss, params, (t, Y), steps=steps, lr=lr, log_every=log_every)
+        elif optimizer == "lbfgs":
+            self.params, final = inference.fit_lbfgs(loss, params, (t, Y),
+                                                     maxiter=steps)
+            self.history = [final]
+        else:
+            raise ValueError(
+                f"optimizer must be one of {_OPTIMIZERS}, got {optimizer!r}")
+        return self
+
+    def lml(self) -> float:
+        """Exact log marginal likelihood (total) on the training data."""
+        self._require_fitted()
+        t, Y = self._data
+        return float(-self._loss_fn()(self.params, t, Y) * t.shape[0])
+
+    def elbo(self) -> float:
+        """Surface parity with SparseGPRegression; the state-space
+        likelihood is exact, so the 'bound' is tight: elbo() == lml()."""
+        return self.lml()
+
+    def predict(self, Xt, *, parallel: Optional[bool] = None):
+        """Exact posterior latent marginals at Xt: mean (B, D), var (B,).
+
+        Query timestamps may be in any order and may coincide with training
+        timestamps: they are merged into the training timeline as MASKED
+        (observation-free) steps, filtered + smoothed, and mapped back —
+        interpolation and extrapolation are both exact, matching the dense
+        O(N^3) GP posterior (tests pin <= 1e-6 at N=512)."""
+        self._require_fitted()
+        if parallel is not None and bool(parallel) != self.parallel:
+            # rebuild on a different scan path without clobbering the cache
+            clone = TemporalGPRegression(self.kernel, parallel=parallel)
+            clone.params, clone._data = self.params, self._data
+            return clone.predict(Xt)
+        t_test = _as_times(Xt)
+        t, Y = self._data
+        # merge: stable argsort keeps train entries ahead of coincident
+        # queries, so a query AT a training time smooths (dt = 0 step)
+        t_all = jnp.concatenate([t, t_test])
+        order = jnp.argsort(t_all, stable=True)
+        mask = jnp.concatenate([
+            jnp.ones(t.shape[0], dtype=bool),
+            jnp.zeros(t_test.shape[0], dtype=bool)])[order]
+        Y_all = jnp.concatenate(
+            [Y, jnp.zeros((t_test.shape[0], Y.shape[1]), Y.dtype)])[order]
+        mean_all, var_all = self._smooth_fn()(self.params, t_all[order],
+                                              Y_all, mask)
+        # scatter back: positions of the query rows in the merged timeline
+        inv = jnp.argsort(order, stable=True)[t.shape[0]:]
+        return mean_all[inv], var_all[inv]
+
+    def posterior(self) -> Tuple[jax.Array, jax.Array]:
+        """Smoothed latent marginals AT the training timestamps:
+        (mean (N, D), var (N,)). The temporal analogue of
+        `SparseGPRegression.posterior()` — here the posterior is exact."""
+        self._require_fitted()
+        t, Y = self._data
+        mask = jnp.ones(t.shape[0], dtype=bool)
+        return self._smooth_fn()(self.params, t, Y, mask)
+
+    def export_state(self) -> TemporalState:
+        """Freeze the fitted model into the O(d^2) `TemporalState` the
+        serving tier ships: terminal filtered moments + hyperparameters.
+        `repro.serve` predicts (forecasts) from it and folds new
+        observations in via `update_state` without the training data."""
+        self._require_fitted()
+        t, Y = self._data
+        loss_params = self.params
+        model = self.kernel.to_sde(loss_params["kern"])
+        dt = jnp.concatenate([jnp.zeros_like(t[:1]), jnp.diff(t)])
+        A, Q = sde.discretize(model, dt)
+        m0 = jnp.zeros((model.d, Y.shape[1]), dtype=A.dtype)
+        res = pskf.kalman_filter(A, Q, model.H,
+                                 jnp.exp(-loss_params["log_beta"]), Y, m0,
+                                 model.Pinf, parallel=self.parallel)
+        return TemporalState(kern=loss_params["kern"],
+                             log_beta=loss_params["log_beta"], t_last=t[-1],
+                             m=res.means[-1], P=res.covs[-1],
+                             n=jnp.asarray(t.shape[0], t.dtype))

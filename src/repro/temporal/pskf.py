@@ -1,0 +1,234 @@
+"""Kalman filtering/smoothing for state-space GPs — parallel associative
+scan (log depth) with a sequential `lax.scan` twin.
+
+Model (from `repro.temporal.sde.discretize`): per-step transition/noise
+(A_k, Q_k), shared observation row H (d,) and noise variance R, prior
+x_0 ~ N(m0, P0) at the step before the first timestamp:
+
+    x_k = A_k x_{k-1} + q_k,  q_k ~ N(0, Q_k)
+    y_k = H x_k + r_k,        r_k ~ N(0, R)          (k = 1..N)
+
+Observations are (N, D) matrices: D independent output columns SHARE the
+covariance recursion (P, S, K never depend on y), so the state mean is
+carried as a (d, D) matrix and the whole filter runs once for all columns.
+A boolean `mask` marks which steps carry an observation — masked steps are
+pure predictions, which is how `TemporalGPRegression.predict` interpolates
+at test timestamps.
+
+The parallel path follows Sarkka & Garcia-Fernandez (2021, *Temporal
+Parallelization of Bayesian Smoothers*), the formulation the parallel-gps
+exemplar implements (SNIPPETS.md snippet 1): filtering becomes a PREFIX
+scan of five-tuples (A, b, C, eta, J) under the associative combine
+(eq. (6), docs/temporal.md), smoothing a SUFFIX scan of triples (E, g, L)
+under eq. (8) — both through
+`jax.lax.associative_scan`, O(N) work and O(log N) depth. The sequential
+twin runs the textbook recursions through `lax.scan`; `parallel=` picks
+the path, and tests/test_temporal.py pins the two to <= 1e-10 in f64.
+Derivations with numbered equations: docs/temporal.md.
+
+Both paths are pure and jittable, and both return the EXACT log marginal
+likelihood  sum_k log N(y_k | H m^-_k, S_k)  computed from the one-step
+predicted moments — shared post-hoc code (`_lml`), so the two paths
+evaluate the same formula on their own filtered moments.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class FilterResult(NamedTuple):
+    means: jax.Array  # (N, d, D) filtered state means
+    covs: jax.Array  # (N, d, d) filtered state covariances (shared over D)
+    lml: jax.Array  # scalar: exact log marginal likelihood of observed steps
+
+
+def _sym(P: jax.Array) -> jax.Array:
+    return 0.5 * (P + jnp.swapaxes(P, -1, -2))
+
+
+def _lml(A, Q, H, R, y, mask, m0, P0, means, covs) -> jax.Array:
+    """Exact lml from filtered moments: shift (means, covs) one step right,
+    predict through (A, Q), and sum the Gaussian log-densities of observed
+    steps. O(N d^2) and identical code for both filter paths."""
+    prev_m = jnp.concatenate([m0[None], means[:-1]])
+    prev_P = jnp.concatenate([P0[None], covs[:-1]])
+    mp = A @ prev_m  # (N, d, D)
+    Pp = jnp.einsum("nij,njk,nlk->nil", A, prev_P, A) + Q
+    S = jnp.einsum("i,nij,j->n", H, Pp, H) + R  # (N,)
+    v = y - jnp.einsum("i,nid->nd", H, mp)  # (N, D)
+    D = y.shape[1]
+    ll = -0.5 * (D * jnp.log(2.0 * jnp.pi * S) + jnp.sum(v * v, axis=1) / S)
+    return jnp.sum(jnp.where(mask, ll, 0.0))
+
+
+def _filter_sequential(A, Q, H, R, y, mask, m0, P0):
+    """Textbook predict/update recursion under `lax.scan` (O(N) depth)."""
+
+    def step(carry, inp):
+        m, P = carry
+        A_k, Q_k, y_k, obs = inp
+        mp = A_k @ m
+        Pp = _sym(A_k @ P @ A_k.T + Q_k)
+        S = H @ Pp @ H + R
+        K = jnp.where(obs, Pp @ H / S, jnp.zeros_like(H))
+        m_f = mp + jnp.outer(K, y_k - H @ mp)
+        P_f = _sym(Pp - jnp.outer(K, H) @ Pp)
+        return (m_f, P_f), (m_f, P_f)
+
+    _, (means, covs) = lax.scan(step, (m0, P0), (A, Q, y, mask))
+    return means, covs
+
+
+def _filter_elements(A, Q, H, R, y, mask, m0, P0):
+    """Per-step associative filtering elements (A, b, C, eta, J).
+
+    Generic step (eq. (5), docs/temporal.md), with S = H Q H^T + R and
+    K = Q H^T / S:  A_el = (I - K H) A,  b = K y,  C = (I - K H) Q,
+    eta = A^T H^T y / S,  J = A^T H^T H A / S. A masked step is the pure
+    prediction element (A, 0, Q, 0, 0) — uniformly reached by zeroing K
+    and H/S. The first element instead folds in the prior: it is built
+    from the one-step predicted moments (m1p, P1p)."""
+    y = jnp.where(mask[:, None], y, 0.0)  # masked y may be padding/NaN
+
+    def generic(A_k, Q_k, y_k, obs):
+        S = H @ Q_k @ H + R
+        K = jnp.where(obs, Q_k @ H / S, jnp.zeros_like(H))
+        A_el = A_k - jnp.outer(K, H) @ A_k
+        b = jnp.outer(K, y_k)
+        C = _sym(Q_k - jnp.outer(K, H) @ Q_k)
+        HS = jnp.where(obs, H / S, jnp.zeros_like(H))
+        AtHS = A_k.T @ HS
+        eta = jnp.outer(AtHS, y_k)
+        J = _sym(jnp.outer(AtHS, H @ A_k))
+        return A_el, b, C, eta, J
+
+    A_el, b, C, eta, J = jax.vmap(generic)(A, Q, y, mask)
+
+    # first element: fold the prior through step 1's predict + update
+    m1p = A[0] @ m0
+    P1p = _sym(A[0] @ P0 @ A[0].T + Q[0])
+    S1 = H @ P1p @ H + R
+    K1 = jnp.where(mask[0], P1p @ H / S1, jnp.zeros_like(H))
+    b1 = m1p + jnp.outer(K1, y[0] - H @ m1p)
+    C1 = _sym(P1p - jnp.outer(K1, H) @ P1p)
+    zero_d = jnp.zeros_like(A[0])
+    A_el = A_el.at[0].set(zero_d)
+    b = b.at[0].set(b1)
+    C = C.at[0].set(C1)
+    eta = eta.at[0].set(jnp.zeros_like(m0))
+    J = J.at[0].set(zero_d)
+    return A_el, b, C, eta, J
+
+
+def _filter_op(a, b):
+    """Associative filtering combine (eq. (6), docs/temporal.md): `a` is the
+    earlier prefix, `b` the later element. Batched over a leading axis."""
+    A1, b1, C1, e1, J1 = a
+    A2, b2, C2, e2, J2 = b
+    d = A1.shape[-1]
+    I = jnp.eye(d, dtype=A1.dtype)
+    # G = A2 (I + C1 J2)^-1, from the right via a transposed solve
+    IpCJ = I + C1 @ J2
+    G = jnp.swapaxes(
+        jnp.linalg.solve(jnp.swapaxes(IpCJ, -1, -2), jnp.swapaxes(A2, -1, -2)),
+        -1, -2)
+    # Et^T = A1^T (I + J2 C1)^-1
+    Et = jnp.linalg.solve(jnp.swapaxes(I + J2 @ C1, -1, -2), A1)
+    EtT = jnp.swapaxes(Et, -1, -2)
+    A_new = G @ A1
+    b_new = G @ (b1 + C1 @ e2) + b2
+    C_new = _sym(G @ C1 @ jnp.swapaxes(A2, -1, -2) + C2)
+    e_new = EtT @ (e2 - J2 @ b1) + e1
+    J_new = _sym(EtT @ J2 @ A1 + J1)
+    return A_new, b_new, C_new, e_new, J_new
+
+
+def kalman_filter(A: jax.Array, Q: jax.Array, H: jax.Array, R: jax.Array,
+                  y: jax.Array, m0: jax.Array, P0: jax.Array, *,
+                  mask: Optional[jax.Array] = None,
+                  parallel: bool = True) -> FilterResult:
+    """Kalman filter over N steps; `parallel=` picks associative scan
+    (log depth) or the sequential `lax.scan` twin. See module docstring
+    for shapes; `m0` is (d, D) (one column per output), `P0` (d, d)."""
+    if mask is None:
+        mask = jnp.ones(y.shape[0], dtype=bool)
+    # one common dtype up front: f32 hyperparameters with f64 data would
+    # otherwise promote mid-recursion (a lax.scan carry type error)
+    dtype = jnp.result_type(A.dtype, Q.dtype, y.dtype, m0.dtype, P0.dtype)
+    A, Q, y, m0, P0 = (x.astype(dtype) for x in (A, Q, y, m0, P0))
+    H, R = jnp.asarray(H, dtype), jnp.asarray(R, dtype)
+    if parallel:
+        elems = _filter_elements(A, Q, H, R, y, mask, m0, P0)
+        _, means, covs, _, _ = lax.associative_scan(_filter_op, elems)
+    else:
+        means, covs = _filter_sequential(A, Q, H, R, y, mask, m0, P0)
+    y_eff = jnp.where(mask[:, None], y, 0.0)
+    return FilterResult(means, covs,
+                        _lml(A, Q, H, R, y_eff, mask, m0, P0, means, covs))
+
+
+def _smooth_sequential(A, Q, means, covs):
+    """Textbook RTS backward recursion under a reversed `lax.scan`."""
+
+    def step(carry, inp):
+        ms_next, Ps_next = carry
+        m_k, P_k, A_next, Q_next = inp
+        Pp = _sym(A_next @ P_k @ A_next.T + Q_next)
+        G = jnp.linalg.solve(Pp, A_next @ P_k).T  # P_k A_next^T Pp^-1
+        m = m_k + G @ (ms_next - A_next @ m_k)
+        P = _sym(P_k + G @ (Ps_next - Pp) @ G.T)
+        return (m, P), (m, P)
+
+    init = (means[-1], covs[-1])
+    _, (ms, Ps) = lax.scan(step, init,
+                           (means[:-1], covs[:-1], A[1:], Q[1:]),
+                           reverse=True)
+    return (jnp.concatenate([ms, means[-1:]]),
+            jnp.concatenate([Ps, covs[-1:]]))
+
+
+def _smooth_elements(A, Q, means, covs):
+    """Associative smoothing elements (E, g, L) (eq. (7), docs/temporal.md):
+    for k < N the RTS gain triple, for k = N the filtered terminal."""
+
+    def make(m_k, P_k, A_next, Q_next):
+        Pp = _sym(A_next @ P_k @ A_next.T + Q_next)
+        E = jnp.linalg.solve(Pp, A_next @ P_k).T
+        g = m_k - E @ (A_next @ m_k)
+        L = _sym(P_k - E @ Pp @ E.T)
+        return E, g, L
+
+    E, g, L = jax.vmap(make)(means[:-1], covs[:-1], A[1:], Q[1:])
+    E = jnp.concatenate([E, jnp.zeros_like(E[-1:])])
+    g = jnp.concatenate([g, means[-1:]])
+    L = jnp.concatenate([L, covs[-1:]])
+    return E, g, L
+
+
+def _smooth_op(a, b):
+    """Associative smoothing combine (eq. (8), docs/temporal.md). Under
+    `associative_scan(..., reverse=True)` the first argument is the
+    already-combined LATER suffix and the second the earlier element."""
+    Ea, ga, La = a
+    Eb, gb, Lb = b
+    E = Eb @ Ea
+    g = Eb @ ga + gb
+    L = _sym(Eb @ La @ jnp.swapaxes(Eb, -1, -2) + Lb)
+    return E, g, L
+
+
+def rts_smoother(A: jax.Array, Q: jax.Array, means: jax.Array,
+                 covs: jax.Array, *,
+                 parallel: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """RTS smoother over filtered moments: (N, d, D) means, (N, d, d) covs
+    -> same shapes, now conditioned on ALL observations. `A`/`Q` are the
+    same per-step discretization the filter consumed."""
+    if parallel:
+        elems = _smooth_elements(A, Q, means, covs)
+        _, ms, Ps = lax.associative_scan(_smooth_op, elems, reverse=True)
+        return ms, Ps
+    return _smooth_sequential(A, Q, means, covs)

@@ -1,0 +1,176 @@
+"""Kernel -> LTI SDE conversion for the state-space (temporal) GP backend.
+
+A stationary 1-D GP prior f(t) ~ GP(0, k(t - t')) with a rational spectral
+density is EXACTLY the stationary distribution of a linear time-invariant
+stochastic differential equation
+
+    dx(t) = F x(t) dt + L dW(t),     f(t) = H x(t),          (Sarkka & al.)
+
+with state dimension d (1 for Matern-1/2, 2 for 3/2, 3 for 5/2). The
+stationary covariance P_inf solves the Lyapunov equation
+
+    F P_inf + P_inf F^T + L q L^T = 0,
+
+and the kernel is recovered as k(tau) = H expm(F tau) P_inf H^T for
+tau >= 0 (tested against `Kernel.K` in tests/test_temporal.py). Between
+observation times the SDE discretizes exactly:
+
+    A_k = expm(F dt_k),     Q_k = P_inf - A_k P_inf A_k^T,
+
+where the stationary shortcut for Q_k (instead of the integral of
+e^{F s} L q L^T e^{F^T s}) is an identity of the Lyapunov equation — it is
+what lets Sum/Product compositions discretize without a closed-form
+continuous-time noise integral.
+
+Compositions mirror `repro.gp.kernels.Sum` / `Product`:
+
+    sum:     F, Qc, P_inf block-diagonal; H concatenated      (f = f1 + f2)
+    product: F = F1 (+) F2 (Kronecker sum), H = H1 (x) H2,
+             P_inf = P1 (x) P2, Qc = Qc1 (x) P2 + P1 (x) Qc2
+
+since expm((F1 (+) F2) tau) = expm(F1 tau) (x) expm(F2 tau) makes
+H expm(F tau) P_inf H^T factor into k1(tau) * k2(tau).
+
+This module is deliberately kernel-class-free (plain array builders), so
+`repro.gp.kernels` can lazily import it from the `to_sde()` hooks without
+an import cycle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LTISDE(NamedTuple):
+    """The LTI SDE behind a stationary kernel (see module docstring).
+
+    `L` is the (d, w) noise loading of leaf/sum models; Kronecker products
+    mix the white-noise channels, so composite `product` models carry
+    `L=None` and only the full diffusion matrix `Qc = L q L^T` — the
+    discretization (and everything downstream) needs only `Qc`.
+    """
+
+    F: jax.Array  # (d, d) drift
+    H: jax.Array  # (d,)   observation row: f(t) = H x(t)
+    Pinf: jax.Array  # (d, d) stationary covariance
+    Qc: jax.Array  # (d, d) diffusion L q L^T
+    L: Optional[jax.Array] = None  # (d, w) noise loading, when meaningful
+
+    @property
+    def d(self) -> int:
+        return self.F.shape[-1]
+
+
+def _scalar(x: jax.Array) -> jax.Array:
+    """ARD-shaped (1,) lengthscales and scalars both become 0-d."""
+    return jnp.reshape(jnp.asarray(x), ())
+
+
+def matern12_sde(variance: jax.Array, lengthscale: jax.Array) -> LTISDE:
+    """Matern nu=1/2 (Ornstein-Uhlenbeck): lam = 1/l, q = 2 sigma^2 lam."""
+    var, lam = _scalar(variance), 1.0 / _scalar(lengthscale)
+    one = jnp.ones_like(var)
+    F = (-lam * one)[None, None]
+    q = 2.0 * var * lam
+    return LTISDE(F=F, H=jnp.stack([one]), Pinf=var[None, None],
+                  Qc=q[None, None], L=one[None, None])
+
+
+def matern32_sde(variance: jax.Array, lengthscale: jax.Array) -> LTISDE:
+    """Matern nu=3/2: lam = sqrt(3)/l, q = 4 sigma^2 lam^3."""
+    var, ls = _scalar(variance), _scalar(lengthscale)
+    lam = jnp.sqrt(3.0) / ls
+    zero, one = jnp.zeros_like(var), jnp.ones_like(var)
+    F = jnp.stack([jnp.stack([zero, one]),
+                   jnp.stack([-(lam**2), -2.0 * lam])])
+    q = 4.0 * var * lam**3
+    Qc = jnp.stack([jnp.stack([zero, zero]), jnp.stack([zero, q])])
+    Pinf = jnp.stack([jnp.stack([var, zero]),
+                      jnp.stack([zero, var * lam**2])])
+    return LTISDE(F=F, H=jnp.stack([one, zero]), Pinf=Pinf, Qc=Qc,
+                  L=jnp.stack([zero, one])[:, None])
+
+
+def matern52_sde(variance: jax.Array, lengthscale: jax.Array) -> LTISDE:
+    """Matern nu=5/2: lam = sqrt(5)/l, q = 16/3 sigma^2 lam^5."""
+    var, ls = _scalar(variance), _scalar(lengthscale)
+    lam = jnp.sqrt(5.0) / ls
+    zero, one = jnp.zeros_like(var), jnp.ones_like(var)
+    F = jnp.stack([
+        jnp.stack([zero, one, zero]),
+        jnp.stack([zero, zero, one]),
+        jnp.stack([-(lam**3), -3.0 * lam**2, -3.0 * lam]),
+    ])
+    q = var * lam**5 * (16.0 / 3.0)
+    Qc = jnp.zeros_like(F).at[2, 2].set(q)
+    kappa = var * lam**2 / 3.0  # -E[f(t) f''(t)], the (0,2) cross moment
+    Pinf = jnp.stack([
+        jnp.stack([var, zero, -kappa]),
+        jnp.stack([zero, kappa, zero]),
+        jnp.stack([-kappa, zero, var * lam**4]),
+    ])
+    return LTISDE(F=F, H=jnp.stack([one, zero, zero]), Pinf=Pinf, Qc=Qc,
+                  L=jnp.stack([zero, zero, one])[:, None])
+
+
+def _block_diag(blocks: Tuple[jax.Array, ...]) -> jax.Array:
+    return jax.scipy.linalg.block_diag(*blocks)
+
+
+def sum_sde(*parts: LTISDE) -> LTISDE:
+    """f = sum_i f_i with independent part states: everything block-diagonal,
+    H concatenated. k_sum(tau) = sum_i k_i(tau) follows directly."""
+    L = None
+    if all(p.L is not None for p in parts):
+        L = _block_diag(tuple(p.L for p in parts))
+    return LTISDE(
+        F=_block_diag(tuple(p.F for p in parts)),
+        H=jnp.concatenate([p.H for p in parts]),
+        Pinf=_block_diag(tuple(p.Pinf for p in parts)),
+        Qc=_block_diag(tuple(p.Qc for p in parts)),
+        L=L,
+    )
+
+
+def _product_pair(a: LTISDE, b: LTISDE) -> LTISDE:
+    """Kronecker composition: expm((F1 (+) F2) t) = expm(F1 t) (x) expm(F2 t)
+    makes H expm(F tau) Pinf H^T = k1(tau) k2(tau). Qc follows from the
+    Lyapunov identity Qc = -(F Pinf + Pinf F^T) applied to the composite."""
+    Ia = jnp.eye(a.d, dtype=a.F.dtype)
+    Ib = jnp.eye(b.d, dtype=b.F.dtype)
+    return LTISDE(
+        F=jnp.kron(a.F, Ib) + jnp.kron(Ia, b.F),
+        H=jnp.kron(a.H, b.H),
+        Pinf=jnp.kron(a.Pinf, b.Pinf),
+        Qc=jnp.kron(a.Qc, b.Pinf) + jnp.kron(a.Pinf, b.Qc),
+        L=None,
+    )
+
+
+def product_sde(*parts: LTISDE) -> LTISDE:
+    out = parts[0]
+    for p in parts[1:]:
+        out = _product_pair(out, p)
+    return out
+
+
+def discretize(sde: LTISDE, dt: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Exact discretization over gaps `dt` (N,): A (N, d, d), Q (N, d, d).
+
+    A_k = expm(F dt_k); Q_k = Pinf - A_k Pinf A_k^T uses the stationary
+    shortcut (exact — see module docstring), which also makes Q_k PSD by
+    construction and gives dt = 0 -> (A, Q) = (I, 0) so repeated/padded
+    timestamps cost nothing. Differentiable and vmap/jit-safe (jax's expm
+    is Pade + scaling-squaring in lax ops).
+    """
+    dt = jnp.asarray(dt)
+    # promote BEFORE the arithmetic: a mixed f32 Pinf / f64 A einsum is not
+    # bit-stable across jit vs eager, which would break streamed == one-shot
+    # parity (f32 hyperparameters with f64 timestamps is the default setup)
+    dtype = jnp.result_type(sde.F.dtype, dt.dtype)
+    F, Pinf = sde.F.astype(dtype), sde.Pinf.astype(dtype)
+    A = jax.vmap(jax.scipy.linalg.expm)(F[None] * dt[:, None, None])
+    Q = Pinf[None] - jnp.einsum("nij,jk,nlk->nil", A, Pinf, A)
+    return A, 0.5 * (Q + jnp.swapaxes(Q, -1, -2))
