@@ -13,13 +13,43 @@ python -m pytest -x -q
 echo "== docs check (links resolve, docs/api.md symbols import) =="
 python scripts/check_docs.py
 
-echo "== static analysis (lint + pallas audit + jaxpr-check smoke) =="
-# the three repro.analysis passes: AST lint rules ANL001-ANL004 over
-# src/repro, the per-kernel VMEM/tiling/dtype audit of every registered
-# Pallas kernel, and the scaling-class check on the quickstart SGPR loss
-# (no intermediate in value_and_grad may reach O(N*M)). Non-zero exit on
-# any finding.
+echo "== static analysis (lint + concurrency + pallas audit + jaxpr-check) =="
+# the four repro.analysis passes: AST lint rules ANL001-ANL004 (+ inferred
+# ANL006) over src/repro, the whole-repo lock model (order cycles ANL005,
+# guard-inferred races ANL006, blocking-under-lock ANL007), the per-kernel
+# VMEM/tiling/dtype audit of every registered Pallas kernel, and the
+# scaling-class check on the quickstart SGPR loss (no intermediate in
+# value_and_grad may reach O(N*M)). Non-zero exit on any finding.
 python -m repro.analysis --all
+
+echo "== concurrency analysis (machine-readable lane) =="
+# same lock-model pass, JSON document: findings empty, every lock ranked in
+# the declared hierarchy, every statically visible edge order-respecting
+CONC_JSON="$(mktemp -t concurrency.XXXXXX.json)"
+python -m repro.analysis --concurrency --format json > "$CONC_JSON"
+CONC_JSON="$CONC_JSON" python - <<'PY'
+import json
+import os
+
+doc = json.load(open(os.environ["CONC_JSON"]))
+conc = doc["passes"]["concurrency"]
+assert doc["ok"] and conc["findings"] == [], conc["findings"]
+rank = {n: i for i, n in enumerate(conc["hierarchy"])}
+locks = {l["name"] for l in conc["locks"]}
+assert locks == set(rank), f"unranked locks: {locks ^ set(rank)}"
+for e in conc["edges"]:
+    assert rank[e["held"]] < rank[e["acquired"]], e
+print(f"concurrency JSON OK ({len(locks)} locks, "
+      f"{len(conc['edges'])} edges, 0 findings)")
+PY
+
+echo "== lockdep-instrumented serve battery (runtime deadlock check) =="
+# tests/conftest.py wraps every test_serve* test in lockdep.watch(): all
+# locks the serving tier creates are instrumented and any acquisition
+# inverting the declared hierarchy or an observed order fails the test.
+# (These tests also run in tier-1; this lane re-runs them by name so a CI
+# log shows the lockdep gate explicitly.)
+python -m pytest -q tests/test_serve.py tests/test_serve_persist.py
 
 echo "== quickstart (sparse GP regression, facade) =="
 python examples/quickstart.py --steps 150

@@ -1,7 +1,8 @@
 """repro.analysis — static analysis for the scaling claims the tests assert.
 
-Three passes, runnable as a library, as a CLI (``python -m repro.analysis``),
-and as the "static analysis" lane in ``scripts/ci.sh``:
+Four passes plus a runtime verifier, runnable as a library, as a CLI
+(``python -m repro.analysis``), and as the "static analysis" lane in
+``scripts/ci.sh``:
 
 * :mod:`repro.analysis.jaxpr_check` — traces a function at two problem
   sizes and classifies every intermediate's scaling class along an axis
@@ -14,46 +15,72 @@ and as the "static analysis" lane in ``scripts/ci.sh``:
 * :mod:`repro.analysis.lint` — AST rules ANL001-ANL004 for the invariants
   earlier PRs fixed by hand (call-time platform dispatch, locked registry
   access, bwd_backend-only VJP registration, no literal kernel dtypes).
-"""
-from repro.analysis.jaxpr_check import (
-    AnalysisError,
-    Intermediate,
-    ScalingReport,
-    ScalingViolation,
-    assert_no_scaling,
-    scaling_class,
-    scaling_report,
-    trace_intermediates,
-)
-from repro.analysis.lint import LintFinding, RULES, lint_paths, lint_source
-from repro.analysis.pallas_audit import (
-    AuditFinding,
-    KernelAudit,
-    Problem,
-    VMEM_BUDGET_BYTES,
-    audit_callable,
-    audit_kernels,
-    vmem_table,
-)
+* :mod:`repro.analysis.concurrency` — whole-repo lock model of the
+  serving tier: acquisition graph, lock-order cycles / declared-hierarchy
+  inversions (ANL005), guard-inferred race candidates (ANL006, the
+  generalized ANL002), blocking calls under locks (ANL007).
+* :mod:`repro.analysis.lockdep` — runtime lock-order verifier
+  (``watch()`` / ``named_lock``) that turns the serve test battery into a
+  deadlock detector; raises ``LockOrderViolation`` on the first inversion.
 
-__all__ = [
-    "AnalysisError",
-    "Intermediate",
-    "ScalingReport",
-    "ScalingViolation",
-    "assert_no_scaling",
-    "scaling_class",
-    "scaling_report",
-    "trace_intermediates",
-    "LintFinding",
-    "RULES",
-    "lint_paths",
-    "lint_source",
-    "AuditFinding",
-    "KernelAudit",
-    "Problem",
-    "VMEM_BUDGET_BYTES",
-    "audit_callable",
-    "audit_kernels",
-    "vmem_table",
-]
+Submodules load lazily: ``concurrency`` and ``lockdep`` are stdlib-only
+and are imported at runtime by `repro.tune.cache`, so touching them must
+not drag in jax via the heavier passes.
+"""
+from typing import Dict
+
+_EXPORTS: Dict[str, str] = {
+    # jaxpr_check
+    "AnalysisError": "jaxpr_check",
+    "Intermediate": "jaxpr_check",
+    "ScalingReport": "jaxpr_check",
+    "ScalingViolation": "jaxpr_check",
+    "assert_no_scaling": "jaxpr_check",
+    "scaling_class": "jaxpr_check",
+    "scaling_report": "jaxpr_check",
+    "trace_intermediates": "jaxpr_check",
+    # lint
+    "LintFinding": "lint",
+    "RULES": "lint",
+    "lint_paths": "lint",
+    "lint_source": "lint",
+    # pallas_audit
+    "AuditFinding": "pallas_audit",
+    "KernelAudit": "pallas_audit",
+    "Problem": "pallas_audit",
+    "VMEM_BUDGET_BYTES": "pallas_audit",
+    "audit_callable": "pallas_audit",
+    "audit_kernels": "pallas_audit",
+    "vmem_table": "pallas_audit",
+    # concurrency
+    "BLOCKING_OK": "concurrency",
+    "ConcurrencyFinding": "concurrency",
+    "ConcurrencyModel": "concurrency",
+    "LOCK_HIERARCHY": "concurrency",
+    "analyze_paths": "concurrency",
+    "analyze_sources": "concurrency",
+    # lockdep
+    "LockOrderViolation": "lockdep",
+    "named_lock": "lockdep",
+    "watch": "lockdep",
+}
+
+__all__ = sorted(_EXPORTS) + ["concurrency", "lockdep", "jaxpr_check",
+                              "lint", "pallas_audit"]
+
+
+def __getattr__(name: str):
+    if name in ("concurrency", "lockdep", "jaxpr_check", "lint",
+                "pallas_audit"):
+        import importlib
+        return importlib.import_module(f"repro.analysis.{name}")
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.analysis' has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(f"repro.analysis.{mod}"), name)
+
+
+def __dir__():
+    return __all__

@@ -2,50 +2,90 @@
 
     python -m repro.analysis --all            # every pass (CI lane)
     python -m repro.analysis --lint           # AST rules only
+    python -m repro.analysis --concurrency    # lock graph / races / blocking
     python -m repro.analysis --pallas-audit   # kernel VMEM/tiling/dtype
     python -m repro.analysis --jaxpr-check    # scaling smoke on the
                                               # quickstart SGPR loss
+    python -m repro.analysis --all --format json   # machine-readable
 
 Exit status is the number of failing passes (0 on a clean tree). Findings
-print with file:line so editors can jump to them. Suppress a lint finding
-inline with ``# noqa: ANL00x``; there is deliberately no suppression for
-the pallas audit or the jaxpr check — fix the kernel or widen the stated
-bound instead.
+print with file:line so editors can jump to them; ``--format json`` emits
+one JSON document (findings, lock graph, audit rows) for tooling.
+Suppress a lint/concurrency finding inline with ``# noqa: ANL00x``; there
+is deliberately no suppression for the pallas audit or the jaxpr check —
+fix the kernel or widen the stated bound instead.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import sys
 
 
-def _run_lint(paths=None) -> int:
+def _run_lint(paths, emit) -> tuple:
     from repro.analysis.lint import lint_paths
 
     findings = lint_paths(paths or None)
     for f in findings:
-        print(f.describe())
-    print(f"[lint] {len(findings)} finding(s) across rules ANL001-ANL004")
-    return 1 if findings else 0
+        emit(f.describe())
+    emit(f"[lint] {len(findings)} finding(s) across rules ANL001-ANL004 "
+         f"(+ inferred ANL006)")
+    payload = {"findings": [dataclasses.asdict(f) for f in findings]}
+    return (1 if findings else 0), payload
 
 
-def _run_pallas_audit(vmem_budget_bytes: int) -> int:
+def _run_concurrency(paths, emit) -> tuple:
+    from repro.analysis.concurrency import (BLOCKING_OK, LOCK_HIERARCHY,
+                                            analyze_paths)
+
+    model = analyze_paths(paths or None)
+    for f in model.findings:
+        emit(f.describe())
+    emit(f"[concurrency] {len(model.defs)} lock(s), "
+         f"{len(model.acquisitions)} acquisition site(s), "
+         f"{len(model.edges)} order edge(s), "
+         f"{len(model.findings)} finding(s) across rules ANL005-ANL007")
+    payload = {
+        "hierarchy": list(LOCK_HIERARCHY),
+        "blocking_ok": sorted(BLOCKING_OK),
+        "locks": [dataclasses.asdict(d) for d in model.defs.values()],
+        "edges": [
+            {"held": a, "acquired": b,
+             "sites": [f"{p}:{ln}" for p, ln in sorted(sites)]}
+            for (a, b), sites in sorted(model.edges.items())
+        ],
+        "findings": [f.as_dict() for f in model.findings],
+    }
+    return (1 if model.findings else 0), payload
+
+
+def _run_pallas_audit(vmem_budget_bytes: int, emit) -> tuple:
     from repro.analysis.pallas_audit import audit_kernels
 
     audits = audit_kernels(vmem_budget_bytes=vmem_budget_bytes)
     bad = 0
+    rows = []
     for a in audits:
         status = "ok" if (a.fits and not a.findings) else "FAIL"
-        print(f"[pallas] {a.name:24s} grid={a.grid!s:14s} ct={a.ct} "
-              f"vmem={a.vmem_estimate_bytes / 2**20:6.2f} MiB "
-              f"(budget {a.vmem_budget_bytes / 2**20:.0f} MiB)  {status}")
+        emit(f"[pallas] {a.name:24s} grid={a.grid!s:14s} ct={a.ct} "
+             f"vmem={a.vmem_estimate_bytes / 2**20:6.2f} MiB "
+             f"(budget {a.vmem_budget_bytes / 2**20:.0f} MiB)  {status}")
         for f in a.findings:
-            print(f"         {f.describe()}")
+            emit(f"         {f.describe()}")
             bad += 1
-    print(f"[pallas] {len(audits)} kernel(s) audited, {bad} finding(s)")
-    return 1 if bad else 0
+        rows.append({
+            "name": a.name, "grid": list(a.grid), "ct": str(a.ct),
+            "vmem_estimate_bytes": int(a.vmem_estimate_bytes),
+            "vmem_budget_bytes": int(a.vmem_budget_bytes),
+            "fits": bool(a.fits),
+            "findings": [f.describe() for f in a.findings],
+        })
+    emit(f"[pallas] {len(audits)} kernel(s) audited, {bad} finding(s)")
+    return (1 if bad else 0), {"kernels": rows}
 
 
-def _run_jaxpr_check() -> int:
+def _run_jaxpr_check(emit) -> tuple:
     """Scaling smoke on the quickstart model: value_and_grad of the chunked
     SGPR loss must keep every intermediate strictly below O(N*M)."""
     import jax
@@ -53,6 +93,8 @@ def _run_jaxpr_check() -> int:
 
     from repro.analysis.jaxpr_check import ScalingViolation, assert_no_scaling
     from repro.gp import SparseGPRegression, get
+
+    checks = []
 
     N, M, chunk = 4096, 32, 512
     key = jax.random.PRNGKey(0)
@@ -65,10 +107,12 @@ def _run_jaxpr_check() -> int:
             jax.value_and_grad(gp._loss_fn()), p, X, Y,
             axis="N", worse_than="N*M", sizes={"N": N, "M": M})
     except ScalingViolation as exc:
-        print(f"[jaxpr] FAIL: {exc}")
-        return 1
-    print(f"[jaxpr] quickstart SGPR value_and_grad: worst intermediate "
-          f"{report.worst_class} — below the O(N*M) bound")
+        emit(f"[jaxpr] FAIL: {exc}")
+        return 1, {"checks": checks, "error": str(exc)}
+    emit(f"[jaxpr] quickstart SGPR value_and_grad: worst intermediate "
+         f"{report.worst_class} — below the O(N*M) bound")
+    checks.append({"name": "sgpr_value_and_grad", "bound": "N*M",
+                   "worst_class": report.worst_class})
 
     # the temporal backend's sequential training loss must stay O(N): no
     # (N, N) Gram matrix may appear anywhere in value_and_grad. (The
@@ -90,11 +134,13 @@ def _run_jaxpr_check() -> int:
             jax.value_and_grad(loss), tp, t, y,
             axis="N", worse_than="N^2", sizes={"N": n})
     except ScalingViolation as exc:
-        print(f"[jaxpr] FAIL: {exc}")
-        return 1
-    print(f"[jaxpr] temporal sequential value_and_grad: worst intermediate "
-          f"{report.worst_class} — below the O(N^2) bound")
-    return 0
+        emit(f"[jaxpr] FAIL: {exc}")
+        return 1, {"checks": checks, "error": str(exc)}
+    emit(f"[jaxpr] temporal sequential value_and_grad: worst intermediate "
+         f"{report.worst_class} — below the O(N^2) bound")
+    checks.append({"name": "temporal_sequential_value_and_grad",
+                   "bound": "N^2", "worst_class": report.worst_class})
+    return 0, {"checks": checks}
 
 
 def main(argv=None) -> int:
@@ -104,34 +150,56 @@ def main(argv=None) -> int:
     ap.add_argument("--all", action="store_true",
                     help="run every pass (default when no pass is selected)")
     ap.add_argument("--lint", action="store_true", help="AST lint rules")
+    ap.add_argument("--concurrency", action="store_true",
+                    help="lock-acquisition graph: order cycles (ANL005), "
+                         "guard-inferred races (ANL006), blocking under "
+                         "locks (ANL007)")
     ap.add_argument("--pallas-audit", action="store_true",
                     help="Pallas kernel VMEM/tiling/dtype audit")
     ap.add_argument("--jaxpr-check", action="store_true",
                     help="scaling-class smoke on the quickstart SGPR loss")
     ap.add_argument("--vmem-budget", type=int, default=None, metavar="BYTES",
                     help="override the per-core VMEM budget for the audit")
+    ap.add_argument("--format", choices=("text", "json"), default="text",
+                    help="text (default) prints findings with file:line; "
+                         "json emits one machine-readable document")
     ap.add_argument("paths", nargs="*", metavar="PATH",
-                    help="restrict the lint pass to these files "
-                         "(default: every .py under src/repro)")
+                    help="restrict the lint/concurrency passes to these "
+                         "files (default: every .py under src/repro)")
     args = ap.parse_args(argv)
 
     from repro.analysis.pallas_audit import VMEM_BUDGET_BYTES
 
     budget = args.vmem_budget or VMEM_BUDGET_BYTES
-    chosen = args.lint or args.pallas_audit or args.jaxpr_check
+    chosen = (args.lint or args.concurrency or args.pallas_audit
+              or args.jaxpr_check)
     run_all = args.all or not chosen
+    text = args.format == "text"
+    emit = print if text else (lambda *_a, **_k: None)
 
     failures = 0
+    passes = {}
     if run_all or args.lint:
-        failures += _run_lint(args.paths)
+        rc, passes["lint"] = _run_lint(args.paths, emit)
+        failures += rc
+    if run_all or args.concurrency:
+        rc, passes["concurrency"] = _run_concurrency(args.paths, emit)
+        failures += rc
     if run_all or args.pallas_audit:
-        failures += _run_pallas_audit(budget)
+        rc, passes["pallas_audit"] = _run_pallas_audit(budget, emit)
+        failures += rc
     if run_all or args.jaxpr_check:
-        failures += _run_jaxpr_check()
-    if failures:
-        print(f"static analysis: {failures} pass(es) failed")
+        rc, passes["jaxpr_check"] = _run_jaxpr_check(emit)
+        failures += rc
+
+    if text:
+        if failures:
+            print(f"static analysis: {failures} pass(es) failed")
+        else:
+            print("static analysis: all passes clean")
     else:
-        print("static analysis: all passes clean")
+        print(json.dumps({"passes": passes, "failures": failures,
+                          "ok": failures == 0}, indent=2, sort_keys=True))
     return failures
 
 

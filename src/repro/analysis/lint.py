@@ -8,10 +8,13 @@ this repo's history:
           at import into module state; under `jax.distributed` or test
           reordering that snapshot is stale. Platform reads must happen at
           call time (the `interpret_mode()` pattern in `kernels/ops.py`).
-  ANL002  unguarded registry access. `GPServer._models` is shared across
-          serving threads; every read or write outside a
-          `with self._registry_lock:` block races `register()`. (`__init__`
-          is exempt: the instance is not yet published.)
+  ANL002  unguarded shared-state access — now an alias. The original rule
+          hardcoded one attribute/lock pair (`_models`/`_registry_lock`);
+          it is generalized by `repro.analysis.concurrency`'s guard
+          inference (ANL006): ANY attribute written under a lock is
+          tracked, and every lock-free access of it is flagged. `lint`
+          reports those findings inline, and `# noqa: ANL002` comments
+          keep working (the alias suppresses ANL006).
   ANL003  backward-pass registration outside the dispatcher. Kernel modules
           must not call `jax.vjp` or register `.defvjp` themselves — the
           lru-cached op factories in `kernels/ops.py` own custom-VJP wiring
@@ -39,7 +42,8 @@ __all__ = ["LintFinding", "RULES", "lint_source", "lint_paths"]
 RULES: Dict[str, str] = {
     "ANL001": "import-time platform dispatch (use interpret_mode() / "
               "call-time jax.devices())",
-    "ANL002": "registry access outside its lock",
+    "ANL002": "alias of ANL006: lock-guarded attribute accessed without "
+              "a lock (guard inference in repro.analysis.concurrency)",
     "ANL003": "backward registration outside the bwd_backend dispatcher",
     "ANL004": "hard-coded dtype literal in a kernel file",
 }
@@ -47,10 +51,6 @@ RULES: Dict[str, str] = {
 # platform-reading callables that must not run at import time
 _PLATFORM_CALLS = {"devices", "default_backend", "local_devices",
                    "process_index", "get_backend"}
-
-# attribute -> lock that must be held (ANL002)
-_GUARDED_ATTRS: Dict[str, str] = {"_models": "_registry_lock"}
-_GUARD_EXEMPT_FUNCS = {"__init__"}
 
 # files whose ANL003/ANL004 rules apply (path match, forward slashes)
 _KERNEL_DIR = "repro/kernels/"
@@ -107,7 +107,6 @@ class _Visitor(ast.NodeVisitor):
         self.findings: List[LintFinding] = []
         self._func_depth = 0
         self._func_names: List[str] = []
-        self._locks_held: List[str] = []
         self._in_kernel_file = (
             _KERNEL_DIR in relpath and not relpath.endswith("ops.py"))
         self._in_promotion_helper = 0
@@ -134,17 +133,6 @@ class _Visitor(ast.NodeVisitor):
         self._func_depth += 1
         self.generic_visit(node)
         self._func_depth -= 1
-
-    def visit_With(self, node: ast.With) -> None:
-        held = []
-        for item in node.items:
-            dotted = _dotted(item.context_expr)
-            if dotted:
-                held.append(dotted.rsplit(".", 1)[-1])
-        self._locks_held.extend(held)
-        self.generic_visit(node)
-        if held:
-            del self._locks_held[-len(held):]
 
     # -- rules -------------------------------------------------------------
     def visit_Call(self, node: ast.Call) -> None:
@@ -186,25 +174,16 @@ class _Visitor(ast.NodeVisitor):
 
         self.generic_visit(node)
 
-    def visit_Attribute(self, node: ast.Attribute) -> None:
-        # ANL002: self.<guarded attr> outside `with self.<lock>:`
-        lock = _GUARDED_ATTRS.get(node.attr)
-        if (lock is not None
-                and isinstance(node.value, ast.Name)
-                and node.value.id == "self"
-                and lock not in self._locks_held
-                and not (self._func_names
-                         and self._func_names[-1] in _GUARD_EXEMPT_FUNCS)):
-            self._add(node, "ANL002",
-                      f"`self.{node.attr}` accessed outside "
-                      f"`with self.{lock}:` — the registry is shared across "
-                      f"serving threads")
-        self.generic_visit(node)
-
-
 def lint_source(source: str, relpath: str) -> List[LintFinding]:
     """Lint one module's source text. `relpath` selects which rules apply
-    (kernel-file rules key off the path) and is reported in findings."""
+    (kernel-file rules key off the path) and is reported in findings.
+
+    Unguarded-shared-state findings (the generalized ANL002) come from
+    `repro.analysis.concurrency.guard_findings` and are reported here as
+    ANL006, so a plain `--lint` run still catches the registry-race bug
+    class without the full lock-graph pass."""
+    from repro.analysis import concurrency
+
     relpath = relpath.replace("\\", "/")
     try:
         tree = ast.parse(source, filename=relpath)
@@ -214,8 +193,13 @@ def lint_source(source: str, relpath: str) -> List[LintFinding]:
     visitor = _Visitor(relpath)
     visitor.visit(tree)
     lines = source.splitlines()
-    return [f for f in visitor.findings
-            if f.code not in _noqa_codes(lines, f.line)]
+    findings = [f for f in visitor.findings
+                if f.code not in _noqa_codes(lines, f.line)]
+    findings.extend(
+        LintFinding(f.path, f.line, f.code, f.message)
+        for f in concurrency.guard_findings(source, relpath))
+    findings.sort(key=lambda f: (f.line, f.code))
+    return findings
 
 
 def lint_paths(paths: Optional[Iterable[pathlib.Path]] = None,

@@ -145,7 +145,9 @@ class StateStore:
         self._managers: Dict[str, CheckpointManager] = {}
         self._lock = threading.Lock()
 
-    def _manager(self, name: str) -> CheckpointManager:
+    def _manager_locked(self, name: str) -> CheckpointManager:
+        # caller holds self._lock (the `_locked` suffix is the repo-wide
+        # convention repro.analysis.concurrency exempts from ANL006)
         if not _NAME_RE.match(name):
             raise ValueError(
                 f"model name {name!r} is not storable: names must match "
@@ -162,7 +164,7 @@ class StateStore:
         """Persist one model atomically; returns the step written. Each save
         gets a fresh monotone step so retention keeps `keep` versions."""
         with self._lock:
-            mgr = self._manager(name)
+            mgr = self._manager_locked(name)
             step = (mgr.latest_step() or 0) + 1
             extra = {
                 "persist_schema": PERSIST_SCHEMA,
@@ -211,7 +213,7 @@ class StateStore:
         """(kernel, manifest) from the manifest alone — no array I/O. What
         `GPServer.load` uses to register persisted models cold."""
         with self._lock:
-            manifest = self._manager(name).load_manifest()
+            manifest = self._manager_locked(name).load_manifest()
             extra = self._extra(manifest, name)
             return kernel_from_spec(extra["kernel"]), manifest
 
@@ -220,7 +222,7 @@ class StateStore:
         the model was never saved, CheckpointCorruptError if its newest
         checkpoint cannot be trusted."""
         with self._lock:
-            mgr = self._manager(name)
+            mgr = self._manager_locked(name)
             arrays, manifest = mgr.load_arrays()
             extra = self._extra(manifest, name)
             kernel = kernel_from_spec(extra["kernel"])
@@ -241,7 +243,7 @@ class StateStore:
         """Resident size of the stored state, from the manifest alone (no
         array I/O) — what the server's LRU accountant charges a cold entry."""
         with self._lock:
-            manifest = self._manager(name).load_manifest()
+            manifest = self._manager_locked(name).load_manifest()
             self._extra(manifest, name)
             return int(sum(
                 int(np.prod(meta["shape"])) * _np_dtype(meta["dtype"]).itemsize

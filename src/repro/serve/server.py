@@ -612,7 +612,12 @@ class GPServer:
         if worker is not None:
             worker.join(timeout)
             if not worker.is_alive():
-                self._worker = None
+                # _worker is _cv-guarded state: a concurrent close() must
+                # not see a half-cleared slot, and submit() restarts the
+                # worker it reads under the same lock
+                with self._cv:
+                    if self._worker is worker:
+                        self._worker = None
 
     def __enter__(self) -> "GPServer":
         return self

@@ -28,12 +28,12 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
-import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 
+from repro.analysis import lockdep
 from repro.analysis.pallas_audit import Problem, registry_entry
 from repro.tune import cache, search
 
@@ -54,8 +54,10 @@ _ENABLED_OVERRIDE: Optional[bool] = None
 
 # One lock guards the whole resolve-measure-store cycle, so two threads
 # racing the same cold key serialize and agree on one winner (the second
-# thread lands on the memo the first one filled).
-_LOCK = threading.RLock()
+# thread lands on the memo the first one filled). Routed through lockdep
+# (canonical name = its rank in concurrency.LOCK_HIERARCHY) so the serve
+# battery's runtime verifier sees autotune -> cache acquisitions.
+_LOCK = lockdep.named_lock("repro.tune.autotune._LOCK", kind="rlock")
 _MEMO: Dict[Tuple[str, str], Any] = {}  # (cache path, key) -> winner
 
 _TIMING_RUNS = 0

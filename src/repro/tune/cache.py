@@ -18,8 +18,9 @@ from __future__ import annotations
 import json
 import os
 import tempfile
-import threading
 from typing import Any, Dict, Optional
+
+from repro.analysis import lockdep
 
 __all__ = ["SCHEMA_VERSION", "cache_path", "load_entries", "lookup", "store"]
 
@@ -28,8 +29,12 @@ SCHEMA_VERSION = 1
 _ENV_PATH = "REPRO_TUNE_CACHE"
 
 # guards read-merge-write cycles within this process; cross-process safety
-# comes from the atomic replace (last writer wins per whole document)
-_LOCK = threading.RLock()
+# comes from the atomic replace (last writer wins per whole document).
+# Routed through lockdep so the runtime verifier sees the file lock; the
+# canonical name is its position in concurrency.LOCK_HIERARCHY, and the
+# read-merge-write I/O under it is declared in concurrency.BLOCKING_OK —
+# serializing that I/O is this lock's documented job.
+_LOCK = lockdep.named_lock("repro.tune.cache._LOCK", kind="rlock")
 
 
 def cache_path() -> str:

@@ -6,6 +6,27 @@ import os
 os.environ.pop("XLA_FLAGS", None)
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 # GP numerics tests compare against O(N^3) oracles: fp64 on CPU.
 jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(autouse=True)
+def _lockdep_serve_battery(request):
+    """Run the entire serve test battery under the lockdep runtime
+    verifier: every lock the serving tier creates during a test_serve*
+    test is instrumented, and any acquisition that inverts the declared
+    hierarchy (repro.analysis.concurrency.LOCK_HIERARCHY) or an observed
+    order fails the test — so each fault-injection and load test doubles
+    as a deadlock check. Violations raised inside worker threads may be
+    swallowed into Futures; the recorder keeps the evidence, asserted at
+    teardown."""
+    if not request.module.__name__.startswith("test_serve"):
+        yield
+        return
+    from repro.analysis import lockdep
+
+    with lockdep.watch() as rec:
+        yield
+    rec.assert_clean()

@@ -213,19 +213,31 @@ def test_import_time_dispatch_fixture_flags_exactly_anl001():
     assert "7" in findings[0].describe()
 
 
-def test_anl002_registry_access_outside_lock():
+def test_anl002_generalized_registry_access_outside_lock():
+    """The old hardcoded ANL002 is now guard inference: `put` writing
+    `_models` under `_registry_lock` makes the attribute tracked, and the
+    lock-free read in `bad` is flagged as ANL006 (`__init__` exempt)."""
     src = (
         "class S:\n"
         "    def __init__(self):\n"
         "        self._models = {}\n"          # exempt: __init__
+        "    def put(self, k, v):\n"
+        "        with self._registry_lock:\n"
+        "            self._models[k] = v\n"    # guarded write: tracked
         "    def bad(self, k):\n"
-        "        return self._models[k]\n"     # ANL002
+        "        return self._models[k]\n"     # ANL006
         "    def good(self, k):\n"
         "        with self._registry_lock:\n"
         "            return self._models[k]\n"
     )
     findings = lint.lint_source(src, "repro/serve/server.py")
-    assert [(f.code, f.line) for f in findings] == [("ANL002", 5)]
+    assert [(f.code, f.line) for f in findings] == [("ANL006", 8)]
+    assert "_registry_lock" in findings[0].message
+    # the legacy rule ID still suppresses its generalized form
+    suppressed = src.replace("return self._models[k]\n    def good",
+                             "return self._models[k]  # noqa: ANL002\n"
+                             "    def good")
+    assert lint.lint_source(suppressed, "repro/serve/server.py") == []
 
 
 def test_anl003_backward_registration_outside_dispatcher():

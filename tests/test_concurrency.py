@@ -1,0 +1,371 @@
+"""The concurrency analyzer and the lockdep runtime verifier: seeded
+AB/BA, unguarded-write, and blocking-under-lock fixtures each trigger
+exactly their rule; the real tree analyzes clean with every discovered
+lock ranked in the declared hierarchy; lockdep instruments repo-created
+locks under watch(), raises LockOrderViolation on declared-hierarchy and
+observed-order inversions (check-before-acquire: no hang), and stays
+transparent otherwise. The serve battery itself runs under lockdep via
+the autouse conftest fixture — these tests cover the machinery."""
+import pathlib
+import threading
+
+import pytest
+
+from repro.analysis import concurrency, lockdep
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "analysis"
+
+
+def _analyze_fixture(name):
+    src = (FIXTURES / f"{name}.py").read_text()
+    return concurrency.analyze_sources([(f"repro/seeded/{name}.py", src)])
+
+
+# ---------------------------------------------------------------------------
+# static pass: seeded violations
+# ---------------------------------------------------------------------------
+
+def test_lock_cycle_fixture_flags_exactly_anl005():
+    model = _analyze_fixture("lock_cycle")
+    codes = {f.code for f in model.findings}
+    assert codes == {"ANL005"}, model.findings
+    cyc = [f for f in model.findings if "cycle" in f.message]
+    assert len(cyc) == 1
+    # both edges named, with their source lines
+    assert "_LEDGER_LOCK" in cyc[0].message
+    assert "_JOURNAL_LOCK" in cyc[0].message
+    assert "lock_cycle.py:13" in cyc[0].message  # ledger -> journal site
+    assert "lock_cycle.py:19" in cyc[0].message  # the reverse edge
+
+
+def test_unguarded_write_fixture_flags_exactly_anl006():
+    model = _analyze_fixture("unguarded_write")
+    assert [(f.code, f.line) for f in model.findings] == [("ANL006", 19)]
+    f = model.findings[0]
+    assert "self._table" in f.message and "Registry._lock" in f.message
+
+
+def test_blocking_under_lock_fixture_flags_exactly_anl007():
+    model = _analyze_fixture("blocking_under_lock")
+    assert [f.code for f in model.findings] == ["ANL007"] * 3
+    whats = [f.message for f in model.findings]
+    assert any("open" in m for m in whats)
+    assert any("json.dump" in m for m in whats)
+    assert any("result" in m for m in whats)
+    for f in model.findings:
+        assert "_STATE_LOCK" in f.message
+
+
+def test_self_deadlock_on_non_reentrant_lock_is_anl005():
+    src = (
+        "import threading\n"
+        "_L = threading.Lock()\n"
+        "def twice():\n"
+        "    with _L:\n"
+        "        with _L:\n"
+        "            pass\n"
+    )
+    model = concurrency.analyze_sources([("repro/seeded/self.py", src)])
+    assert [f.code for f in model.findings] == ["ANL005"]
+    assert "self-deadlock" in model.findings[0].message
+    # the same nesting on an RLock is re-entrant: clean
+    rsrc = src.replace("threading.Lock()", "threading.RLock()")
+    rmodel = concurrency.analyze_sources([("repro/seeded/self.py", rsrc)])
+    assert rmodel.findings == []
+
+
+def test_declared_hierarchy_inversion_without_a_cycle_is_anl005():
+    """The declared order is the contract even before the reverse edge
+    ships: budget-under-registry alone is a finding."""
+    src = (
+        "class GPServer:\n"
+        "    def __init__(self):\n"
+        "        import threading\n"
+        "        self._registry_lock = threading.Lock()\n"
+        "        self._budget_lock = threading.Lock()\n"
+        "    def bad(self):\n"
+        "        with self._registry_lock:\n"
+        "            with self._budget_lock:\n"
+        "                pass\n"
+    )
+    model = concurrency.analyze_sources([("repro/seeded/inv.py", src)])
+    assert [f.code for f in model.findings] == ["ANL005"]
+    assert "declared" in model.findings[0].message
+
+
+def test_acquire_release_pairs_are_tracked_like_with_blocks():
+    src = (
+        "import threading\n"
+        "_A = threading.Lock()\n"
+        "_B = threading.Lock()\n"
+        "def ab():\n"
+        "    _A.acquire()\n"
+        "    _B.acquire()\n"
+        "    _B.release()\n"
+        "    _A.release()\n"
+        "def ba():\n"
+        "    with _B:\n"
+        "        _A.acquire()\n"
+        "        _A.release()\n"
+    )
+    model = concurrency.analyze_sources([("repro/seeded/ar.py", src)])
+    assert {f.code for f in model.findings} == {"ANL005"}
+    assert any("cycle" in f.message for f in model.findings)
+
+
+def test_locked_suffix_and_init_are_exempt_from_guard_inference():
+    src = (
+        "class Store:\n"
+        "    def __init__(self):\n"
+        "        import threading\n"
+        "        self._lock = threading.Lock()\n"
+        "        self._managers = {}\n"
+        "    def save(self, k, v):\n"
+        "        with self._lock:\n"
+        "            self._managers[k] = v\n"
+        "    def _manager_locked(self, k):\n"
+        "        return self._managers[k]\n"   # caller holds the lock
+    )
+    model = concurrency.analyze_sources([("repro/seeded/st.py", src)])
+    assert model.findings == []
+
+
+def test_condition_wait_on_held_cv_is_not_blocking():
+    src = (
+        "class S:\n"
+        "    def __init__(self):\n"
+        "        import threading\n"
+        "        self._cv = threading.Condition()\n"
+        "        self._queue = []\n"
+        "    def loop(self):\n"
+        "        with self._cv:\n"
+        "            while not self._queue:\n"
+        "                self._cv.wait()\n"     # the CV pattern: exempt
+        "            self._queue.pop()\n"
+    )
+    model = concurrency.analyze_sources([("repro/seeded/cv.py", src)])
+    assert model.findings == []
+
+
+def test_blocking_ok_locks_may_block():
+    """StateStore._lock's documented job is serializing store I/O."""
+    src = (
+        "import json\n"
+        "class StateStore:\n"
+        "    def __init__(self):\n"
+        "        import threading\n"
+        "        self._lock = threading.Lock()\n"
+        "    def save(self, path, doc):\n"
+        "        with self._lock:\n"
+        "            with open(path, 'w') as f:\n"
+        "                json.dump(doc, f)\n"
+    )
+    model = concurrency.analyze_sources([("repro/seeded/ok.py", src)])
+    assert model.findings == []
+
+
+def test_noqa_alias_anl002_suppresses_anl006():
+    src = (FIXTURES / "unguarded_write.py").read_text()
+    muted = src.replace("# ANL006: lock-free write races put()",
+                        "# noqa: ANL002")
+    model = concurrency.analyze_sources([("repro/seeded/uw.py", muted)])
+    assert model.findings == []
+
+
+# ---------------------------------------------------------------------------
+# static pass: the real tree
+# ---------------------------------------------------------------------------
+
+def test_src_tree_analyzes_clean_and_every_lock_is_ranked():
+    model = concurrency.analyze_paths()
+    assert model.findings == [], [f.describe() for f in model.findings]
+    # the serving tier's whole lock population is declared in the
+    # hierarchy — a new lock must take a rank before it ships
+    assert set(model.defs) == set(concurrency.LOCK_HIERARCHY)
+    # and every statically visible acquisition edge respects it
+    rank = {n: i for i, n in enumerate(concurrency.LOCK_HIERARCHY)}
+    for (a, b) in model.edges:
+        assert rank[a] < rank[b], (a, b)
+    # the documented serving chains are actually in the model
+    assert ("GPServer._budget_lock", "_Entry.lock") in model.edges
+    assert ("_Entry.lock", "GPServer._registry_lock") in model.edges
+
+
+# ---------------------------------------------------------------------------
+# lockdep: runtime verification
+# ---------------------------------------------------------------------------
+
+def test_watch_instruments_repo_locks_and_names_them():
+    with lockdep.watch() as rec:
+        class Holder:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+        h = Holder()
+        assert isinstance(h._lock, lockdep._Instrumented)
+        assert h._lock.name == "Holder._lock"
+        with h._lock:
+            pass
+    assert rec.acquisitions == 1
+    assert rec.violations == []
+    # after watch() the factories are restored
+    assert not isinstance(threading.Lock(), lockdep._Instrumented)
+
+
+def test_watch_leaves_non_repo_locks_raw():
+    """Locks created inside stdlib frames (Future conditions, Thread
+    events) must not be wrapped — only repo-created locks count."""
+    import concurrent.futures
+
+    with lockdep.watch():
+        fut = concurrent.futures.Future()
+        assert not isinstance(fut._condition, lockdep._Instrumented)
+
+
+def test_declared_hierarchy_inversion_raises_and_is_recorded():
+    a = lockdep.named_lock("GPServer._budget_lock")
+    b = lockdep.named_lock("GPServer._registry_lock")
+    with lockdep.watch() as rec:
+        with a:
+            with b:
+                pass  # declared order: fine
+        with pytest.raises(lockdep.LockOrderViolation, match="declared"):
+            with b:
+                with a:
+                    pass
+    assert len(rec.violations) == 1
+    assert rec.violations[0].lock == "GPServer._budget_lock"
+    with pytest.raises(AssertionError, match="lock-order violation"):
+        rec.assert_clean()
+
+
+def test_observed_order_abba_raises_for_unranked_locks():
+    """Locks outside the declared hierarchy still get the observed-order
+    check: the first AB teaches the recorder, the BA attempt raises."""
+    a = lockdep.named_lock("test.A")
+    b = lockdep.named_lock("test.B")
+    with lockdep.watch() as rec:
+        with a:
+            with b:
+                pass
+        with pytest.raises(lockdep.LockOrderViolation, match="opposite"):
+            with b:
+                with a:
+                    pass
+    assert ("test.A", "test.B") in rec.edges
+
+
+def test_self_deadlock_raises_instead_of_hanging():
+    lk = lockdep.named_lock("test.self")
+    with lockdep.watch():
+        with lk:
+            with pytest.raises(lockdep.LockOrderViolation,
+                               match="self-deadlock"):
+                lk.acquire()
+    # the rlock variant is re-entrant: no violation
+    rl = lockdep.named_lock("test.rself", kind="rlock")
+    with lockdep.watch() as rec:
+        with rl:
+            with rl:
+                pass
+    assert rec.violations == []
+
+
+def test_condition_wait_releases_the_held_stack():
+    """During cv.wait() the lock is NOT held: acquiring another lock from
+    the waking path must not see the cv as held."""
+    cv = lockdep.named_lock("test.cv", kind="condition")
+    other = lockdep.named_lock("test.other")
+    done = []
+
+    def waker():
+        with cv:
+            cv.notify_all()
+            done.append(True)
+
+    with lockdep.watch() as rec:
+        with cv:
+            t = threading.Thread(target=waker)
+            t.start()
+            cv.wait(timeout=5.0)
+        t.join(5.0)
+        with other:
+            pass
+    assert done == [True]
+    assert rec.violations == []
+
+
+def test_watch_is_transparent_when_inactive_and_rejects_nesting():
+    lk = lockdep.named_lock("test.plain")
+    with lk:  # no watch: plain delegation
+        assert lk.locked()
+    assert not lk.locked()
+    with lockdep.watch():
+        with pytest.raises(RuntimeError, match="already active"):
+            with lockdep.watch():
+                pass
+
+
+def test_serving_locks_run_clean_under_lockdep_end_to_end():
+    """A miniature of what the conftest fixture does for the whole serve
+    battery: build a real GPServer under watch(), exercise register /
+    predict / close, and require zero violations."""
+    import jax.numpy as jnp
+
+    from repro.gp import SparseGPRegression, get
+    from repro.serve import GPServer
+
+    X = jnp.linspace(-2.0, 2.0, 64)[:, None]
+    Y = jnp.sin(X)
+    gp = SparseGPRegression(kernel=get("rbf")(1), M=8).fit(X, Y, steps=3)
+    with lockdep.watch() as rec:
+        server = GPServer()
+        server.register("m", gp)
+        mean, var = server.predict("m", X[:8])
+        assert mean.shape == (8, 1)
+        server.close()
+    assert rec.violations == [], [str(v) for v in rec.violations]
+    assert rec.acquisitions > 0
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_concurrency_clean_on_src(capsys):
+    from repro.analysis.__main__ import main
+
+    assert main(["--concurrency"]) == 0
+    out = capsys.readouterr().out
+    assert "ANL005-ANL007" in out and "0 finding(s)" in out
+
+
+@pytest.mark.parametrize("name,rule", [("lock_cycle", "ANL005"),
+                                       ("unguarded_write", "ANL006"),
+                                       ("blocking_under_lock", "ANL007")])
+def test_cli_concurrency_fails_on_each_seeded_fixture(capsys, name, rule):
+    from repro.analysis.__main__ import main
+
+    assert main(["--concurrency", str(FIXTURES / f"{name}.py")]) == 1
+    out = capsys.readouterr().out
+    assert rule in out and f"{name}.py" in out
+
+
+def test_cli_json_format_is_machine_readable(capsys):
+    import json
+
+    from repro.analysis.__main__ import main
+
+    rc = main(["--concurrency", "--format", "json",
+               str(FIXTURES / "lock_cycle.py")])
+    assert rc == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["ok"] is False and doc["failures"] == 1
+    conc = doc["passes"]["concurrency"]
+    assert conc["hierarchy"] == list(concurrency.LOCK_HIERARCHY)
+    assert any(f["code"] == "ANL005" for f in conc["findings"])
+    # lint emits json too
+    rc = main(["--lint", "--format", "json"])
+    assert rc == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["passes"]["lint"]["findings"] == []
